@@ -1,0 +1,38 @@
+"""Paper Fig 5 + Fig 9: accuracy & latency vs block size.
+
+Accuracy: small convnet, block-punched pruning at 8x, short finetune.
+Latency: the offline TPU latency model for the same layer shapes.
+Reproduces the paper's qualitative result: unstructured (1x1) = best acc /
+worst latency; whole-matrix = worst acc / best latency; mid blocks win."""
+import jax
+
+from benchmarks.common import train_convnet, eval_convnet
+from repro.core import regularity as R
+from repro.core.latency_model import matmul_latency, conv_as_gemm
+from repro.models import convnet as C
+
+BLOCKS = [(1, 1), (4, 4), (8, 8), (16, 16), (32, 32)]
+
+
+def bench(fast=True):
+    rows = []
+    steps = 150 if fast else 400
+    dense = train_convnet(steps=steps)
+    acc_dense = eval_convnet(dense)
+    rows.append(("fig5_blocksize,dense", 0.0, f"acc={acc_dense:.3f}"))
+    for b in BLOCKS:
+        masks = {}
+        for (name, out, kh, kw, stride, dw) in C.VGG_TINY:
+            w = dense[name]["w"]
+            if dw or kh != 3 or w.shape[0] < b[0] or w.shape[1] < b[1]:
+                continue
+            masks[name] = R.block_punched_mask(w, b, rate=0.75)
+        p = train_convnet(steps=steps // 2, params=dense, masks=masks)
+        acc = eval_convnet(p, masks=masks)
+        M, K, N = conv_as_gemm(14, 128, 128, 3, 3)
+        lat = matmul_latency(M, K, N, scheme="block",
+                             block=(max(b[0], 1), max(b[1], 1)),
+                             compression=8.0)
+        rows.append((f"fig5_blocksize,{b[0]}x{b[1]}", lat * 1e6,
+                     f"acc={acc:.3f}"))
+    return rows

@@ -1,0 +1,92 @@
+"""Paper Table 2 (YOLOv4 comparison, reproduced on the tiny conv net with a
+5x5 and 1x1 layer): per-scheme compression / accuracy / modeled FPS, plus
+the HYBRID mapping (pattern on 3x3 + block elsewhere) that wins."""
+import jax
+
+from benchmarks.common import train_convnet, eval_convnet
+from repro.core import regularity as R
+from repro.core.latency_model import matmul_latency, conv_as_gemm
+from repro.models import convnet as C
+
+ARCH = C.MOBILE_TINY   # has 3x3, depthwise, 1x1 and 5x5 layers
+
+
+def _model_latency(masked_layers):
+    """Modeled end-to-end latency: sum per-layer GEMM latencies."""
+    t, feat = 0.0, 16
+    cin = 3
+    for (name, out, kh, kw, stride, dw) in ARCH:
+        feat = feat // stride
+        M, K, N = conv_as_gemm(feat, cin if not dw else 1, out, kh, kw)
+        scheme, comp = masked_layers.get(name, ("none", 1.0))
+        # MXU-sane block for the latency estimate (tiny conv layers
+        # can't fill 128x128 tiles; util scales with the block)
+        t += matmul_latency(M, K, N, scheme=scheme,
+                            block=(min(128, K), min(128, N)),
+                            compression=comp)
+        if not dw:
+            cin = out
+    return t
+
+
+def _apply(dense, plan, steps):
+    masks = {}
+    comp_num, comp_den = 0.0, 0.0
+    for (name, out, kh, kw, stride, dw) in ARCH:
+        w = dense[name]["w"]
+        comp_den += w.size
+        scheme = plan.get(name)
+        if scheme is None:
+            comp_num += w.size
+            continue
+        if scheme == "pattern":
+            masks[name] = R.pattern_mask(w, connectivity_rate=0.5)
+        elif scheme == "unstructured":
+            masks[name] = R.unstructured_mask(w, rate=0.8)
+        elif scheme == "structured":
+            masks[name] = R.structured_mask(w, rate=0.8, axis="row")
+        elif scheme == "block":
+            bp = (min(8, w.shape[0]), min(8, w.shape[1]))
+            if w.ndim == 4:
+                masks[name] = R.block_punched_mask(w, bp, rate=0.8)
+            else:
+                masks[name] = R.block_mask(w, bp, rate=0.8)
+        comp_num += float(masks[name].sum()) if name in masks else w.size
+    p = train_convnet(arch=ARCH, steps=steps, params=dense, masks=masks)
+    acc = eval_convnet(p, arch=ARCH, masks=masks)
+    return acc, comp_den / max(comp_num, 1.0)
+
+
+def bench(fast=True):
+    steps = 100 if fast else 250
+    rows = []
+    dense = train_convnet(arch=ARCH, steps=2 * steps, seed=3)
+    acc_d = eval_convnet(dense, arch=ARCH)
+    lat = _model_latency({})
+    rows.append(("table2,not_prune", lat * 1e6,
+                 f"acc={acc_d:.3f};compression=1.0"))
+
+    threes = [n for (n, o, kh, kw, s, dw) in ARCH if kh == 3 and not dw]
+    others = [n for (n, o, kh, kw, s, dw) in ARCH
+              if (kh != 3 and not dw)]
+    plans = {
+        "structured": ({n: "structured" for n in threes + others},
+                       {n: ("structured_row", 5.0) for n in threes + others}),
+        "unstructured": ({n: "unstructured" for n in threes + others},
+                         {n: ("unstructured", 5.0) for n in threes + others}),
+        "pattern_3x3_only": ({n: "pattern" for n in threes},
+                             {n: ("pattern", 2.25) for n in threes}),
+        "block_all": ({n: "block" for n in threes + others},
+                      {n: ("block", 5.0) for n in threes + others}),
+        "hybrid": ({**{n: "pattern" for n in threes},
+                    **{n: "block" for n in others}},
+                   {**{n: ("pattern", 2.25) for n in threes},
+                    **{n: ("block", 5.0) for n in others}}),
+    }
+    for label, (plan, latplan) in plans.items():
+        acc, comp = _apply(dense, plan, steps)
+        lat = _model_latency(latplan)
+        rows.append((f"table2,{label}", lat * 1e6,
+                     f"acc={acc:.3f};compression={comp:.2f};"
+                     f"fps={1.0/lat:.0f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig 9/10: per-layer latency vs block size / feature size /
+compression — the offline latency-model sweep (the artifact §5.2.1 builds;
+512-setting table in <1s analytically vs ~30min measured on a phone)."""
+import time
+
+from repro.core.latency_model import (build_table, matmul_latency,
+                                      conv_as_gemm)
+
+FEATS = [(56, 64), (28, 128), (14, 256), (7, 512)]   # iso-MAC settings
+BLOCKS = [(4, 4), (16, 32), (64, 128), (128, 128), (128, 256)]
+
+
+def bench(fast=True):
+    rows = []
+    t0 = time.time()
+    table = build_table()
+    rows.append(("fig9_10,table_build", (time.time() - t0) * 1e6,
+                 f"settings={len(table)}"))
+    # Fig 9a: 1x1 conv latency vs block size across feature sizes
+    for feat, ch in FEATS:
+        M, K, N = conv_as_gemm(feat, ch, ch, 1, 1)
+        for b in BLOCKS:
+            if K % b[0] or N % b[1]:
+                continue
+            t = matmul_latency(M, K, N, scheme="block", block=b,
+                               compression=8)
+            rows.append((f"fig9,1x1conv,f{feat}c{ch},b{b[0]}x{b[1]}",
+                         t * 1e6, "compression=8"))
+    # Fig 10b: pattern vs block for a 3x3 CONV across compressions
+    M, K, N = conv_as_gemm(28, 128, 128, 3, 3)
+    for comp in (4, 8, 12, 16):
+        tp = matmul_latency(M, K, N, scheme="pattern", compression=2.25)
+        tb8 = matmul_latency(M, K, N, scheme="block", block=(8, 16),
+                             compression=comp)
+        tb16 = matmul_latency(M, K, N, scheme="block", block=(128, 128),
+                              compression=comp)
+        rows.append((f"fig10,3x3conv,comp{comp}x", tb16 * 1e6,
+                     f"pattern_us={tp*1e6:.2f};block8x16_us={tb8*1e6:.2f};"
+                     f"block128_us={tb16*1e6:.2f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig 7 / Remark 1: pattern vs block-punched accuracy on EASY vs
+HARD tasks (same compression on 3x3 layers only)."""
+import jax
+
+from benchmarks.common import train_convnet, eval_convnet
+from repro.core import regularity as R
+from repro.models import convnet as C
+
+
+def _masks(params, scheme):
+    masks = {}
+    for (name, out, kh, kw, stride, dw) in C.VGG_TINY:
+        if dw or kh != 3:
+            continue
+        w = params[name]["w"]
+        if scheme == "pattern":
+            masks[name] = R.pattern_mask(w, connectivity_rate=0.5)
+        else:
+            if w.shape[0] % 4 or w.shape[1] % 4:
+                continue
+            masks[name] = R.block_punched_mask(w, (4, 4), rate=0.78)
+    return masks
+
+
+def bench(fast=True):
+    steps = 150 if fast else 400
+    rows = []
+    for hard in (False, True):
+        dense = train_convnet(steps=steps, hard=hard, seed=1)
+        acc_d = eval_convnet(dense, hard=hard)
+        rows.append((f"fig7,dense,{'hard' if hard else 'easy'}", 0.0,
+                     f"acc={acc_d:.3f}"))
+        for scheme in ("pattern", "block"):
+            masks = _masks(dense, scheme)
+            p = train_convnet(steps=steps // 2, params=dense, masks=masks,
+                              hard=hard)
+            acc = eval_convnet(p, masks=masks, hard=hard)
+            rows.append((f"fig7,{scheme},{'hard' if hard else 'easy'}",
+                         0.0, f"acc={acc:.3f};drop={acc_d - acc:.3f}"))
+    return rows

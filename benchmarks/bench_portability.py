@@ -1,0 +1,20 @@
+"""Paper Table 7: portability — the same rule-based mapping re-derived for
+three TPU generations (v4 / v5e / v5p instead of S10/S20/S21).  The mapping
+method is hardware-agnostic; only the latency-model constants change."""
+from repro import configs
+from repro.core import mapper_rule as MR
+from repro.core.latency_model import V4, V5E, V5P
+
+
+def bench(fast=True):
+    rows = []
+    cfg = configs.get("yi-9b")
+    layers = MR.lm_layers(cfg, tokens=32768)
+    for target in (V4, V5E, V5P):
+        spec, rep = MR.map_rules(layers, dataset_hard=True,
+                                 compression=8.0, target=target)
+        blocks = {r["block"] for r in rep if r["scheme"] == "block"}
+        rows.append((f"table7,{target.name}",
+                     MR.total_latency(rep) * 1e6,
+                     f"blocks={sorted(blocks)};layers={len(rep)}"))
+    return rows

@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: tiny conv-net training harness for the
+paper-faithful CONV experiments (CIFAR-scale synthetic data)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import convnet as C
+from repro.train.trainer import apply_masks
+
+
+def train_convnet(arch=C.VGG_TINY, steps=120, batch=64, lr=5e-2, hard=False,
+                  masks=None, params=None, seed=0, penalty_fn=None):
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = C.convnet_init(key, arch)
+
+    def loss_fn(p, b):
+        l = C.classify_loss(p, b, arch, masks)
+        if penalty_fn is not None:
+            l = l + penalty_fn(p)
+        return l
+
+    @jax.jit
+    def step(p, b):
+        g = jax.grad(loss_fn)(p, b)
+        return jax.tree_util.tree_map(lambda w, gg: w - lr * gg, p, g)
+
+    for i in range(steps):
+        kb = jax.random.fold_in(key, i + 1)
+        imgs, labels = C.synthetic_images(kb, batch, hard=hard)
+        params = step(params, (imgs, labels))
+    return params
+
+
+def eval_convnet(params, arch=C.VGG_TINY, hard=False, masks=None, n=512,
+                 seed=777):
+    imgs, labels = C.synthetic_images(jax.random.PRNGKey(seed), n, hard=hard)
+    return float(C.accuracy(params, (imgs, labels), arch, masks))
+
+
+def timer_us(fn, *args, iters=5):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6

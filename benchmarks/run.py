@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses longer training
+budgets; default is the fast CI-sized pass."""
+import argparse
+import importlib
+import sys
+import time
+
+BENCHES = [
+    "bench_latency_model",    # Fig 9/10 (latency model sweeps)
+    "bench_kernel",           # §4.3 BCS kernel skipping + metadata
+    "bench_macs",             # Table 5
+    "bench_portability",      # Table 7
+    "bench_blocksize",        # Fig 5 + Fig 9 (acc/latency vs block)
+    "bench_pattern_vs_block", # Fig 7 / Remark 1
+    "bench_algorithms",       # Table 1
+    "bench_hybrid",           # Table 2
+    "bench_mapping",          # Table 4
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = [b for b in BENCHES if args.only is None or args.only in b]
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.bench(fast=not args.full)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, str(e)))
+            print(f"{name},ERROR,{str(e)[:120]!r}", flush=True)
+            continue
+        for (n, us, derived) in rows:
+            print(f"{n},{us:.2f},{derived}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

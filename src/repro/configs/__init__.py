@@ -1,0 +1,60 @@
+"""Config registry + ``input_specs``: ShapeDtypeStruct stand-ins for every
+model input of every (arch × shape) cell — weak-type-correct, shardable, no
+device allocation (the dry-run pattern)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ARCH_IDS, ALIASES, get
+
+__all__ = ["ArchConfig", "SHAPES", "ARCH_IDS", "ALIASES", "get",
+           "input_specs", "cell_is_supported"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cell_is_supported(cfg: ArchConfig, shape_id: str) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (DESIGN.md §3)."""
+    if shape_id == "long_500k" and not cfg.supports_long:
+        return False, ("SKIP: pure full-attention arch — 500k dense-KV decode "
+                       "is quadratic with no SWA/SSM escape (DESIGN.md)")
+    return True, ""
+
+
+@functools.lru_cache(maxsize=None)
+def _abstract_cache_spec(cfg: ArchConfig, batch: int, seq: int):
+    from repro.models import transformer as T
+
+    def build():
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        return T.init_cache(params, cfg, batch, seq)
+    return jax.eval_shape(build)
+
+
+def input_specs(cfg: ArchConfig, shape_id: str, smoke: bool = False) -> dict:
+    """Returns {name: ShapeDtypeStruct} for the given step kind.
+
+    train:   tokens/labels (B, S) int32 (+ frontend embeds for encdec/vlm)
+    prefill: tokens (B, S) int32 (+ frontend)
+    decode:  token/pos (B, 1) int32 + the full KV/SSM cache pytree
+    """
+    sh = SHAPES[shape_id]
+    B, S, kind = sh["batch"], sh["seq"], sh["kind"]
+    specs = {}
+    if kind in ("train", "prefill"):
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        if kind == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token over a seq_len cache
+        specs["token"] = _sds((B, 1), jnp.int32)
+        specs["pos"] = _sds((B, 1), jnp.int32)
+        specs["cache"] = _abstract_cache_spec(cfg, B, S)
+    if cfg.family in ("encdec", "vlm") and kind != "decode":
+        specs["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                 jnp.bfloat16)
+    return specs

@@ -1,0 +1,100 @@
+"""Architecture config schema + registry.
+
+One module per assigned architecture lives next to this file; each exposes
+``CONFIG`` (the exact published shape) and ``SMOKE`` (a reduced same-family
+config for CPU tests).  ``repro.configs.get(name)`` resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    # SSM
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    # structure
+    sliding_window: int = 0
+    rope_theta: float = 10000.0
+    cross_attn_interval: int = 0   # vlm: one cross-attn layer per this many
+    n_enc_layers: int = 0          # encdec encoder depth
+    n_frontend_tokens: int = 1024  # audio/vlm stub embedding count
+    # distribution / runtime
+    attn_shard: str = "heads"      # "heads" | "seq" (when n_heads % tp != 0)
+    train_shard_mode: str = "fsdp"  # "fsdp" (ZeRO-3: weights gathered
+    #   per layer, tokens sharded over ALL axes) | "tp" (Megatron).  At
+    #   train_4k token counts, activations >> weights, so FSDP's weight
+    #   all-gathers beat TP's activation collectives ~10x (EXPERIMENTS.md
+    #   §Perf iter 2).  Inference (prefill/decode) always lowers with TP.
+    optimizer: str = "adamw"       # "adamw" | "adafactor" (>=70B)
+    remat: str = "full"            # "none" | "full"
+    supports_long: bool = False    # sub-quadratic 500k decode legal
+    kv_chunk: int = 1024   # flash-chunk size.  §Perf iter 3 measured
+    #   single-chunk (4096) at 1.4x MORE collective traffic than chunked —
+    #   the full (B,H,Sq,Sk) score tensor gets resharded in CP mode —
+    #   so chunked stays the default (refuted hypothesis, kept on record)
+    moe_group: int = 1024
+    unroll_layers: bool = False    # python-loop layer stacks (cost probes:
+    #   lax.scan bodies are counted ONCE by XLA cost analysis, so the
+    #   dry-run extrapolates true per-layer cost from unrolled L=1/L=2)
+
+    @property
+    def hd(self):
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+ARCH_IDS = [
+    "seamless_m4t_large_v2", "yi_9b", "granite_8b", "minitron_8b",
+    "phi3_medium_14b", "mamba2_1p3b", "mixtral_8x7b", "kimi_k2_1t_a32b",
+    "hymba_1p5b", "llama_3p2_vision_90b",
+]
+
+# canonical external ids (as given in the assignment) -> module names
+ALIASES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "yi-9b": "yi_9b",
+    "granite-8b": "granite_8b",
+    "minitron-8b": "minitron_8b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "hymba-1.5b": "hymba_1p5b",
+    "llama-3.2-vision-90b": "llama_3p2_vision_90b",
+}
+
+
+def get(name: str, smoke: bool = False) -> ArchConfig:
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+SHAPES = {
+    # shape id: (seq_len, global_batch, step kind)
+    "train_4k":    dict(seq=4096,   batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768,  batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32768,  batch=128, kind="decode"),
+    "long_500k":   dict(seq=524288, batch=1,   kind="decode"),
+}

@@ -1,0 +1,19 @@
+"""Kimi K2 1T-A32B — trillion-param MoE, 384 experts top-8 (paper-table)
+[arXiv:2501.kimi2; unverified].  d_ff=2048 per expert (fine-grained MoE).
+FSDP + Adafactor (Adam fp32 state for 1T params cannot fit 512 v5e chips).
+Experts shard 384/16 = 24 per model shard (EP)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab=163840, head_dim=112,
+    n_experts=384, top_k=8,
+    rope_theta=5e6, optimizer="adafactor", moe_group=256,  # == per-shard seq slice (4096/16):
+    # groups never span model shards, so the (B,S)->(G,Sg) reshape is
+    # collective-free (EXPERIMENTS.md §Perf kimi iter 3)
+)
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=64, vocab=256, head_dim=16, n_experts=8,
+                       top_k=2, remat="none", moe_group=64)

@@ -1,0 +1,149 @@
+"""Blocked Compressed Storage (BCS, paper §4.3 Fig 4) — TPU adaptation.
+
+Faithful pieces: CSR-of-blocks with hierarchical column-index compression
+(identical per-row block-column patterns are stored once; the *occurrence*
+array maps rows to patterns) and row reordering for load balance.
+
+TPU adaptation (DESIGN.md §2): the unit the executor can skip is a whole
+(bk×bn) weight block (the MXU-tile analogue of PatDNN's generated code
+skipping pruned weights).  Fine-grained intra-block row/col sparsity from
+block-based pruning rides along inside surviving blocks (accuracy win);
+fully-zero blocks are skipped by the Pallas kernel (compute/HBM win).  The
+kernel consumes the *uniform padded* layout from ``pad_to_uniform`` — equal
+trip counts per grid row = the thread-load-balance analogue."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass
+class BCS:
+    shape: tuple            # dense (K, N)
+    block: tuple            # (bk, bn)
+    values: np.ndarray      # (nnzb, bk, bn) surviving blocks, row-major
+    col_idx: np.ndarray     # (nnzb,) block-column index of each block
+    row_ptr: np.ndarray     # (Kb+1,) CSR row pointers over block rows
+    # hierarchical column compression (Fig 4): unique column patterns +
+    # occurrence mapping row -> pattern id
+    patterns: list          # list of np arrays (col indices per unique row)
+    occurrence: np.ndarray  # (Kb,) pattern id per block row
+
+    @property
+    def nnzb(self):
+        return len(self.col_idx)
+
+    @property
+    def density(self):
+        Kb = self.shape[0] // self.block[0]
+        Nb = self.shape[1] // self.block[1]
+        return self.nnzb / (Kb * Nb)
+
+    def index_bytes(self) -> int:
+        """Metadata bytes under hierarchical compression vs plain CSR."""
+        pat = sum(len(p) for p in self.patterns)
+        return 4 * (pat + len(self.occurrence) + len(self.row_ptr))
+
+    def csr_index_bytes(self) -> int:
+        return 4 * (len(self.col_idx) + len(self.row_ptr))
+
+
+def from_dense(w, mask, block) -> BCS:
+    """Pack the masked weight into BCS.  A block is stored iff any weight in
+    it survives; stored blocks keep their interior zeros (fine-grained
+    sparsity inside the MXU tile)."""
+    w = np.asarray(w * mask.astype(w.dtype))
+    K, N = w.shape
+    bk, bn = block
+    assert K % bk == 0 and N % bn == 0
+    Kb, Nb = K // bk, N // bn
+    mblk = np.asarray(mask).reshape(Kb, bk, Nb, bn).transpose(0, 2, 1, 3)
+    alive = mblk.reshape(Kb, Nb, -1).any(axis=-1)            # (Kb, Nb)
+    wblk = w.reshape(Kb, bk, Nb, bn).transpose(0, 2, 1, 3)
+
+    values, col_idx, row_ptr = [], [], [0]
+    patterns, pat_lookup, occurrence = [], {}, []
+    for i in range(Kb):
+        cols = np.nonzero(alive[i])[0]
+        for j in cols:
+            values.append(wblk[i, j])
+            col_idx.append(j)
+        row_ptr.append(len(col_idx))
+        key = tuple(cols.tolist())
+        if key not in pat_lookup:
+            pat_lookup[key] = len(patterns)
+            patterns.append(cols)
+        occurrence.append(pat_lookup[key])
+    values = np.stack(values) if values else np.zeros((0, bk, bn), w.dtype)
+    return BCS(shape=(K, N), block=block, values=values,
+               col_idx=np.asarray(col_idx, np.int32),
+               row_ptr=np.asarray(row_ptr, np.int32),
+               patterns=patterns,
+               occurrence=np.asarray(occurrence, np.int32))
+
+
+def to_dense(bcs: BCS) -> np.ndarray:
+    K, N = bcs.shape
+    bk, bn = bcs.block
+    out = np.zeros((K // bk, N // bn, bk, bn), bcs.values.dtype)
+    for i in range(K // bk):
+        for k in range(bcs.row_ptr[i], bcs.row_ptr[i + 1]):
+            out[i, bcs.col_idx[k]] = bcs.values[k]
+    return out.transpose(0, 2, 1, 3).reshape(K, N)
+
+
+def pad_to_uniform(bcs: BCS):
+    """Uniform per-row layout for the Pallas kernel: every block row gets
+    ``Lmax`` slots (pad with zero blocks pointing at column 0) — the static
+    Pallas grid needs equal trip counts; padding blocks multiply by zero.
+
+    Returns (values (Kb, Lmax, bk, bn), col_idx (Kb, Lmax) int32, nnz (Kb,)).
+    """
+    K, N = bcs.shape
+    bk, bn = bcs.block
+    Kb = K // bk
+    nnz = np.diff(bcs.row_ptr)
+    Lmax = max(1, int(nnz.max()) if len(nnz) else 1)
+    vals = np.zeros((Kb, Lmax, bk, bn), bcs.values.dtype)
+    cols = np.zeros((Kb, Lmax), np.int32)
+    for i in range(Kb):
+        s, e = bcs.row_ptr[i], bcs.row_ptr[i + 1]
+        vals[i, :e - s] = bcs.values[s:e]
+        cols[i, :e - s] = bcs.col_idx[s:e]
+    return jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(nnz, jnp.int32)
+
+
+def pad_to_uniform_csc(bcs: BCS):
+    """Column-major uniform layout — what the Pallas kernel consumes.
+
+    For each block COLUMN j (output tile), the list of surviving K-block
+    indices, zero-padded to the max column degree ``Lmax`` (load-balanced
+    static grid).  Returns (values (Nb, Lmax, bk, bn), k_idx (Nb, Lmax)
+    int32, nnz (Nb,)).  Padding slots point at k-block 0 with zero values —
+    they contribute nothing."""
+    K, N = bcs.shape
+    bk, bn = bcs.block
+    Kb, Nb = K // bk, N // bn
+    cols = [[] for _ in range(Nb)]
+    for i in range(Kb):
+        for t in range(bcs.row_ptr[i], bcs.row_ptr[i + 1]):
+            cols[bcs.col_idx[t]].append((i, t))
+    nnz = np.asarray([len(c) for c in cols], np.int32)
+    Lmax = max(1, int(nnz.max()) if len(nnz) else 1)
+    vals = np.zeros((Nb, Lmax, bk, bn), bcs.values.dtype)
+    kidx = np.zeros((Nb, Lmax), np.int32)
+    for j in range(Nb):
+        for l, (i, t) in enumerate(cols[j]):
+            vals[j, l] = bcs.values[t]
+            kidx[j, l] = i
+    return jnp.asarray(vals), jnp.asarray(kidx), jnp.asarray(nnz)
+
+
+def load_imbalance(bcs: BCS) -> float:
+    """max/mean surviving blocks per row — what row-binning equalizes."""
+    nnz = np.diff(bcs.row_ptr).astype(np.float64)
+    if nnz.mean() == 0:
+        return 1.0
+    return float(nnz.max() / max(nnz.mean(), 1e-9))

@@ -1,0 +1,161 @@
+"""Offline latency model (paper §5.2.1), TPU-analytical edition.
+
+The paper measures a lookup table of layer latencies on the target phone
+(512 settings, ~30 min).  Without TPU hardware in the loop, we build the
+same *interface* — latency(layer setting) -> seconds — from a three-term
+roofline parameterized by the TPU v5e datasheet, with scheme/block-size
+dependent efficiency factors that encode the compiler/kernel behavior:
+
+  t = max(flops_eff / (peak * util(scheme, block)),
+          bytes(scheme, block) / hbm_bw) + grid_steps * step_overhead
+
+  * util: MXU tile utilization — blocks smaller than the 128x128 MXU tile
+    waste systolic lanes (the SIMD-width analogue of the paper's mobile
+    model); unstructured sparsity cannot use the MXU at all (gather bound).
+  * bytes: BCS values + hierarchical index metadata + activations.
+  * step_overhead: per grid-step pipeline bubble — more/smaller blocks =
+    more steps (the paper's branch-overhead analogue).
+
+`build_table` materializes the lookup-table form (the artifact the
+rule-based mapper consumes); `calibrate` rescales constants against
+compiled-HLO cost analysis from the dry-run."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class TPUTarget:
+    name: str = "v5e"
+    peak_flops: float = 197e12        # bf16
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9              # per link
+    mxu: int = 128
+    step_overhead: float = 1.5e-7     # per pallas grid step (pipeline bubble)
+    gather_bw_frac: float = 0.08      # unstructured: effective HBM fraction
+
+
+V4 = TPUTarget("v4", 275e12, 1228e9, 45e9)
+V5E = TPUTarget()
+V5P = TPUTarget("v5p", 459e12, 2765e9, 90e9)
+
+
+def _util(scheme: str, block, mxu=128) -> float:
+    if scheme in ("structured_row", "structured_col", "none"):
+        return 1.0
+    if scheme == "unstructured":
+        return 0.0                     # handled as gather-bound
+    if scheme in ("block", "block_row", "block_col", "block_punched"):
+        bk, bn = block
+        return min(bk, mxu) / mxu * min(bn, mxu) / mxu if bk < mxu or bn < mxu \
+            else 1.0
+    if scheme == "pattern":
+        # 4-of-9 pattern compute maps to TPU as dense 3x3 with masked taps:
+        # compute not skippable on MXU, only HBM traffic shrinks.
+        return 1.0
+    raise ValueError(scheme)
+
+
+def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
+                   compression=1.0, target: TPUTarget = V5E,
+                   dtype_bytes=2) -> float:
+    """One FC/CONV-as-GEMM layer: y(M,N) = x(M,K) @ w(K,N) with the given
+    pruning scheme at `compression` (param reduction factor)."""
+    density = 1.0 / max(compression, 1.0)
+    dense_flops = 2.0 * M * K * N
+    x_b = M * K * dtype_bytes
+    y_b = M * N * dtype_bytes
+    w_dense_b = K * N * dtype_bytes
+
+    if scheme == "none":
+        t_c = dense_flops / target.peak_flops
+        t_m = (x_b + y_b + w_dense_b) / target.hbm_bw
+        steps = max(1, (M // target.mxu) * (N // target.mxu))
+        return max(t_c, t_m) + steps * target.step_overhead
+
+    if scheme == "unstructured":
+        # CSR gather: no MXU, index+value traffic at degraded bandwidth
+        w_b = density * K * N * (dtype_bytes + 4)
+        t_m = (x_b + y_b + w_b) / (target.hbm_bw * target.gather_bw_frac)
+        t_c = density * dense_flops / (target.peak_flops * 0.02)  # VPU only
+        return max(t_c, t_m)
+
+    if scheme in ("structured_row", "structured_col"):
+        # dense GEMM with a shrunk dimension
+        if scheme == "structured_row":
+            N2, K2 = N * density, K
+        else:
+            N2, K2 = N, K * density
+        return matmul_latency(M, int(max(K2, 1)), int(max(N2, 1)),
+                              scheme="none", target=target,
+                              dtype_bytes=dtype_bytes)
+
+    if scheme == "pattern":
+        # HBM shrinks (4/9 weights + per-kernel pattern ids); compute dense
+        w_b = density * w_dense_b + (K * N / 9) * 1
+        t_c = dense_flops / target.peak_flops
+        t_m = (x_b + y_b + w_b) / target.hbm_bw
+        return max(t_c, t_m) + max(1, (M // target.mxu) * (N // target.mxu)) \
+            * target.step_overhead
+
+    # block / block_punched: skip zero blocks, pay utilization + per-step
+    # overhead for sub-MXU tiles
+    bk, bn = block
+    util = _util(scheme, block, target.mxu)
+    n_blocks_alive = density * (K // bk) * (N // bn)
+    eff_flops = density * dense_flops
+    t_c = eff_flops / (target.peak_flops * util)
+    idx_b = 4 * n_blocks_alive + 4 * (K // bk)
+    w_b = density * w_dense_b + idx_b
+    t_m = (x_b + y_b + w_b) / target.hbm_bw
+    # grid steps at the autotuned M-tile (512): each M-tile revisits every
+    # surviving weight block (kernels/bsr_matmul.py grid structure)
+    steps = max(1.0, n_blocks_alive * max(1, M // 512))
+    return max(t_c, t_m) + steps * target.step_overhead
+
+
+def structured_baseline(M, K, N, compression, target=V5E) -> float:
+    return matmul_latency(M, K, N, scheme="structured_row",
+                          compression=compression, target=target)
+
+
+def conv_as_gemm(feat, in_ch, out_ch, kh, kw, batch=1):
+    """im2col GEMM dims for a conv layer: M=B*H*W, K=Cin*kh*kw, N=Cout."""
+    return batch * feat * feat, in_ch * kh * kw, out_ch
+
+
+# ---------------------------------------------------------------------------
+# The offline table (paper: 512 settings measured in ~30 min on-device)
+# ---------------------------------------------------------------------------
+
+def build_table(target: TPUTarget = V5E,
+                feats=(7, 14, 28, 56), chans=(64, 128, 256, 512),
+                schemes=("none", "unstructured", "structured_row", "pattern",
+                         "block"),
+                blocks=((4, 4), (8, 16), (16, 32), (32, 64), (64, 128),
+                        (128, 128), (128, 256)),
+                compressions=(1, 2, 4, 8, 12, 16)) -> dict:
+    table = {}
+    for f, c, s, comp in itertools.product(feats, chans, schemes,
+                                           compressions):
+        M, K, N = conv_as_gemm(f, c, c, 3, 3)
+        blist = blocks if s.startswith("block") else ((0, 0),)
+        for b in blist:
+            if s.startswith("block") and (K % b[0] or N % b[1]):
+                continue
+            key = (f, c, s, b, comp)
+            table[key] = matmul_latency(M, K, N, scheme=s, block=b,
+                                        compression=comp, target=target)
+    return table
+
+
+def calibrate(target: TPUTarget, measured_flops_per_s=None,
+              measured_bytes_per_s=None) -> TPUTarget:
+    """Rescale datasheet constants to dry-run-derived effective rates."""
+    kw = {}
+    if measured_flops_per_s:
+        kw["peak_flops"] = measured_flops_per_s
+    if measured_bytes_per_s:
+        kw["hbm_bw"] = measured_bytes_per_s
+    return replace(target, **kw)

@@ -1,0 +1,149 @@
+"""Rule-based pruning-scheme mapping (paper §5.2, Fig 8) — training-free.
+
+Workflow per layer (TPU edition, DESIGN.md §2 table):
+  1. depthwise conv / conv1d / router / embedding / norms -> NO pruning
+     (§5.2.4: cheap + sensitive; router/embed are the LM analogues).
+  2. 3x3 CONV -> pattern-based when the task is "hard" (Remark 1), else
+     block-punched; other convs -> block-punched.
+  3. FC layers (all LM projections) -> block-based; block size = the
+     SMALLEST legal block whose modeled latency is within (1+beta) of the
+     structured-pruning baseline at equal compression (§5.2.2) — smallest
+     because finer granularity = higher accuracy.
+The latency model is the offline artifact (§5.2.1); the whole mapping is
+training-free."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ArchConfig
+from repro.core.latency_model import (TPUTarget, V5E, matmul_latency,
+                                      structured_baseline, conv_as_gemm)
+from repro.core.regularity import legal_blocks
+from repro.core.reweighted import SchemeChoice
+
+
+@dataclass(frozen=True)
+class LayerDesc:
+    path: str            # regex into the param tree
+    kind: str            # fc | conv3x3 | conv1x1 | convkxk | dw | frozen
+    M: int               # GEMM dims (tokens x K x N)
+    K: int
+    N: int
+    count: int = 1       # layers sharing this desc (scanned stacks)
+
+
+def lm_layers(cfg: ArchConfig, tokens: int) -> list[LayerDesc]:
+    """Enumerate the prunable GEMMs of an LM-family arch."""
+    out = []
+    D, F, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "hybrid", "encdec", "vlm"):
+        H, KV = cfg.n_heads, cfg.n_kv_heads
+        out += [
+            LayerDesc(r"attn/wq/w", "fc", tokens, D, H * hd, L),
+            LayerDesc(r"attn/w[kv]/w", "fc", tokens, D, KV * hd, 2 * L),
+            LayerDesc(r"attn/wo/w", "fc", tokens, H * hd, D, L),
+        ]
+    if cfg.family == "moe":
+        tpe = max(1, tokens * cfg.top_k // cfg.n_experts)
+        out += [
+            LayerDesc(r"moe/(gate|up)/w", "fc", tpe, D, F, 2 * L),
+            LayerDesc(r"moe/down/w", "fc", tpe, F, D, L),
+            LayerDesc(r"moe/router", "frozen", tokens, D, cfg.n_experts, L),
+        ]
+    elif cfg.family in ("dense", "hybrid", "encdec", "vlm"):
+        out += [
+            LayerDesc(r"ffn/(gate|up)/w", "fc", tokens, D, F, 2 * L),
+            LayerDesc(r"ffn/down/w", "fc", tokens, F, D, L),
+        ]
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = cfg.ssm_expand * D
+        proj = 2 * d_inner + 2 * cfg.ssm_state + d_inner // cfg.ssm_headdim
+        out += [
+            LayerDesc(r"ssm/in_proj/w", "fc", tokens, D, proj, L),
+            LayerDesc(r"ssm/out_proj/w", "fc", tokens, d_inner, D, L),
+            LayerDesc(r"ssm/conv", "dw", tokens, 4, d_inner, L),
+        ]
+    if cfg.family in ("encdec", "vlm"):
+        out += [LayerDesc(r"xattn/wq/w|xattn/wo/w", "fc", tokens, D, H * hd,
+                          2 * L)]
+    out += [
+        LayerDesc(r"head/table", "fc", tokens, D, cfg.vocab, 1),
+        LayerDesc(r"embed/table", "frozen", tokens, cfg.vocab, D, 1),
+    ]
+    return out
+
+
+def conv_layers(specs) -> list[LayerDesc]:
+    """specs: list of (name, feat, in_ch, out_ch, kh, kw, depthwise)."""
+    out = []
+    for (name, feat, cin, cout, kh, kw, dw) in specs:
+        M, K, N = conv_as_gemm(feat, cin, cout, kh, kw)
+        kind = "dw" if dw else (
+            "conv3x3" if (kh, kw) == (3, 3) else
+            "conv1x1" if (kh, kw) == (1, 1) else "convkxk")
+        out.append(LayerDesc(name, kind, M, K, N))
+    return out
+
+
+def select_block_size(M, K, N, compression, beta, target: TPUTarget = V5E,
+                      menu=None):
+    """§5.2.2: smallest block within (1+beta) of structured latency."""
+    base = structured_baseline(M, K, N, compression, target)
+    cands = legal_blocks(K, N) if menu is None else \
+        [b for b in menu if K % b[0] == 0 and N % b[1] == 0]
+    cands = sorted(cands, key=lambda b: b[0] * b[1])
+    for b in cands:
+        t = matmul_latency(M, K, N, scheme="block", block=b,
+                           compression=compression, target=target)
+        if t <= (1 + beta) * base:
+            return b, t, base
+    b = cands[-1] if cands else (min(K, 128), min(N, 128))
+    t = matmul_latency(M, K, N, scheme="block", block=b,
+                       compression=compression, target=target)
+    return b, t, base
+
+
+def map_rules(layers: list[LayerDesc], *, dataset_hard=True, beta=0.2,
+              compression=8.0, target: TPUTarget = V5E):
+    """Returns (PruneSpec rules, per-layer report)."""
+    spec, report = [], []
+    for ld in layers:
+        if ld.kind in ("dw", "frozen"):
+            choice = SchemeChoice("none")
+            t = t_base = 0.0
+        elif ld.kind == "conv3x3":
+            if dataset_hard:
+                choice = SchemeChoice("pattern",
+                                      connectivity=1 - 4 / 9 / 1.0)
+                t = matmul_latency(ld.M, ld.K, ld.N, scheme="pattern",
+                                   compression=2.25, target=target)
+                t_base = structured_baseline(ld.M, ld.K, ld.N, 2.25, target)
+            else:
+                b, t, t_base = select_block_size(ld.M, ld.K, ld.N,
+                                                 compression, beta, target)
+                choice = SchemeChoice("block_punched", block=b)
+        elif ld.kind in ("fc", "conv1x1", "convkxk"):
+            b, t, t_base = select_block_size(ld.M, ld.K, ld.N, compression,
+                                             beta, target)
+            t_dense = matmul_latency(ld.M, ld.K, ld.N, target=target)
+            if t > t_dense:
+                # pruning would SLOW this layer (MXU-unfriendly dims, e.g.
+                # mamba2's 8512-wide in_proj): map no scheme — latency is
+                # the rule method's first-class constraint (§5.2.2)
+                choice = SchemeChoice("none")
+                t = t_dense
+            else:
+                choice = SchemeChoice("block", block=b)
+        else:
+            raise ValueError(ld.kind)
+        spec.append((ld.path, choice))
+        report.append({"path": ld.path, "kind": ld.kind,
+                       "scheme": choice.scheme, "block": choice.block,
+                       "latency_s": t, "structured_s": t_base,
+                       "count": ld.count})
+    return spec, report
+
+
+def total_latency(report) -> float:
+    return sum(r["latency_s"] * r["count"] for r in report)

@@ -1,0 +1,181 @@
+"""Search-based pruning-scheme mapping (paper §5.1) — REINFORCE over a
+seq2seq policy.
+
+State per layer (paper: {layer type, kernel size, in_ch, out_ch}): a feature
+vector [kind-onehot, log M/K/N].  Action per layer (paper: {regularity,
+block size}): a pair of categoricals, masked to the applicable scheme set.
+Policy: LSTM decoder over the layer sequence; policy-gradient with a moving
+baseline B (Eq. 6); reward = accuracy-proxy - w * modeled latency —
+accuracy from one-shot magnitude pruning + a short retrain (paper uses
+2-epoch proxies), latency from the offline latency model (§5.2.1)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.latency_model import V5E, matmul_latency
+from repro.core.mapper_rule import LayerDesc
+from repro.core.reweighted import SchemeChoice
+
+KINDS = ("fc", "conv3x3", "conv1x1", "convkxk", "dw", "frozen")
+SCHEME_MENU = ("none", "unstructured", "structured_row", "pattern", "block",
+               "block_punched")
+BLOCK_MENU = ((4, 4), (8, 16), (16, 32), (32, 64), (64, 128), (128, 128))
+
+
+def applicable(kind: str) -> np.ndarray:
+    """Boolean mask over SCHEME_MENU per layer kind (paper constraints:
+    pattern is 3x3-only; dw/frozen layers are never pruned)."""
+    m = np.zeros(len(SCHEME_MENU), bool)
+    if kind in ("dw", "frozen"):
+        m[0] = True
+        return m
+    m[:] = True
+    if kind != "conv3x3":
+        m[SCHEME_MENU.index("pattern")] = False
+        m[SCHEME_MENU.index("block_punched")] = kind == "convkxk"
+    return m
+
+
+def layer_features(layers: list[LayerDesc]) -> np.ndarray:
+    f = np.zeros((len(layers), len(KINDS) + 3), np.float32)
+    for i, ld in enumerate(layers):
+        f[i, KINDS.index(ld.kind)] = 1.0
+        f[i, -3:] = np.log([ld.M, ld.K, ld.N])
+    return f
+
+
+# -- tiny LSTM policy ---------------------------------------------------------
+
+def policy_init(key, in_dim, hidden=64):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = lambda k, sh: jax.random.normal(k, sh, jnp.float32) * 0.1
+    return {"wx": s(k1, (in_dim, 4 * hidden)),
+            "wh": s(k2, (hidden, 4 * hidden)),
+            "b": jnp.zeros((4 * hidden,), jnp.float32),
+            "head_s": s(k3, (hidden, len(SCHEME_MENU))),
+            "head_b": s(k4, (hidden, len(BLOCK_MENU)))}
+
+
+def _lstm_step(p, carry, x):
+    h, c = carry
+    z = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def sample_mapping(p, feats, app_masks, key):
+    """Returns (scheme_idx (L,), block_idx (L,), logp scalar)."""
+    hidden = p["wh"].shape[0]
+    L = feats.shape[0]
+    keys = jax.random.split(key, L)
+
+    def body(carry, xs):
+        hc, logp = carry
+        x, mask, k = xs
+        hc, h = _lstm_step(p, hc, x)
+        ls = jnp.where(mask, h @ p["head_s"], -1e9)
+        k1, k2 = jax.random.split(k)
+        a_s = jax.random.categorical(k1, ls)
+        logp = logp + jax.nn.log_softmax(ls)[a_s]
+        lb = h @ p["head_b"]
+        a_b = jax.random.categorical(k2, lb)
+        logp = logp + jax.nn.log_softmax(lb)[a_b]
+        return (hc, logp), (a_s, a_b)
+
+    hc0 = (jnp.zeros((hidden,)), jnp.zeros((hidden,)))
+    (_, logp), (a_s, a_b) = jax.lax.scan(
+        body, (hc0, jnp.zeros(())), (feats, app_masks, keys))
+    return a_s, a_b, logp
+
+
+def mapping_logp(p, feats, app_masks, a_s, a_b):
+    hidden = p["wh"].shape[0]
+
+    def body(carry, xs):
+        hc, logp = carry
+        x, mask, s, b = xs
+        hc, h = _lstm_step(p, hc, x)
+        ls = jnp.where(mask, h @ p["head_s"], -1e9)
+        lb = h @ p["head_b"]
+        logp = logp + jax.nn.log_softmax(ls)[s] + jax.nn.log_softmax(lb)[b]
+        return (hc, logp), None
+
+    hc0 = (jnp.zeros((hidden,)), jnp.zeros((hidden,)))
+    (_, logp), _ = jax.lax.scan(body, (hc0, jnp.zeros(())),
+                                (feats, app_masks, a_s, a_b))
+    return logp
+
+
+def actions_to_spec(layers, a_s, a_b, rate=None) -> list:
+    spec = []
+    for ld, s, b in zip(layers, np.asarray(a_s), np.asarray(a_b)):
+        scheme = SCHEME_MENU[int(s)]
+        block = BLOCK_MENU[int(b)]
+        # snap block to layer divisibility
+        bk = max(1, np.gcd(block[0], ld.K))
+        bn = max(1, np.gcd(block[1], ld.N))
+        spec.append((ld.path, SchemeChoice(scheme, (int(bk), int(bn)),
+                                           rate=rate)))
+    return spec
+
+
+def mapping_latency(layers, a_s, a_b, compression=8.0, target=V5E) -> float:
+    t = 0.0
+    for ld, s, b in zip(layers, np.asarray(a_s), np.asarray(a_b)):
+        scheme = SCHEME_MENU[int(s)]
+        if scheme == "none":
+            comp = 1.0
+        elif scheme == "pattern":
+            comp = 2.25
+        else:
+            comp = compression
+        t += ld.count * matmul_latency(
+            ld.M, ld.K, ld.N, scheme=scheme, block=BLOCK_MENU[int(b)],
+            compression=comp, target=target)
+    return t
+
+
+def search(layers, evaluate_fn, *, key=None, iters=20, samples=4,
+           lr=5e-2, latency_weight=1.0, hidden=32, verbose=False):
+    """REINFORCE loop (Eq. 5-6).  evaluate_fn(spec) -> accuracy-proxy in
+    [0,1] (e.g. exp(-finetuned loss)).  Returns (best_spec, history)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    feats = jnp.asarray(layer_features(layers))
+    app = jnp.asarray(np.stack([applicable(ld.kind) for ld in layers]))
+    p = policy_init(jax.random.fold_in(key, 1), feats.shape[1], hidden)
+    baseline = 0.0
+    best = (None, -np.inf)
+    history = []
+    sample_jit = jax.jit(lambda pp, k: sample_mapping(pp, feats, app, k))
+    grad_fn = jax.jit(jax.grad(
+        lambda pp, a_s, a_b, adv: -adv * mapping_logp(pp, feats, app,
+                                                      a_s, a_b)))
+    for it in range(iters):
+        key, *ks = jax.random.split(key, samples + 1)
+        grads_acc = jax.tree_util.tree_map(jnp.zeros_like, p)
+        rewards = []
+        for k in ks:
+            a_s, a_b, _ = sample_jit(p, k)
+            spec = actions_to_spec(layers, a_s, a_b)
+            acc = evaluate_fn(spec)
+            lat = mapping_latency(layers, a_s, a_b)
+            r = acc - latency_weight * lat
+            rewards.append(r)
+            if r > best[1]:
+                best = (spec, r)
+            adv = r - baseline
+            g = grad_fn(p, a_s, a_b, adv)
+            grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, g)
+        baseline = 0.9 * baseline + 0.1 * float(np.mean(rewards))
+        p = jax.tree_util.tree_map(lambda w, g: w - lr * g / samples,
+                                   p, grads_acc)
+        history.append(float(np.mean(rewards)))
+        if verbose:
+            print(f"  search iter {it}: mean reward {history[-1]:.4f}")
+    return best[0], history

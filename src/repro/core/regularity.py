@@ -1,0 +1,202 @@
+"""Pruning regularities (paper §2.1.1 + §4.1) as mask generators.
+
+All five schemes from the paper:
+  - unstructured                (Fig 1 a,b)       — any-location magnitude
+  - structured row / column     (Fig 1 c,d)       — whole-matrix granularity
+  - pattern-based               (Fig 1 e)         — 3x3 CONV only: 4-entry
+      kernel patterns from a fixed 8-pattern set + connectivity pruning
+  - block-based                 (Fig 1 g, §4.1.1) — FC: independent row/col
+      pruning inside equal (p×q) blocks
+  - block-punched               (Fig 1 f, §4.1.2) — CONV: same intra-kernel
+      positions pruned across all kernels of a (p×q)-kernel block
+
+Conventions: FC weights are (..., in, out) with arbitrary leading batch dims
+(scanned layer stacks, MoE expert dims).  CONV weights are (P, Q, Kh, Kw) =
+(filters, in_channels, kh, kw).  Masks are float32 {0,1} of the weight shape.
+
+Two selection modes everywhere:
+  rate=r        prune the r-fraction of groups with smallest L2 norms
+  threshold=t   prune groups with squared-norm < t (the reweighted
+                algorithm's automatic-rate mode, §4.2)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+SCHEMES = ("none", "unstructured", "structured_row", "structured_col",
+           "pattern", "block", "block_row", "block_col", "block_punched")
+
+
+# ---------------------------------------------------------------------------
+# Block partitioning helpers (last-2-dims blocks, leading dims = batch)
+# ---------------------------------------------------------------------------
+
+def _to_blocks(w, bp, bq):
+    """(..., P, Q) -> (..., Pb, Qb, bp, bq)"""
+    *lead, Pd, Qd = w.shape
+    assert Pd % bp == 0 and Qd % bq == 0, (w.shape, bp, bq)
+    w = w.reshape(*lead, Pd // bp, bp, Qd // bq, bq)
+    return jnp.moveaxis(w, -3, -2)      # (..., Pb, Qb, bp, bq)
+
+
+def _from_blocks(wb):
+    """inverse of _to_blocks"""
+    *lead, Pb, Qb, bp, bq = wb.shape
+    wb = jnp.moveaxis(wb, -2, -3)       # (..., Pb, bp, Qb, bq)
+    return wb.reshape(*lead, Pb * bp, Qb * bq)
+
+
+def _select(sqnorms, rate=None, threshold=None, axes=None):
+    """Keep-mask over groups.  rate prunes the smallest-`rate` fraction
+    (computed over `axes`, default: all); threshold keeps sqnorm >= t."""
+    if threshold is not None:
+        return sqnorms >= threshold
+    assert rate is not None
+    flat = sqnorms if axes is None else sqnorms
+    q = jnp.quantile(flat.astype(jnp.float32).reshape(-1), rate)
+    return sqnorms > q
+
+
+# ---------------------------------------------------------------------------
+# Schemes
+# ---------------------------------------------------------------------------
+
+def unstructured_mask(w, rate=None, threshold=None):
+    sq = jnp.square(w.astype(jnp.float32))
+    return _select(sq, rate, threshold).astype(jnp.float32)
+
+
+def structured_mask(w, rate=None, threshold=None, axis="row"):
+    """Whole-matrix row (output-filter) / column pruning — Fig 1(c,d).
+    'row' prunes along P (second-to-last dim), 'col' along Q (last dim)."""
+    sq = jnp.square(w.astype(jnp.float32))
+    if axis == "row":
+        g = jnp.sum(sq, axis=-1)                 # (..., P)
+        keep = _select(g, rate, threshold)
+        return jnp.broadcast_to(keep[..., :, None], w.shape).astype(jnp.float32)
+    g = jnp.sum(sq, axis=-2)                     # (..., Q)
+    keep = _select(g, rate, threshold)
+    return jnp.broadcast_to(keep[..., None, :], w.shape).astype(jnp.float32)
+
+
+def block_mask(w, block, rate=None, threshold=None, mode="both"):
+    """Block-based pruning for FC (§4.1.1): independent row+column pruning
+    per (bp×bq) block.  mode in {'row','col','both'}.  Group sq-norms are
+    per-block rows/cols; the kept set is chosen globally in the layer
+    (auto per-block rates, matching the reweighted soft-constraint)."""
+    bp, bq = block
+    wb = _to_blocks(w, bp, bq)                    # (..., Pb, Qb, bp, bq)
+    sq = jnp.square(wb.astype(jnp.float32))
+    keep = jnp.ones(wb.shape, jnp.float32)
+    if mode in ("row", "both"):
+        g = jnp.sum(sq, axis=-1)                  # (..., Pb, Qb, bp)
+        r = rate if mode == "row" else (1 - (1 - rate) ** 0.5 if rate is not None else None)
+        k = _select(g, r, threshold)
+        keep = keep * k[..., :, None].astype(jnp.float32)
+    if mode in ("col", "both"):
+        g = jnp.sum(sq, axis=-2)                  # (..., Pb, Qb, bq)
+        r = rate if mode == "col" else (1 - (1 - rate) ** 0.5 if rate is not None else None)
+        k = _select(g, r, threshold)
+        keep = keep * k[..., None, :].astype(jnp.float32)
+    return _from_blocks(keep)
+
+
+def block_punched_mask(w, block, rate=None, threshold=None):
+    """Block-punched pruning for CONV (§4.1.2): weights at the same (m,n)
+    kernel location across ALL kernels of a (bp×bq)-kernel block are pruned
+    together.  w: (P, Q, Kh, Kw)."""
+    bp, bq = block
+    P, Q, Kh, Kw = w.shape
+    assert P % bp == 0 and Q % bq == 0
+    wb = w.reshape(P // bp, bp, Q // bq, bq, Kh, Kw)
+    sq = jnp.square(wb.astype(jnp.float32))
+    g = jnp.sum(sq, axis=(1, 3))                  # (Pb, Qb, Kh, Kw)
+    keep = _select(g, rate, threshold)            # same punch across block
+    keep = jnp.broadcast_to(keep[:, None, :, None, :, :], wb.shape)
+    return keep.reshape(P, Q, Kh, Kw).astype(jnp.float32)
+
+
+# -- pattern-based (3x3 CONV only) -------------------------------------------
+
+# The canonical 8-pattern set: 4-entry patterns shaped like Gaussian /
+# ELoG filters (paper §2.1.1, [53]).  Center + 3 of the 4 edge-adjacent
+# cells, and the 4 corner variants.
+_P = np.zeros((8, 3, 3), np.float32)
+for i, cells in enumerate([
+        [(1, 1), (0, 1), (1, 0), (1, 2)],   # T-up
+        [(1, 1), (2, 1), (1, 0), (1, 2)],   # T-down
+        [(1, 1), (0, 1), (2, 1), (1, 0)],   # T-left
+        [(1, 1), (0, 1), (2, 1), (1, 2)],   # T-right
+        [(1, 1), (0, 0), (0, 1), (1, 0)],   # corner NW
+        [(1, 1), (0, 1), (0, 2), (1, 2)],   # corner NE
+        [(1, 1), (1, 0), (2, 0), (2, 1)],   # corner SW
+        [(1, 1), (1, 2), (2, 1), (2, 2)],   # corner SE
+]):
+    for (r, c) in cells:
+        _P[i, r, c] = 1.0
+PATTERN_SET = jnp.asarray(_P)                     # (8, 3, 3)
+
+
+def pattern_mask(w, connectivity_rate=0.0):
+    """Kernel-pattern pruning (+optional connectivity pruning) for 3x3 CONV.
+    Each kernel gets the pattern from the fixed 8-set that preserves the
+    most magnitude; connectivity pruning removes whole kernels (inter-kernel)
+    for extra compression.  w: (P, Q, 3, 3)."""
+    assert w.shape[-2:] == (3, 3), "pattern-based pruning is 3x3-only (§2.1.1)"
+    sq = jnp.square(w.astype(jnp.float32))
+    scores = jnp.einsum("pqhw,khw->pqk", sq, PATTERN_SET)   # (P,Q,8)
+    best = jnp.argmax(scores, axis=-1)                      # (P,Q)
+    mask = PATTERN_SET[best]                                # (P,Q,3,3)
+    if connectivity_rate > 0:
+        knorm = jnp.sum(sq, axis=(-1, -2))                  # (P,Q)
+        q = jnp.quantile(knorm.reshape(-1), connectivity_rate)
+        mask = mask * (knorm > q)[..., None, None]
+    return mask.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + stats
+# ---------------------------------------------------------------------------
+
+def make_mask(w, scheme, block=(64, 128), rate=None, threshold=None,
+              connectivity_rate=0.0):
+    if scheme == "none":
+        return jnp.ones(w.shape, jnp.float32)
+    if scheme == "unstructured":
+        return unstructured_mask(w, rate, threshold)
+    if scheme == "structured_row":
+        return structured_mask(w, rate, threshold, "row")
+    if scheme == "structured_col":
+        return structured_mask(w, rate, threshold, "col")
+    if scheme == "block":
+        return block_mask(w, block, rate, threshold, "both")
+    if scheme == "block_row":
+        return block_mask(w, block, rate, threshold, "row")
+    if scheme == "block_col":
+        return block_mask(w, block, rate, threshold, "col")
+    if scheme == "block_punched":
+        return block_punched_mask(w, block, rate, threshold)
+    if scheme == "pattern":
+        return pattern_mask(w, connectivity_rate)
+    raise ValueError(scheme)
+
+
+def density(mask) -> float:
+    return float(jnp.mean(mask))
+
+
+def compression_rate(mask) -> float:
+    d = density(mask)
+    return 1.0 / max(d, 1e-9)
+
+
+def legal_blocks(P, Q, menu=((4, 4), (8, 16), (16, 32), (32, 64), (64, 128),
+                             (128, 32), (128, 64), (128, 128), (128, 256),
+                             (256, 256))):
+    """Block-size menu restricted to divisors of the layer dims.  On TPU the
+    interesting sizes are multiples of the (8,128) VREG tile up to the MXU
+    128x128 tile (DESIGN.md §2); small sizes exist to reproduce the paper's
+    accuracy/latency trade-off curves."""
+    return [(p, q) for (p, q) in menu if P % p == 0 and Q % q == 0]

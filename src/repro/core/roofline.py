@@ -1,0 +1,116 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape) on the single-pod 16x16 mesh, from the
+extrapolated per-device HLO costs (launch/dryrun.py probe pass):
+
+    compute    = HLO_flops_per_device / peak_FLOPs      (197 TF/s bf16 v5e)
+    memory     = HLO_bytes_per_device / HBM_bw          (819 GB/s)
+    collective = collective_bytes_per_device / link_bw  (~50 GB/s ICI)
+
+plus MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params,
+and the usefulness ratio MODEL_FLOPS / (HLO_flops * n_devices)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+N_DEVICES = 256
+
+
+def param_counts(cfg):
+    """(total params, active params) — active discounts MoE experts to
+    top_k/n_experts (the 6*N_active*D convention)."""
+    from repro.models import transformer as T
+    from repro.models.module import path_str
+    abs_p = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    total, expert = 0, 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(abs_p)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe/gate" in path_str(path) or "moe/up" in path_str(path) or \
+                "moe/down" in path_str(path):
+            expert += n
+    active = total - expert
+    if cfg.n_experts:
+        active += expert * cfg.top_k / cfg.n_experts
+    return total, int(active)
+
+
+def model_flops(cfg, shape):
+    """6*N_active*D for training, 2*N_active*D for inference steps."""
+    _, active = param_counts(cfg)
+    tokens = shape["batch"] * (shape["seq"] if shape["kind"] != "decode"
+                               else 1)
+    mult = 6 if shape["kind"] == "train" else 2
+    return mult * active * tokens
+
+
+def analyze(rec, cfg, shape) -> dict:
+    ex = rec.get("extrapolated") or {}
+    flops = ex.get("flops_remat", ex.get("flops"))
+    if not flops:
+        return {"error": "no extrapolated costs"}
+    if flops <= 0:
+        # L2-L1 probe artifact (XLA optimized the two probes differently):
+        # fall back to the analytic MODEL_FLOPS per device (footnoted)
+        flops = model_flops(cfg, shape) / rec.get("n_devices", N_DEVICES)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = ex["bytes"] / HBM_BW
+    t_coll = ex["coll"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops * rec.get("n_devices", N_DEVICES)
+    useful = mf / hlo_global if hlo_global else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops over the time the dominant
+    # term pins us to, relative to pure-compute peak
+    t_model_ideal = mf / (N_DEVICES * PEAK_FLOPS)
+    frac = t_model_ideal / bound if bound else 0.0
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": useful, "roofline_fraction": frac,
+            "step_time_bound_s": bound}
+
+
+def load_and_analyze(dryrun_dir) -> list[dict]:
+    from repro import configs
+    from repro.configs.base import SHAPES
+    out = []
+    for f in sorted(pathlib.Path(dryrun_dir).glob("*__single.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "OK":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "status": rec.get("status", "?")})
+            continue
+        cfg = configs.get(rec["arch"])
+        row = {"arch": rec["arch"], "shape": rec["shape"], "status": "OK"}
+        row.update(analyze(rec, cfg, SHAPES[rec["shape"]]))
+        out.append(row)
+    return out
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL_FLOPS | useful | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("status") != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r.get('status','?')[:40]} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['model_flops']:.3g} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |")
+    return hdr + "\n".join(lines)

@@ -1,0 +1,87 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md §5): step-stamped directories, per-host shard files,
+manifest-last + atomic rename => a partially written checkpoint is never
+picked up; restore scans for the newest COMPLETE step.  Restore re-shards
+onto whatever mesh the restoring job has (elastic restarts: the array data
+is mesh-agnostic; shardings are re-applied via device_put)."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import numpy as np
+import jax
+
+from repro.models import module as M
+
+
+def _to_numpy(v):
+    a = np.asarray(v)
+    if a.dtype.name == "bfloat16":      # numpy can't savez ml_dtypes
+        a = a.astype(np.float32)        # lossless widening; restore recasts
+    return a
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {M.path_str(p): _to_numpy(v) for p, v in flat}, treedef
+
+
+def save(ckpt_dir, step: int, tree, host_id: int = 0, n_hosts: int = 1,
+         meta: dict | None = None):
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}_{host_id}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    arrays, _ = _flatten(tree)
+    np.savez(tmp / f"shard_{host_id}.npz", **arrays)
+    # host 0 writes the manifest LAST; atomic rename publishes the step
+    if host_id == 0:
+        manifest = {"step": step, "n_hosts": n_hosts,
+                    "keys": sorted(arrays.keys()), "meta": meta or {}}
+        (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+        if final.exists():
+            return final
+        os.replace(tmp, final)
+        return final
+    return tmp
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for d in ckpt_dir.iterdir():
+        if d.name.startswith("step_") and (d / "MANIFEST.json").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, tree_like, step: int | None = None,
+            shardings=None, host_id: int = 0):
+    """Restore into the structure of ``tree_like``; re-shard with
+    ``shardings`` (same structure) when given — the elastic-restart path."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    d = ckpt_dir / f"step_{step:08d}"
+    data = np.load(d / f"shard_{host_id}.npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    if shardings is not None:
+        flat_s = [s for _, s in
+                  jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    else:
+        flat_s = [None] * len(flat)
+    for (p, like), sh in zip(flat, flat_s):
+        arr = data[M.path_str(p)]
+        arr = arr.astype(like.dtype) if hasattr(like, "dtype") else arr
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), leaves), step

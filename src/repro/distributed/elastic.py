@@ -1,0 +1,57 @@
+"""Elastic scaling + straggler mitigation (DESIGN.md §5).
+
+* ``choose_mesh_shape``: given the LIVE device count (after failures),
+  pick the largest power-of-two (data, model) split that preserves the
+  requested model-parallel degree — the framework restarts onto the
+  shrunken mesh and `checkpoint.restore(..., shardings=new)` re-shards.
+* Straggler mitigation is structural: the data pipeline is a pure function
+  of (seed, step, shard) (repro.data.pipeline), so a backup host can
+  recompute any shard with zero coordination; `backup_step_threshold`
+  implements the classic 'launch backup after p99' policy hook.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+
+def choose_mesh_shape(n_devices: int, model_parallel: int = 16,
+                      want_pods: int = 1):
+    """Largest power-of-2 mesh <= n_devices keeping `model_parallel`."""
+    mp = model_parallel
+    while mp > 1 and n_devices % mp:
+        mp //= 2
+    rest = n_devices // mp
+    # peel a pod axis if asked and divisible
+    if want_pods > 1 and rest % want_pods == 0:
+        return (want_pods, rest // want_pods, mp), ("pod", "data", "model")
+    dp = 1
+    while dp * 2 <= rest:
+        dp *= 2
+    return (dp, mp), ("data", "model")
+
+
+def rebuild_mesh(model_parallel=16, want_pods=1):
+    n = len(jax.devices())
+    shape, axes = choose_mesh_shape(n, model_parallel, want_pods)
+    return make_mesh(shape, axes)
+
+
+class StragglerMonitor:
+    """Track per-step durations; signal when a step exceeds k x median —
+    the driver then re-issues the step's shards to backup hosts (the data
+    pipeline determinism makes the recompute exact)."""
+
+    def __init__(self, k: float = 3.0, window: int = 50):
+        self.k = k
+        self.window = window
+        self.durations = []
+
+    def observe(self, seconds: float) -> bool:
+        self.durations.append(seconds)
+        hist = self.durations[-self.window:]
+        if len(hist) < 5:
+            return False
+        med = sorted(hist)[len(hist) // 2]
+        return seconds > self.k * med

@@ -1,0 +1,296 @@
+"""Sharding policy: param partition rules per architecture + activation
+constraints (the ``Dist`` helper threaded through model code).
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  Batch/DP shards over (pod, data); TP/EP/SP over model; FSDP
+(weight + optimizer-state sharding over the data axes) switches on for the
+>=70B archs (llama-3.2-90b, kimi-k2-1t) so Adam/Adafactor state fits HBM.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import module as M
+
+
+@dataclass
+class Dist:
+    mesh: Mesh
+    batch_axes: tuple = ("data",)   # () when global batch < dp degree
+    model_axis: str = "model"
+    kv_shardable: bool = True       # n_kv_heads % tp == 0
+    expert_sharded: bool = False    # n_experts % tp == 0
+    vocab_shardable: bool = True    # vocab % tp == 0
+    mode: str = "tp"                # "tp" | "fsdp" (see ArchConfig)
+
+    @property
+    def tp(self):
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp(self):
+        d = 1
+        for a in self.batch_axes:
+            d *= self.mesh.shape[a]
+        return d
+
+    def _c(self, x, *spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def _b(self):
+        return self.batch_axes if self.batch_axes else None
+
+    # -- activation constraints used inside models --------------------------
+    def shard_activations(self, x):            # (B, S, D)
+        return self.shard_residual(x)
+
+    def shard_residual(self, x):               # (B, S, D)
+        """Megatron-style sequence-parallel residual stream: the seq dim is
+        sharded over the model axis BETWEEN blocks, so the per-layer scan
+        carry is 1/tp the size (and wo/down all-reduces lower to
+        reduce-scatter + all-gather).  Falls back to replicated when seq
+        isn't divisible (decode: seq == 1)."""
+        if x.shape[1] % self.tp == 0:
+            return self._c(x, self._b(), self.model_axis, None)
+        return self._c(x, self._b(), None, None)
+
+    def shard_logits(self, x):                 # (B, S, V)
+        if self.mode == "fsdp" or not self.vocab_shardable:
+            # seq stays model-sharded through the head matmul
+            if x.shape[1] % self.tp == 0:
+                return self._c(x, self._b(), self.model_axis, None)
+            return self._c(x, self._b(), None, None)
+        return self._c(x, self._b(), None, self.model_axis)
+
+    def shard_attn_q(self, q, mode):           # (B, S, H, hd)
+        if self.mode == "fsdp" or mode == "seq":
+            # context-parallel: q seq-sharded, full heads per device
+            if q.shape[1] % self.tp == 0:
+                return self._c(q, self._b(), self.model_axis, None, None)
+            return q
+        return self._c(q, self._b(), None, self.model_axis, None)
+
+    def shard_attn_kv(self, k, mode, n_kv):    # (B, S, KV, hd)
+        if self.mode == "fsdp" or mode == "seq":
+            # force the model-axis all-gather HERE: compact KV-form, bf16 —
+            # 2(dtype) x G(heads) cheaper than letting GSPMD gather the
+            # f32 expanded form inside the flash scan (§Perf iter 4)
+            return self._c(k, self._b(), None, None, None)
+        if mode == "heads" and self.kv_shardable:
+            return self._c(k, self._b(), None, self.model_axis, None)
+        return self._c(k, self._b(), None, None, None)
+
+    def shard_cache(self, c):                  # (B, S, KV, hd): S-sharded
+        return self._c(c, self._b(), self.model_axis, None, None)
+
+    def shard_heads(self, x):                  # ssm (B, S, H, P)
+        return self._c(x, self._b(), None, self.model_axis, None)
+
+    def shard_experts(self, x):                # moe (G, E, C, D)
+        if self.expert_sharded:
+            # G (token groups) stays batch-sharded; E expert-parallel.
+            # Leaving G unsharded makes every device materialize ALL
+            # global tokens' dispatch — an 18 GB/layer all-gather on
+            # kimi-1T (§Perf kimi iter 1).
+            g = self._b() if x.shape[0] % max(self.dp, 1) == 0 and \
+                self.batch_axes else None
+            return self._c(x, g, self.model_axis, None, None)
+        return x
+
+
+def make_dist(mesh: Mesh, cfg: ArchConfig, global_batch: int,
+              mode: str = "tp") -> Dist:
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    batch_axes = tuple(axes) if global_batch % dp == 0 else ()
+    tp = mesh.shape["model"]
+    return Dist(mesh=mesh, batch_axes=batch_axes,
+                kv_shardable=(cfg.n_kv_heads % tp == 0) if cfg.n_kv_heads else False,
+                expert_sharded=(cfg.n_experts % tp == 0) if cfg.n_experts else False,
+                vocab_shardable=cfg.vocab % tp == 0,
+                mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Param partition rules (path-regex -> right-aligned PartitionSpec)
+# ---------------------------------------------------------------------------
+
+def _fsdp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def needs_fsdp(cfg: ArchConfig) -> bool:
+    # rough dense-equivalent param count; FSDP when a model-only shard of
+    # Adam state would blow 16 GB HBM (>= ~30B params)
+    return cfg.name in ("kimi-k2-1t-a32b", "llama-3.2-vision-90b")
+
+
+def param_rules(cfg: ArchConfig, mesh: Mesh):
+    f = _fsdp_axes(mesh) if needs_fsdp(cfg) else None
+    mdl = "model"
+    rules = [
+        # MoE experts: (E, D, F) / (E, F, D) — EP on experts when divisible,
+        # otherwise TP on the hidden dim; FSDP on D for the 1T arch.
+        (r"moe/(gate|up)/w", P(mdl, f, None) if cfg.n_experts % mesh.shape[mdl] == 0
+         else P(None, f, mdl)),
+        (r"moe/down/w", P(mdl, None, f) if cfg.n_experts % mesh.shape[mdl] == 0
+         else P(None, mdl, f)),
+        (r"moe/router", P()),
+        # attention projections
+        (r"attn/wq/w|xattn/wq/w", P(f, mdl)),
+        (r"attn/w[kv]/w|xattn/w[kv]/w",
+         P(f, mdl) if cfg.n_kv_heads % mesh.shape[mdl] == 0 else P(f, None)),
+        (r"attn/wo/w|xattn/wo/w", P(mdl, f)),
+        # dense FFN
+        (r"ffn/(gate|up)/w", P(f, mdl)),
+        (r"ffn/down/w", P(mdl, f)),
+        # SSM
+        (r"ssm/in_proj/w", P(f, mdl)),
+        (r"ssm/out_proj/w", P(mdl, f)),
+        (r"ssm/(conv|A_log|D|dt_bias|norm)", P()),
+        # embeddings: vocab-sharded over model (loss is vocab-parallel);
+        # odd vocabs fall back to d_model-sharded tables
+        (r"embed/table|head/table",
+         P(mdl, f) if cfg.vocab % mesh.shape[mdl] == 0 else P(None, mdl)),
+        # norms / scalars
+        (r"ln|norm|gate$|scale|b$", P()),
+    ]
+    return rules
+
+
+def _fsdp_axis_options(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    opts = [axes + ("model",), ("model",)]
+    if axes:
+        opts.append(axes)
+    return opts
+
+
+def fsdp_leaf_spec(shape, mesh: Mesh) -> P:
+    """ZeRO-3 spec: shard one dim over as many mesh axes as divide it
+    (prefer the output dim, then the input dim, then replicate)."""
+    for dim in (len(shape) - 1, max(len(shape) - 2, 0)):
+        for combo in _fsdp_axis_options(mesh):
+            size = 1
+            for a in combo:
+                size *= mesh.shape[a]
+            if shape[dim] % size == 0 and shape[dim] >= size:
+                spec = [None] * len(shape)
+                spec[dim] = combo if len(combo) > 1 else combo[0]
+                return P(*spec)
+    return P()
+
+
+def param_specs(params, cfg: ArchConfig, mesh: Mesh, mode: str = "tp"):
+    if mode == "tp":
+        return M.spec_from_rules(params, param_rules(cfg, mesh))
+    # fsdp (training): dense weights ZeRO-3 sharded; MoE experts keep the
+    # EP rules (expert dim over model + fsdp axes); scalars replicated.
+    import re
+    moe_rules = [(pat, s) for pat, s in param_rules(cfg, mesh)
+                 if pat.startswith("moe")]
+
+    def assign(path, leaf):
+        s = M.path_str(path)
+        for pat, spec in moe_rules:
+            if re.search(pat, s):
+                pad = leaf.ndim - len(spec)
+                return P(*([None] * max(pad, 0) + list(spec))) if pad >= 0 \
+                    else P(*spec[-leaf.ndim:])
+        if leaf.ndim < 2 or re.search(r"ln|norm|gate$|scale|A_log|dt_bias|D$",
+                                      s):
+            return P()
+        if "head/table" in s:
+            # output head wants VOCAB-sharded (vocab-parallel loss);
+            # D-sharding would all-reduce (B,S,V) logits or all-gather the
+            # f32-converted table (§Perf kimi iter 2)
+            for combo in _fsdp_axis_options(mesh):
+                size = 1
+                for a in combo:
+                    size *= mesh.shape[a]
+                if leaf.shape[0] % size == 0:
+                    return P(combo if len(combo) > 1 else combo[0], None)
+            return fsdp_leaf_spec(leaf.shape, mesh)
+        if "embed/table" in s:
+            # input embedding wants D-sharded (lookup gathers stay local)
+            for combo in _fsdp_axis_options(mesh):
+                size = 1
+                for a in combo:
+                    size *= mesh.shape[a]
+                if leaf.shape[1] % size == 0:
+                    return P(None, combo if len(combo) > 1 else combo[0])
+            return P()
+        # strip the scanned-layer leading dim from the sharding decision
+        stacked = leaf.ndim >= 3 and any(t in s for t in
+                                         ("layers", "enc/", "dec/", "groups"))
+        core = leaf.shape[1:] if stacked else leaf.shape
+        spec = fsdp_leaf_spec(core, mesh)
+        pad = leaf.ndim - len(spec)
+        return P(*([None] * max(pad, 0) + list(spec)))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def param_shardings(params, cfg: ArchConfig, mesh: Mesh):
+    specs = param_specs(params, cfg, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_state_specs(opt_abs, p_specs, kind: str):
+    """Optimizer-state PartitionSpecs mirroring the param specs.
+
+    AdamW m/v share the param spec.  Adafactor's factored vr/vc drop the
+    last / second-to-last dim of the param spec respectively."""
+    if kind == "adamw":
+        return {"m": p_specs, "v": p_specs, "step": P()}
+    assert kind == "adafactor"
+
+    def fspec(pspec, fdict):
+        if "vr" in fdict:
+            s = list(pspec)
+            return {"vr": P(*s[:-1]), "vc": P(*(s[:-2] + s[-1:]))}
+        return {"v": pspec}
+
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        p_specs, is_leaf=lambda x: isinstance(x, P))
+    flat_f = treedef.flatten_up_to(opt_abs["f"])
+    f_specs = treedef.unflatten(
+        [fspec(s, f) for s, f in zip(flat_s, flat_f)])
+    return {"f": f_specs, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 stochastic rounding) for the cross-pod
+# all-reduce — demonstrates the distributed-optimization hook; applied via
+# shard_map over the pod axis in the train driver when enabled.
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x, key):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    scaled = x / scale
+    noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce(x, key, axis_name: str):
+    """int8-quantized psum along ``axis_name`` (use inside shard_map).  The
+    wire payload is 4x smaller; scales are reduced in fp32."""
+    q, scale = quantize_int8(x, key)
+    # dequantize-then-reduce keeps the math simple while modelling the
+    # 4x payload; a production impl reduces int8 payloads ring-wise.
+    xsum = jax.lax.psum(dequantize_int8(q, scale), axis_name)
+    return xsum

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: BCS block-sparse matmul  y = x @ W_sparse.
+
+The TPU executor for the paper's compiler contribution (§4.3): the grid
+iterates ONLY over surviving weight blocks — pruned blocks are never read
+from HBM nor multiplied.  The block-column index array is scalar-prefetched
+(SMEM) and drives the x BlockSpec index_map, the TPU analogue of
+PatDNN-style sparsity-baked codegen.
+
+Layout (from repro.core.bcs.pad_to_uniform_csc):
+  values (Nb, L, bk, bn)  surviving blocks per output column, zero-padded
+  k_idx  (Nb, L) int32    K-block index each slot reads from
+Grid: (M/bm, Nb, L) — L innermost so the fp32 VMEM accumulator tile is
+revisited; equal trip counts per (i, j) = the load-balance analogue of the
+paper's row reordering.  Epilogue (bias + activation) fuses into the final
+store (layer-fusion analogue, §A.1)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(k_idx, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act):
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0, 0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(l == n_l - 1)
+    def _store():
+        out = acc_ref[...]
+        if b_ref is not None:
+            out = out + b_ref[0].astype(jnp.float32)
+        if act == "silu":
+            out = out * jax.nn.sigmoid(out)
+        elif act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "act", "interpret"))
+def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
+               interpret=True):
+    """x (M, K) @ BCS-sparse W (K, N) -> (M, N).
+
+    values (Nb, L, bk, bn); k_idx (Nb, L) int32.  interpret=True runs the
+    kernel body on CPU (this container); on TPU pass interpret=False."""
+    M, K = x.shape
+    Nb, L, bk, bn = values.shape
+    N = Nb * bn
+    bm = min(bm, M)
+    assert M % bm == 0 and K % bk == 0
+
+    grid = (M // bm, Nb, L)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, l, kidx: (i, kidx[j, l])),
+        pl.BlockSpec((1, 1, bk, bn), lambda i, j, l, kidx: (j, l, 0, 0)),
+    ]
+    args = [x, values]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, l, kidx: (0, j)))
+        args.append(bias.reshape(1, N))
+        kern = functools.partial(_kernel, n_l=L, act=act)
+    else:
+        def kern(k_idx_ref, x_ref, w_ref, o_ref, acc_ref):
+            _kernel(k_idx_ref, x_ref, w_ref, None, o_ref, acc_ref,
+                    n_l=L, act=act)
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, l, kidx: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(k_idx, *args)

@@ -1,0 +1,46 @@
+"""Jit'd dispatch layer over the sparse executor paths.
+
+``sparse_linear`` picks the execution strategy the compiler framework
+would emit for a pruned layer:
+  density == 1        -> dense XLA matmul
+  block-sparse (BCS)  -> Pallas bsr_matmul (skips pruned blocks)
+  otherwise           -> masked-dense matmul (mask fused by XLA)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bcs as BCS
+from repro.kernels.bsr_matmul import bsr_matmul
+from repro.kernels import ref
+
+
+def pack(w, mask, block=(128, 128)):
+    """Host-side packing of a pruned weight into the kernel layout."""
+    b = BCS.from_dense(np.asarray(w), np.asarray(mask), block)
+    values, k_idx, nnz = BCS.pad_to_uniform_csc(b)
+    return {"values": values, "k_idx": k_idx, "nnz": nnz,
+            "block": block, "shape": b.shape, "density": b.density}
+
+
+def sparse_linear(x, packed=None, w=None, mask=None, bias=None, act="none",
+                  bm=128, interpret=True):
+    """x (..., K) -> (..., N) through whichever path applies."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    if packed is not None and M % min(bm, M) == 0:
+        y = bsr_matmul(x2, packed["values"], packed["k_idx"], bias=bias,
+                       bm=min(bm, M), act=act, interpret=interpret)
+    else:
+        y = ref.masked_matmul_ref(
+            x2, w, mask if mask is not None else jnp.ones_like(w),
+            bias=bias, act=act)
+    return y.reshape(*lead, y.shape[-1])
+
+
+def flops_saved(packed) -> float:
+    """Fraction of dense matmul FLOPs skipped by the kernel."""
+    return 1.0 - packed["density"]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the BCS block-sparse matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_to_dense(values, k_idx, K):
+    """(Nb, L, bk, bn) + (Nb, L) -> dense (K, N).  Scatter-ADD so the
+    zero-padding slots (k_idx 0, zero values) are harmless."""
+    Nb, L, bk, bn = values.shape
+    Kb = K // bk
+    dense_blocks = jnp.zeros((Kb, Nb, bk, bn), values.dtype)
+    jj = jnp.broadcast_to(jnp.arange(Nb)[:, None], (Nb, L))
+    dense_blocks = dense_blocks.at[k_idx.reshape(-1),
+                                   jj.reshape(-1)].add(
+        values.reshape(Nb * L, bk, bn))
+    return dense_blocks.transpose(0, 2, 1, 3).reshape(K, Nb * bn)
+
+
+def bsr_matmul_ref(x, values, k_idx, bias=None, act="none"):
+    w = uniform_to_dense(values, k_idx, x.shape[1])
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if act == "silu":
+        y = y * jax.nn.sigmoid(y)
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def masked_matmul_ref(x, w, mask, bias=None, act="none"):
+    y = jnp.dot(x.astype(jnp.float32),
+                (w * mask.astype(w.dtype)).astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if act == "silu":
+        y = y * jax.nn.sigmoid(y)
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import: jax locks the
+# device count on first init.  512 placeholder host devices let
+# jax.make_mesh build the production meshes (16x16 single-pod, 2x16x16
+# multi-pod) for compile-only dry-runs.  Never set this globally — smoke
+# tests and benches must see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+cell with ShapeDtypeStruct inputs (zero allocation), record
+memory_analysis / cost_analysis / per-collective byte counts to JSON.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.optim.adamw import make_optimizer
+from repro.train.trainer import make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic from partitioned HLO.  Accounting:
+    all-reduce counts 2x operand (reduce-scatter + all-gather phases);
+    all-gather / all-to-all count result bytes; reduce-scatter and
+    collective-permute count operand bytes."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        op = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f" {c}-start(" in line:
+                op = c
+                break
+        if op is None:
+            continue
+        # optimized HLO references operands by NAME only; the (possibly
+        # tuple) RESULT shape(s) on the lhs of the op name carry the sizes.
+        lhs = line.split(f" {op}", 1)[0]
+        shapes = _SHAPE_RE.findall(lhs)
+        if not shapes:
+            continue
+        result_b = sum(_shape_bytes(d, s) for d, s in shapes)
+        # per-device wire traffic: all-reduce ~ 2x payload (RS+AG phases);
+        # all-gather/all-to-all/permute ~ result bytes; reduce-scatter's
+        # result is the scattered shard (documented underestimate).
+        out[op] += 2 * result_b if op == "all-reduce" else result_b
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def _batch_specs(cfg, shape_id, mesh, dist):
+    b = dist.batch_axes if dist.batch_axes else None
+    mdl = "model"
+    kind = SHAPES[shape_id]["kind"]
+    if kind in ("train", "prefill"):
+        specs = {"tokens": P(b, None)}
+        if kind == "train":
+            specs["labels"] = P(b, None)
+        if cfg.family in ("encdec", "vlm"):
+            specs["frontend"] = P(b, None, None)
+        return specs
+    # decode: token/pos + cache
+    cache_abs = configs.input_specs(cfg, shape_id)["cache"]
+
+    def cache_spec(path, leaf):
+        s = SH.M.path_str(path)
+        if leaf.ndim == 5:            # (L, B, S, KV, hd) or ssm h (L,B,H,P,N)
+            if "/h" in s or s.endswith("h"):
+                return P(None, b, mdl, None, None)
+            return P(None, b, mdl, None, None)
+        if leaf.ndim == 4:            # conv state (L, B, W-1, C)
+            return P(None, b, None, mdl)
+        if leaf.ndim == 2:            # pos (L, S)
+            return P(None, None)
+        return P(*([None] * leaf.ndim))
+
+    cache_specs = jax.tree_util.tree_map_with_path(cache_spec, cache_abs)
+    return {"token": P(b, None), "pos": P(b, None), "cache": cache_specs}
+
+
+def build_step(cfg, shape_id, mesh):
+    """Returns (fn, arg_specs(ShapeDtypeStructs), in_shardings)."""
+    sh = SHAPES[shape_id]
+    # train AND prefill shard FSDP/ZeRO-3 (1M tokens: activations >>
+    # weights, §Perf granite iter 1); decode lowers with TP (weights
+    # stationary, one token).  Disaggregated serving re-shards the cache
+    # between the prefill and decode pools.
+    mode = cfg.train_shard_mode if sh["kind"] in ("train", "prefill") \
+        else "tp"
+    dist = SH.make_dist(mesh, cfg, sh["batch"], mode=mode)
+    params_abs = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    p_specs = SH.param_specs(params_abs, cfg, mesh, mode=mode)
+    p_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), p_specs)
+    ispecs = configs.input_specs(cfg, shape_id)
+    b_specs = _batch_specs(cfg, shape_id, mesh, dist)
+    b_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), b_specs)
+    kind = sh["kind"]
+
+    if kind == "train":
+        opt_init, train_step = make_train_step(cfg, dist=dist)
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        o_specs = SH.opt_state_specs(opt_abs, p_specs, cfg.optimizer)
+        o_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                         o_specs)
+
+        def fn(params, opt_state, batch):
+            return train_step(params, opt_state, batch)
+        args = (params_abs, ispecs)  # placeholder, replaced below
+        args = (params_abs, opt_abs, ispecs)
+        rep = NamedSharding(mesh, P())
+        out_shardings = (p_shard, o_shard,
+                         {"loss": rep, "grad_norm": rep})
+        shardings = (p_shard, o_shard, b_shard)
+        donate = (0, 1)     # params + opt state update in place
+        return fn, args, shardings, donate, out_shardings
+    elif kind == "prefill":
+        from repro.serve.engine import prefill
+
+        def fn(params, batch):
+            return prefill(params, cfg, batch["tokens"],
+                           frontend=batch.get("frontend"), dist=dist)
+        args = (params_abs, ispecs)
+        shardings = (p_shard, b_shard)
+        donate = ()
+    else:  # decode
+
+        def fn(params, batch):
+            return T.decode_step(params, cfg, batch["token"], batch["cache"],
+                                 batch["pos"], dist=dist)
+        args = (params_abs, ispecs)
+        shardings = (p_shard, b_shard)
+        donate = (1,)       # KV/SSM cache updated in place
+    return fn, args, shardings, donate, None
+
+
+def _probe_cfgs(cfg):
+    """Two reduced-depth UNROLLED configs (u1, u2 layer-units) for cost
+    extrapolation: XLA cost analysis counts lax.scan bodies once, so the
+    true per-step cost is  c(u1) + (units-1) * (c(u2) - c(u1))."""
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_interval
+        units = cfg.n_layers // k
+        return (cfg.replace(n_layers=k, unroll_layers=True, remat="none"),
+                cfg.replace(n_layers=2 * k, unroll_layers=True,
+                            remat="none"), units)
+    if cfg.family == "encdec":
+        assert cfg.n_layers == cfg.n_enc_layers
+        return (cfg.replace(n_layers=1, n_enc_layers=1, unroll_layers=True,
+                            remat="none"),
+                cfg.replace(n_layers=2, n_enc_layers=2, unroll_layers=True,
+                            remat="none"), cfg.n_layers)
+    return (cfg.replace(n_layers=1, unroll_layers=True, remat="none"),
+            cfg.replace(n_layers=2, unroll_layers=True, remat="none"),
+            cfg.n_layers)
+
+
+def _compile_costs(cfg, shape_id, mesh):
+    fn, args, shardings, donate, out_sh = build_step(cfg, shape_id, mesh)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+    flops = cost.get("flops", 0.0) if isinstance(cost, dict) else 0.0
+    byt = cost.get("bytes accessed", 0.0) if isinstance(cost, dict) else 0.0
+    return {"flops": flops, "bytes": byt, "coll": coll["total"],
+            "coll_by_op": {k: coll[k] for k in _COLLECTIVES}}
+
+
+def probe_extrapolated(cfg, shape_id, mesh) -> dict:
+    """True per-device per-step cost via L=1/L=2 unrolled probes."""
+    c1_cfg, c2_cfg, units = _probe_cfgs(cfg)
+    c1 = _compile_costs(c1_cfg, shape_id, mesh)
+    c2 = _compile_costs(c2_cfg, shape_id, mesh)
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        out[k] = c1[k] + (units - 1) * (c2[k] - c1[k])
+    out["coll_by_op"] = {
+        k: c1["coll_by_op"][k]
+        + (units - 1) * (c2["coll_by_op"][k] - c1["coll_by_op"][k])
+        for k in _COLLECTIVES}
+    out["units"] = units
+    out["probe_l1"] = {k: c1[k] for k in ("flops", "bytes", "coll")}
+    out["probe_l2"] = {k: c2[k] for k in ("flops", "bytes", "coll")}
+    # remat correction: the probes run without remat; with remat="full" the
+    # backward pass recomputes each layer forward (~ +1/3 of train flops)
+    if SHAPES[shape_id]["kind"] == "train" and cfg.remat == "full":
+        out["flops_remat"] = out["flops"] * 4.0 / 3.0
+    return out
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool, save=True,
+             verbose=True, probe=True) -> dict:
+    cfg = configs.get(arch)
+    ok, why = configs.cell_is_supported(cfg, shape_id)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_id, "mesh": mesh_name}
+    if not ok:
+        rec["status"] = why
+        if save:
+            _save(rec)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, shardings, donate, out_sh = build_step(cfg, shape_id, mesh)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec.update({
+        "status": "OK",
+        "n_devices": mesh.size,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals")
+                 if isinstance(cost, dict) and k in cost},
+        "collectives": coll,
+    })
+    if not isinstance(cost, dict):
+        rec["cost"] = {"raw": str(cost)[:500]}
+    if probe and not multi_pod:
+        # single-pod only: the roofline table reads these (§Roofline)
+        try:
+            rec["extrapolated"] = probe_extrapolated(cfg, shape_id, mesh)
+        except Exception as e:  # noqa: BLE001
+            rec["extrapolated"] = {"error": str(e)[:500]}
+    if verbose:
+        print(f"[{arch} × {shape_id} × {mesh_name}] OK "
+              f"compile={t_compile:.1f}s flops={rec['cost'].get('flops')} "
+              f"coll={coll['total']/1e9:.2f}GB "
+              f"temp={rec['memory']['temp_bytes']}")
+        print("  memory_analysis:", rec["memory"])
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    p = OUT_DIR / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    p.write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    arch_ids = list(configs.ALIASES) if (args.all or not args.arch) \
+        else [args.arch]
+    shape_ids = list(SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in arch_ids:
+        for shape_id in shape_ids:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                if args.skip_existing and (
+                        OUT_DIR / f"{arch}__{shape_id}__{mesh_name}.json"
+                        ).exists():
+                    continue
+                try:
+                    run_cell(arch, shape_id, mp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    print(f"[{arch} × {shape_id} × "
+                          f"{'multi' if mp else 'single'}] FAIL: {e}")
+                    failures.append((arch, shape_id, mp, str(e)[:2000]))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f[:3], f[3][:200])
+        raise SystemExit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh factory.  A FUNCTION (never a module-level constant) so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic reshapes, tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names — lets smoke tests run
+    the exact sharded code path on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,33 @@
+"""Generate the §Roofline table from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.roofline_report
+writes experiments/roofline.md + roofline.json and prints the table."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core import roofline as RL
+
+BASE = pathlib.Path(__file__).resolve().parents[3] / "experiments"
+
+
+def main():
+    rows = RL.load_and_analyze(BASE / "dryrun")
+    md = RL.to_markdown(rows)
+    (BASE / "roofline.md").write_text(md)
+    (BASE / "roofline.json").write_text(json.dumps(rows, indent=1,
+                                                   default=float))
+    print(md)
+    ok = [r for r in rows if r.get("status") == "OK"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["t_collective_s"] /
+                   max(r["step_time_bound_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} × "
+              f"{worst['shape']} ({worst['roofline_fraction']:.2f})")
+        print(f"most collective-bound:  {coll['arch']} × {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Small VGG/MobileNet-style conv nets for the paper-faithful CONV-layer
+experiments (Fig 5/7, Table 2/4 reproductions run on these + synthetic
+CIFAR-like data).  Weight layout: (out_ch, in_ch, kh, kw) = the paper's
+(P, Q, Kh, Kw), so block-punched / pattern masks apply directly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as M
+
+# (name, out_ch, kh, kw, stride, depthwise)
+VGG_TINY = [
+    ("c1", 32, 3, 3, 1, False),
+    ("c2", 64, 3, 3, 2, False),
+    ("c3", 64, 3, 3, 1, False),
+    ("c4", 128, 3, 3, 2, False),
+    ("c5", 128, 1, 1, 1, False),
+    ("c6", 128, 3, 3, 1, False),
+]
+
+MOBILE_TINY = [
+    ("c1", 32, 3, 3, 1, False),
+    ("dw2", 32, 3, 3, 1, True),
+    ("pw2", 64, 1, 1, 1, False),
+    ("dw3", 64, 3, 3, 2, True),
+    ("pw3", 128, 1, 1, 1, False),
+    ("c4", 128, 5, 5, 1, False),   # a non-3x3 kernel, per the paper's point
+]
+
+
+def convnet_init(key, arch=VGG_TINY, in_ch=3, n_classes=10,
+                 dtype=jnp.float32):
+    params = {}
+    c = in_ch
+    names = [a[0] for a in arch] + ["fc"]
+    ks = M.split_keys(key, names)
+    for (name, out, kh, kw, stride, dw) in arch:
+        if dw:
+            w = M.dense_init(ks[name], (c, 1, kh, kw), dtype,
+                             scale=(kh * kw) ** -0.5)
+        else:
+            w = M.dense_init(ks[name], (out, c, kh, kw), dtype,
+                             scale=(c * kh * kw) ** -0.5)
+            c = out
+        params[name] = {"w": w, "b": jnp.zeros((c,), dtype)}
+    params["fc"] = {"w": M.dense_init(ks["fc"], (c, n_classes), dtype),
+                    "b": jnp.zeros((n_classes,), dtype)}
+    return params
+
+
+def convnet_apply(params, x, arch=VGG_TINY, masks=None):
+    """x: (B, H, W, Cin) -> logits (B, n_classes)."""
+    m = masks or {}
+    for (name, out, kh, kw, stride, dw) in arch:
+        w = params[name]["w"]
+        mk = m.get(name)
+        if mk is not None:
+            w = w * mk.astype(w.dtype)
+        if dw:
+            # (C,1,kh,kw) -> depthwise
+            kernel = w.transpose(2, 3, 1, 0)      # (kh,kw,1,C)
+            y = jax.lax.conv_general_dilated(
+                x, kernel, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=x.shape[-1])
+        else:
+            kernel = w.transpose(2, 3, 1, 0)      # (kh,kw,Cin,Cout)
+            y = jax.lax.conv_general_dilated(
+                x, kernel, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(y + params[name]["b"])
+    x = jnp.mean(x, axis=(1, 2))                  # global average pool
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def synthetic_images(key, batch, n_classes=10, size=16, hard=False):
+    """CIFAR-like synthetic classification (position-INVARIANT class
+    signals — the readout is global-average-pooled).
+
+    ``hard=False`` (the paper's 'easy dataset' regime): the class sets a
+    distinct 3-channel color mixture — nearly linear in channel means,
+    solvable to high accuracy by any over-parameterized net.
+    ``hard=True``: channel means are identical across classes; the class
+    only sets the spatial texture FREQUENCY — needs real (conv) feature
+    extraction, so pruning damage shows (the 'hard dataset' regime)."""
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (batch,), 0, n_classes)
+    yy, xx = jnp.mgrid[0:size, 0:size].astype(jnp.float32) / size
+    if hard:
+        freq = 1.0 + labels.astype(jnp.float32) * 0.5      # 1.0 .. 5.5
+        tex = jnp.sin(2 * jnp.pi * freq[:, None, None] * xx[None]) * \
+            jnp.sin(2 * jnp.pi * freq[:, None, None] * yy[None])
+        img = jnp.repeat(tex[..., None], 3, axis=-1)
+        noise = jax.random.normal(k2, img.shape) * 0.3
+        img = img + noise
+    else:
+        angles = labels.astype(jnp.float32) / n_classes * 2 * jnp.pi
+        mix = jnp.stack([jnp.cos(angles), jnp.sin(angles),
+                         jnp.cos(2 * angles)], axis=-1)     # (B, 3)
+        smooth = 0.5 + 0.5 * jnp.sin(2 * jnp.pi * (xx + yy))[None]
+        img = mix[:, None, None, :] * smooth[..., None]
+        noise = jax.random.normal(k2, img.shape) * 0.3
+        img = img + noise
+    return img.astype(jnp.float32), labels
+
+
+def classify_loss(params, batch, arch=VGG_TINY, masks=None):
+    logits = convnet_apply(params, batch[0], arch, masks)
+    labels = batch[1]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def accuracy(params, batch, arch=VGG_TINY, masks=None):
+    logits = convnet_apply(params, batch[0], arch, masks)
+    return jnp.mean((jnp.argmax(logits, -1) == batch[1]).astype(jnp.float32))

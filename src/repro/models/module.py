@@ -1,0 +1,96 @@
+"""Minimal pure-JAX module utilities: param init, path-rule sharding specs.
+
+No flax/haiku in this environment; models are (init, apply) function pairs over
+nested-dict param pytrees.  Sharding is assigned by *path pattern rules* so one
+table per architecture family keeps every param's PartitionSpec in one place.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict of jnp arrays
+
+
+def dense_init(key, shape, dtype=jnp.bfloat16, scale: float | None = None):
+    """Truncated-normal (fan-in) init used for all projection matrices."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, names: Iterable[str]) -> dict:
+    names = list(names)
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# Path-rule sharding
+# ---------------------------------------------------------------------------
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_from_rules(params: Params, rules: list[tuple[str, P]],
+                    default: P = P()) -> Params:
+    """Build a PartitionSpec pytree matching ``params`` from (regex, spec) rules.
+
+    The first matching rule wins.  Specs are right-aligned to the array rank:
+    a rule spec ``P('data', 'model')`` applied to a rank-3 (scanned) param
+    becomes ``P(None, 'data', 'model')``.
+    """
+    compiled = [(re.compile(pat), spec) for pat, spec in rules]
+
+    def assign(path, leaf):
+        s = path_str(path)
+        for pat, spec in compiled:
+            if pat.search(s):
+                pad = leaf.ndim - len(spec)
+                if pad < 0:  # spec longer than rank: trim leading entries
+                    return P(*spec[-leaf.ndim:])
+                return P(*([None] * pad + list(spec)))
+        pad = leaf.ndim - len(default)
+        return P(*([None] * max(pad, 0) + list(default)))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

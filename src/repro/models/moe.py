@@ -1,0 +1,88 @@
+"""Mixture-of-Experts FFN with capacity-based one-hot dispatch (GShard-style).
+
+Sharding: experts sharded over the model axis when n_experts % tp == 0
+(kimi-k2: 384/16 = 24 experts/shard, EP) else the expert hidden dim is
+tensor-parallel (mixtral: 8 experts, d_ff 14336/16).  The dispatch einsum
+resharding (tokens data-sharded -> experts model-sharded) is GSPMD's
+all-to-all — the paper's per-expert block pruning shrinks exactly this
+expert-side compute and the expert weight footprint.
+
+Router stays dense and fp32 — the LM-family analogue of the paper's
+"don't prune tiny, sensitive layers" depthwise rule (§5.2.4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as M
+from repro.models import layers as L
+
+
+def moe_init(key, d_model, d_ff, n_experts, dtype=jnp.bfloat16):
+    ks = M.split_keys(key, ["router", "gate", "up", "down"])
+    return {
+        "router": {"w": M.dense_init(ks["router"], (d_model, n_experts),
+                                     jnp.float32)},
+        "gate": {"w": M.dense_init(ks["gate"], (n_experts, d_model, d_ff), dtype)},
+        "up": {"w": M.dense_init(ks["up"], (n_experts, d_model, d_ff), dtype)},
+        "down": {"w": M.dense_init(ks["down"], (n_experts, d_ff, d_model), dtype)},
+    }
+
+
+def _dispatch_tensors(logits, top_k, capacity):
+    """logits (G,S,E) -> dispatch (G,S,E,C) one-hot-ish, combine (G,S,E,C)."""
+    G, S, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)             # (G,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    se_oh = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2)  # (G,S,E)
+    pos = jnp.cumsum(se_oh, axis=1) * se_oh - 1.0            # (G,S,E) slot index
+    keep = (pos >= 0) & (pos < capacity)
+    disp = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                          dtype=jnp.float32) * keep[..., None]  # (G,S,E,C)
+    weight_se = jnp.einsum("gske,gsk->gse",
+                           jax.nn.one_hot(idx, E, dtype=jnp.float32),
+                           gate_vals)
+    combine = disp * weight_se[..., None]
+    # load-balance aux loss (Switch): E * mean(frac_tokens * frac_probs)
+    frac_tokens = jnp.mean(se_oh, axis=(0, 1)) / top_k
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return disp, combine, aux
+
+
+def moe(params, x, *, top_k, capacity_factor=1.25, group=1024,
+        masks=None, dist=None):
+    """x: (B,S,D) -> (B,S,D), aux_loss.  Tokens regrouped to bound the
+    dispatch tensor to (G, group, E, C)."""
+    m = masks or {}
+    B, S, D = x.shape
+    E = params["router"]["w"].shape[-1]
+    T = B * S
+    Sg = min(group, T)
+    G = T // Sg
+    xt = x.reshape(G, Sg, D)
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"]["w"])
+    C = max(4, int(Sg * top_k / E * capacity_factor))
+    C = min(C, Sg)
+    disp, combine, aux = _dispatch_tensors(logits, top_k, C)
+
+    dt = x.dtype
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp.astype(dt), xt)  # a2a here
+    if dist is not None:
+        expert_in = dist.shard_experts(expert_in)
+
+    def mw(name):
+        w = params[name]["w"]
+        mk = m.get(name)
+        return w * mk.astype(w.dtype) if mk is not None else w
+
+    g = jnp.einsum("gecd,edf->gecf", expert_in, mw("gate"))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, mw("up"))
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("gecf,efd->gecd", h, mw("down"))
+    out = jnp.einsum("gecd,gsec->gsd", expert_out, combine.astype(dt))
+    return out.reshape(B, S, D), aux

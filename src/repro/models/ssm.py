@@ -1,0 +1,162 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked quadratic-within-chunk /
+linear-across-chunks algorithm, plus the O(1)-state decode step used for the
+``decode_32k`` / ``long_500k`` shapes (sub-quadratic: state is seq-independent).
+
+Pruning applicability (paper §5.2.4 analogue, see DESIGN.md): in/out
+projections are block-based-prunable FC layers; the depthwise conv1d and the
+small SSD parameters (A, D, dt bias) are never pruned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as M
+from repro.models import layers as L
+
+
+def ssm_init(key, d_model, d_state, headdim=64, expand=2, conv_width=4,
+             n_groups=1, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    ks = M.split_keys(key, ["in_proj", "conv", "out_proj", "A", "dt"])
+    proj_out = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    return {
+        "in_proj": L.linear_init(ks["in_proj"], d_model, proj_out, dtype),
+        "conv": L.conv1d_init(ks["conv"], conv_dim, conv_width, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": L.rmsnorm_init(None, d_inner, dtype),
+        "out_proj": L.linear_init(ks["out_proj"], d_inner, d_model, dtype),
+    }
+
+
+def _dims(params, d_model):
+    d_inner = params["out_proj"]["w"].shape[0]
+    n_heads = params["A_log"].shape[0]
+    headdim = d_inner // n_heads
+    conv_dim = params["conv"]["w"].shape[1]
+    d_state = (conv_dim - d_inner) // 2  # n_groups == 1
+    return d_inner, n_heads, headdim, d_state
+
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums (log-decay)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_scan(xh, dt, A, Bm, Cm, chunk=64):
+    """Chunked SSD.  xh (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative;
+    Bm, Cm (B,S,H,N) (groups already broadcast).  Returns (B,S,H,P) and the
+    final state (B,H,P,N)."""
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    c = S // chunk
+
+    def r(t, *tail):  # (B,S,...) -> (B,c,chunk,...)
+        return t.reshape(B, c, chunk, *tail)
+
+    xc = r(xh, H, Pd).astype(jnp.float32)
+    dtc = r(dt, H).astype(jnp.float32)
+    Bc = r(Bm, H, N).astype(jnp.float32)
+    Cc = r(Cm, H, N).astype(jnp.float32)
+
+    dA = dtc * A  # (B,c,Q,H)
+    dA = dA.transpose(0, 1, 3, 2)               # (B,c,H,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    Ldec = jnp.exp(_segsum(dA))                 # (B,c,H,Q,Q)
+    xdt = xc * dtc[..., None]                   # (B,c,Q,H,P)
+    y_diag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp", Cc, Bc, Ldec, xdt)
+
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)   # (B,c,H,Q)
+    states = jnp.einsum("bckhn,bchk,bckhp->bchpn", Bc, decay_states, xdt)
+    chunk_decay = jnp.exp(dA_cs[..., -1])             # (B,c,H)
+
+    def body(h, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                # emit state ENTERING chunk
+
+    h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+    h_last, prev_states = jax.lax.scan(
+        body, h0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,c,H,P,N)
+
+    state_decay = jnp.exp(dA_cs)                        # (B,c,H,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(B, S, H, Pd)
+    return y, h_last
+
+
+def ssm(params, x, *, masks=None, dist=None, chunk=64):
+    """Full-sequence mamba2 mixer.  x: (B,S,D) -> (B,S,D), plus the decode
+    state dict {h: (B,H,P,N) f32, conv: (B,width-1,conv_dim)} — conv holds
+    the last pre-conv inputs so a following decode step sees the exact
+    causal-conv window."""
+    m = masks or {}
+    B, S, D = x.shape
+    d_inner, H, Pd, N = _dims(params, D)
+    width = params["conv"]["w"].shape[0]
+    zxbcdt = L.linear(params["in_proj"], x, m.get("in_proj"))
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    conv_tail = xbc[:, max(S - (width - 1), 0):, :]
+    if S < width - 1:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (width - 1 - S, 0), (0, 0)))
+    xbc = L.causal_conv1d(params["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    xh, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xh = xh.reshape(B, S, H, Pd)
+    Bm = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    Cm = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    if dist is not None:
+        xh = dist.shard_heads(xh)
+    y, h_last = _ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk)
+    y = y + xh.astype(jnp.float32) * params["D"][:, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.linear(params["out_proj"], y, m.get("out_proj"))
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def ssm_decode(params, x, state, *, masks=None, dist=None):
+    """One-token decode.  state = dict(h=(B,H,P,N) f32, conv=(B,W-1,Cdim))."""
+    m = masks or {}
+    B, _, D = x.shape
+    d_inner, H, Pd, N = _dims(params, D)
+    zxbcdt = L.linear(params["in_proj"], x[:, 0, :], m.get("in_proj"))
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    conv_state, xbc = L.conv1d_step(params["conv"], state["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    xh, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xh = xh.reshape(B, H, Pd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                               # (B,H)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    h = state["h"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bf)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cf) + xh * params["D"][:, None]
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.linear(params["out_proj"], y, m.get("out_proj"))
+    return out[:, None, :], {"h": h, "conv": conv_state}
+
+
+def ssm_state_init(params, batch, d_model, dtype=jnp.bfloat16):
+    d_inner, H, Pd, N = _dims(params, d_model)
+    conv_dim = params["conv"]["w"].shape[1]
+    width = params["conv"]["w"].shape[0]
+    return {"h": jnp.zeros((batch, H, Pd, N), jnp.float32),
+            "conv": jnp.zeros((batch, width - 1, conv_dim), dtype)}

@@ -1,0 +1,109 @@
+"""Optimizers (pure JAX): AdamW with fp32 state, and Adafactor (factored
+second moment, no first moment) for the >=70B archs where Adam state cannot
+fit HBM.  Plus cosine LR schedule and global-norm clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+def cosine_schedule(step, base_lr, warmup=100, total=10000, min_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * (step + 1) / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                grads), gn
+
+
+# -- AdamW -------------------------------------------------------------------
+
+def adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": tmap(z, params), "v": tmap(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    new_m = tmap(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                 grads, state["m"])
+    new_v = tmap(lambda g, v: b2 * v + (1 - b2) *
+                 jnp.square(g.astype(jnp.float32)), grads, state["v"])
+
+    def upd(p, m, v):
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        delta = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_p = tmap(upd, params, new_m, new_v)
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# -- Adafactor ----------------------------------------------------------------
+
+def adafactor_init(params):
+    def st(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": tmap(st, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def _map3(fn, grads, fstate, params):
+    """tree_map over params-structure with fstate's per-param dicts as leaves."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_f = treedef.flatten_up_to(fstate)
+    outs = [fn(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_f = treedef.unflatten([o[1] for o in outs])
+    return new_p, new_f
+
+
+def adafactor_apply(grads, state, params, lr, decay=0.99, eps=1e-30,
+                    clip_thresh=1.0):
+    step = state["step"] + 1
+
+    def upd(g, f, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = decay * f["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * f["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + 1e-12)
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            u = g / (jnp.sqrt(v) + 1e-12)
+            nf = {"v": v}
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / clip_thresh)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nf
+
+    new_p, new_f = _map3(upd, grads, state["f"], params)
+    return new_p, {"f": new_f, "step": step}
+
+
+def make_optimizer(kind: str):
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "adafactor":
+        return adafactor_init, adafactor_apply
+    raise ValueError(kind)

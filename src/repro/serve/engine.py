@@ -1,0 +1,149 @@
+"""Serving: prefill (forward pass that also emits the per-layer caches) and
+the batched decode loop.  ``decode_step`` itself lives in models/transformer
+(it is what the decode_* dry-run shapes lower)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+tmap = jax.tree_util.tree_map
+
+
+def _window_kv(k, v, S_len, window):
+    if window and window < S_len:
+        k = k[:, S_len - window:]
+        v = v[:, S_len - window:]
+        pos = jnp.arange(S_len - window, S_len, dtype=jnp.int32)
+    else:
+        pos = jnp.arange(S_len, dtype=jnp.int32)
+    return k, v, pos
+
+
+def prefill(params, cfg: ArchConfig, tokens, frontend=None, dist=None):
+    """tokens (B,S) -> (last-token logits (B,1,V), cache matching init_cache)."""
+    B, Sq = tokens.shape
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    x = L.embed(params["embed"], tokens)
+    if dist is not None:
+        x = dist.shard_activations(x)
+    fam = cfg.family
+    W = cfg.sliding_window
+
+    if fam in ("dense", "moe", "hybrid"):
+        def body(carry, lp):
+            h, = carry
+            h, _, c = T._layer_fwd(lp, h, positions, cfg, fam, dist=dist,
+                                   collect_cache=True)
+            k, v, pos = _window_kv(c["k"], c["v"], Sq, W)
+            out_c = {"k": k, "v": v, "pos": pos}
+            if fam == "hybrid":
+                hn = L.rmsnorm(lp["ln1"], h)  # recompute state cheaply
+                _, st = S.ssm(lp["ssm"], hn, dist=dist)
+                out_c = (out_c, st)
+            return (h,), out_c
+        (x,), caches = T.maybe_scan(body, (x,), params["layers"],
+                                    cfg.unroll_layers)
+        if fam == "hybrid":
+            cache = {"kv": caches[0], "ssm": caches[1]}
+        else:
+            cache = {"kv": caches}
+    elif fam == "ssm":
+        def body(carry, lp):
+            h, = carry
+            hn = L.rmsnorm(lp["ln1"], h)
+            out, st = S.ssm(lp["ssm"], hn, dist=dist)
+            return (h + out,), st
+        (x,), st = T.maybe_scan(body, (x,), params["layers"],
+                                cfg.unroll_layers)
+        cache = {"ssm": st}
+    elif fam == "encdec":
+        # encode once; decoder prefill caches self-KV and cross-KV
+        enc_pos = jnp.arange(frontend.shape[1], dtype=jnp.int32)
+
+        def enc_body(carry, lp):
+            h, = carry
+            att, _ = A.mha(lp["attn"], L.rmsnorm(lp["ln1"], h), enc_pos,
+                           cfg.n_heads, cfg.n_kv_heads, cfg.hd, causal=False,
+                           dist=dist, shard=cfg.attn_shard)
+            h = h + att
+            h = h + L.ffn(lp["ffn"], L.rmsnorm(lp["ln2"], h))
+            return (h,), None
+        (memory,), _ = T.maybe_scan(enc_body, (frontend.astype(x.dtype),),
+                                    params["enc"], cfg.unroll_layers)
+        memory = L.rmsnorm(params["norm_e"], memory)
+
+        def body(carry, lp):
+            h, = carry
+            h, _, c = T._layer_fwd(lp, h, positions, cfg, "xdec", dist=dist,
+                                   memory=memory, collect_cache=True)
+            pos = jnp.arange(Sq, dtype=jnp.int32)
+            return (h,), ({"k": c["k"], "v": c["v"], "pos": pos},
+                          c["xk"], c["xv"])
+        (x,), (kv, xk, xv) = T.maybe_scan(body, (x,), params["dec"],
+                                          cfg.unroll_layers)
+        cache = {"kv": kv, "xk": xk, "xv": xv}
+    elif fam == "vlm":
+        memory = frontend.astype(x.dtype)
+        k = cfg.cross_attn_interval
+
+        def group_body(carry, gp):
+            h, = carry
+
+            def self_body(hc, lp):
+                hh, = hc
+                hh, _, c = T._layer_fwd(lp, hh, positions, cfg, "dense",
+                                        dist=dist, collect_cache=True)
+                return (hh,), {"k": c["k"], "v": c["v"],
+                               "pos": jnp.arange(Sq, dtype=jnp.int32)}
+            (h,), kv_self = T.maybe_scan(self_body, (h,), gp["selfs"],
+                                         cfg.unroll_layers)
+            hn = L.rmsnorm(gp["cross"]["ln1"], h)
+            xa, xkv = A.mha(gp["cross"]["xattn"], hn, positions, cfg.n_heads,
+                            cfg.n_kv_heads, cfg.hd, dist=dist,
+                            shard=cfg.attn_shard, memory=memory)
+            h = h + jnp.tanh(gp["cross"]["gate"]).astype(h.dtype) * xa
+            h = h + L.ffn(gp["cross"]["ffn"], L.rmsnorm(gp["cross"]["ln2"], h))
+            return (h,), (kv_self, xkv[0], xkv[1])
+        (x,), (kv_self, xk, xv) = T.maybe_scan(group_body, (x,),
+                                               params["groups"],
+                                               cfg.unroll_layers)
+        n_groups = cfg.n_layers // k
+        kv_self = tmap(lambda a: a.reshape((n_groups * (k - 1),) + a.shape[2:]),
+                       kv_self)
+        cache = {"kv_self": kv_self, "xk": xk, "xv": xv}
+    else:
+        raise ValueError(fam)
+
+    x = L.rmsnorm(params["norm_f"], x[:, -1:, :])
+    logits = L.unembed(params["head"], x)
+    return logits, cache
+
+
+def generate(params, cfg: ArchConfig, tokens, n_new, frontend=None,
+             dist=None, temperature=0.0, key=None):
+    """Greedy/temperature sampling loop over jitted decode_step."""
+    B, Sq = tokens.shape
+    logits, cache = jax.jit(
+        lambda p, t, f: prefill(p, cfg, t, frontend=f, dist=dist)
+    )(params, tokens, frontend)
+    step_fn = jax.jit(
+        lambda p, tok, c, pos: T.decode_step(p, cfg, tok, c, pos, dist=dist))
+    out = []
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(n_new):
+        out.append(tok)
+        pos = jnp.full((B, 1), Sq + i, jnp.int32)
+        logits, cache = step_fn(params, tok, cache, pos)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1, :] / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,80 @@
+"""Training step factory: loss (+MoE aux, + the paper's reweighted
+group-lasso penalty when pruning is active), grad clip, optimizer update.
+
+Masked-dense semantics: pruning masks are applied to the params *before* the
+forward pass, so gradients are automatically masked and XLA fuses the mask
+multiply into matmul operands (the training-time path; the BCS Pallas kernel
+is the serving-time path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim.adamw import (make_optimizer, cosine_schedule,
+                               clip_by_global_norm)
+
+tmap = jax.tree_util.tree_map
+
+
+def apply_masks(params, masks):
+    """masks is a full-structure tree: {0,1} arrays for prunable leaves,
+    scalar-1.0 sentinels elsewhere (see reweighted.masks_for_spec)."""
+    if masks is None:
+        return params
+    return tmap(lambda p, m: p if m.ndim == 0 else p * m.astype(p.dtype),
+                params, masks)
+
+
+def make_loss_fn(cfg: ArchConfig, dist=None, aux_weight=0.01,
+                 reweighted=None):
+    """reweighted: optional repro.core.reweighted.ReweightedConfig — adds the
+    paper's Eq.(1) penalty sum_i R(alpha_i, W_i)."""
+
+    def loss_fn(params, batch, masks=None, alphas=None):
+        p = apply_masks(params, masks)
+        logits, aux = T.forward(p, cfg, batch["tokens"],
+                                frontend=batch.get("frontend"), dist=dist)
+        ce = L.cross_entropy(logits, batch["labels"])
+        total = ce + aux_weight * aux
+        if reweighted is not None and alphas is not None:
+            from repro.core.reweighted import penalty
+            total = total + reweighted.lam * penalty(params, alphas,
+                                                     reweighted)
+        return total, ce
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, dist=None, lr=3e-4, reweighted=None,
+                    grad_accum=1, compress_cross_pod=False):
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+    loss_fn = make_loss_fn(cfg, dist=dist, reweighted=reweighted)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, masks=None, alphas=None):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (tot, ce), g = grad_fn(params, mb, masks, alphas)
+                return (tmap(jnp.add, gacc, g), lacc + ce), None
+            mbs = tmap(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, ce_sum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = tmap(lambda g: g / grad_accum, grads)
+            ce = ce_sum / grad_accum
+        else:
+            (tot, ce), grads = grad_fn(params, batch, masks, alphas)
+        grads, gnorm = clip_by_global_norm(grads)
+        lr_t = cosine_schedule(opt_state["step"], lr)
+        params, opt_state = opt_update(grads, opt_state, params, lr_t)
+        return params, opt_state, {"loss": ce, "grad_norm": gnorm}
+
+    return opt_init, train_step

@@ -1,0 +1,83 @@
+"""Config fidelity: every assigned architecture's published numbers are
+exactly what the framework instantiates (deliverable f)."""
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES
+
+# (arch, n_layers, d_model, n_heads, n_kv, d_ff, vocab, extras)
+ASSIGNED = [
+    ("seamless-m4t-large-v2", 24, 1024, 16, 16, 8192, 256206,
+     {"family": "encdec", "n_enc_layers": 24}),
+    ("yi-9b", 48, 4096, 32, 4, 11008, 64000, {"family": "dense"}),
+    ("granite-8b", 36, 4096, 32, 8, 14336, 49152, {"family": "dense"}),
+    ("minitron-8b", 32, 4096, 32, 8, 16384, 256000, {"family": "dense"}),
+    ("phi3-medium-14b", 40, 5120, 40, 10, 17920, 100352,
+     {"family": "dense"}),
+    ("mamba2-1.3b", 48, 2048, 0, 0, 0, 50280,
+     {"family": "ssm", "ssm_state": 128, "supports_long": True}),
+    ("mixtral-8x7b", 32, 4096, 32, 8, 14336, 32000,
+     {"family": "moe", "n_experts": 8, "top_k": 2,
+      "sliding_window": 4096}),
+    ("kimi-k2-1t-a32b", 61, 7168, 64, 8, 2048, 163840,
+     {"family": "moe", "n_experts": 384, "top_k": 8}),
+    ("hymba-1.5b", 32, 1600, 25, 5, 5504, 32001,
+     {"family": "hybrid", "ssm_state": 16, "supports_long": True}),
+    ("llama-3.2-vision-90b", 100, 8192, 64, 8, 28672, 128256,
+     {"family": "vlm", "cross_attn_interval": 5}),
+]
+
+
+@pytest.mark.parametrize("row", ASSIGNED, ids=[r[0] for r in ASSIGNED])
+def test_assigned_config_numbers(row):
+    arch, L, D, H, KV, F, V, extras = row
+    cfg = configs.get(arch)
+    assert cfg.n_layers == L
+    assert cfg.d_model == D
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == F
+    assert cfg.vocab == V
+    for k, v in extras.items():
+        assert getattr(cfg, k) == v, (arch, k)
+
+
+def test_assigned_shapes():
+    assert SHAPES["train_4k"] == dict(seq=4096, batch=256, kind="train")
+    assert SHAPES["prefill_32k"] == dict(seq=32768, batch=32, kind="prefill")
+    assert SHAPES["decode_32k"] == dict(seq=32768, batch=128, kind="decode")
+    assert SHAPES["long_500k"] == dict(seq=524288, batch=1, kind="decode")
+
+
+def test_long_context_policy():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §3)."""
+    runs = {a for a in configs.ALIASES
+            if configs.cell_is_supported(configs.get(a), "long_500k")[0]}
+    assert runs == {"mamba2-1.3b", "hymba-1.5b", "mixtral-8x7b"}
+
+
+@pytest.mark.parametrize("arch", list(configs.ALIASES))
+def test_smoke_config_is_same_family(arch):
+    full, smoke = configs.get(arch), configs.get(arch, smoke=True)
+    assert smoke.family == full.family
+    assert smoke.d_model <= 64 or smoke.d_model < full.d_model // 4
+    if full.n_experts:
+        assert smoke.n_experts > 1 and smoke.top_k >= 1
+
+
+@pytest.mark.parametrize("arch", list(configs.ALIASES))
+@pytest.mark.parametrize("shape_id", list(SHAPES))
+def test_input_specs_shapes(arch, shape_id):
+    cfg = configs.get(arch)
+    ok, _ = configs.cell_is_supported(cfg, shape_id)
+    if not ok:
+        return
+    specs = configs.input_specs(cfg, shape_id)
+    sh = SHAPES[shape_id]
+    if sh["kind"] in ("train", "prefill"):
+        assert specs["tokens"].shape == (sh["batch"], sh["seq"])
+    else:
+        assert specs["token"].shape == (sh["batch"], 1)
+        assert "cache" in specs
+    if cfg.family in ("encdec", "vlm") and sh["kind"] != "decode":
+        assert specs["frontend"].shape[2] == cfg.d_model

@@ -1,0 +1,143 @@
+"""Distribution layer tests: checkpoint/restart, elastic meshes, gradient
+compression, sharding spec coverage — all CPU-runnable."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed import checkpoint as CKPT
+from repro.distributed import sharding as SH
+from repro.distributed.elastic import choose_mesh_shape, StragglerMonitor
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as T
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.int32)}}
+        CKPT.save(tmp_path, 7, tree)
+        restored, step = CKPT.restore(tmp_path, tree)
+        assert step == 7
+        np.testing.assert_allclose(np.asarray(restored["a"]),
+                                   np.asarray(tree["a"]))
+
+    def test_latest_complete_wins(self, tmp_path):
+        tree = {"a": jnp.zeros((2,))}
+        CKPT.save(tmp_path, 5, tree)
+        CKPT.save(tmp_path, 9, {"a": jnp.ones((2,))})
+        # a torn checkpoint without manifest must be ignored
+        (tmp_path / "step_00000011").mkdir()
+        restored, step = CKPT.restore(tmp_path, tree)
+        assert step == 9
+        assert float(restored["a"][0]) == 1.0
+
+    def test_restore_with_resharding(self, tmp_path):
+        mesh = make_local_mesh()
+        tree = {"w": jnp.arange(8.0).reshape(2, 4)}
+        CKPT.save(tmp_path, 1, tree)
+        sh = {"w": jax.sharding.NamedSharding(mesh, P(None, "model"))}
+        restored, _ = CKPT.restore(tmp_path, tree, shardings=sh)
+        assert restored["w"].sharding.spec == P(None, "model")
+
+    def test_empty_dir(self, tmp_path):
+        restored, step = CKPT.restore(tmp_path / "nope", {"a": jnp.zeros(1)})
+        assert restored is None and step is None
+
+
+class TestElastic:
+    def test_shrink_keeps_model_parallel(self):
+        shape, axes = choose_mesh_shape(512, model_parallel=16, want_pods=2)
+        assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+        # lose a pod -> single-pod mesh
+        shape, axes = choose_mesh_shape(256, model_parallel=16)
+        assert shape == (16, 16)
+        # heavily degraded: model parallel folds down
+        shape, axes = choose_mesh_shape(24, model_parallel=16)
+        assert shape[0] * shape[1] <= 24 and 24 % shape[1] == 0
+
+    def test_straggler_monitor(self):
+        m = StragglerMonitor(k=3.0)
+        for _ in range(10):
+            assert not m.observe(1.0)
+        assert m.observe(10.0)
+
+
+class TestGradCompression:
+    def test_quantize_roundtrip_error(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+        q, scale = SH.quantize_int8(x, jax.random.PRNGKey(1))
+        err = jnp.abs(SH.dequantize_int8(q, scale) - x)
+        assert float(err.max()) <= scale * 1.01
+        assert q.dtype == jnp.int8           # 4x wire reduction
+
+    def test_compressed_allreduce_unbiased(self):
+        """Stochastic rounding: mean error over many keys ~ 0."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+        outs = []
+        for s in range(20):
+            q, sc = SH.quantize_int8(x, jax.random.PRNGKey(s))
+            outs.append(SH.dequantize_int8(q, sc))
+        bias = jnp.abs(jnp.mean(jnp.stack(outs), 0) - x)
+        assert float(bias.mean()) < float(jnp.abs(x).mean()) * 0.01 + 1e-3
+
+    def test_compressed_allreduce_in_shard_map(self):
+        from jax.experimental.shard_map import shard_map
+        mesh = make_local_mesh()
+        x = jnp.ones((4, 8))
+
+        def f(xs):
+            return SH.compressed_allreduce(xs, jax.random.PRNGKey(0),
+                                           "data")
+        y = shard_map(f, mesh=mesh, in_specs=P("data", None),
+                      out_specs=P("data", None))(x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.02)
+
+
+class TestShardingSpecs:
+    @pytest.mark.parametrize("arch", list(configs.ALIASES))
+    def test_param_specs_cover_all_leaves(self, arch):
+        """Every param leaf gets a full-rank spec whose sharded dims divide
+        the global shape — exactly what pjit will verify at 256 devices."""
+        cfg = configs.get(arch)
+        params = jax.eval_shape(
+            lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+        mesh_axes = {"data": 16, "model": 16}
+        # use abstract mesh sizes (no need for 256 real devices)
+        from repro.distributed.sharding import param_rules
+        from repro.models.module import spec_from_rules, path_str
+
+        class FakeMesh:
+            shape = mesh_axes
+        specs = spec_from_rules(params, param_rules(cfg, FakeMesh()))
+        flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        for (path, leaf), spec in zip(flat_p, flat_s):
+            assert len(spec) == leaf.ndim, (path_str(path), spec)
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= mesh_axes.get(a, 1)
+                assert dim % size == 0, \
+                    f"{path_str(path)}: {leaf.shape} vs {spec}"
+
+    def test_sharded_train_step_runs_on_local_mesh(self):
+        """The exact sharded code path (constraints included) on 1 CPU."""
+        from repro.data.pipeline import synthetic_batch
+        from repro.train.trainer import make_train_step
+        cfg = configs.get("yi-9b", smoke=True)
+        mesh = make_local_mesh()
+        dist = SH.make_dist(mesh, cfg, 4)
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        opt_init, step = make_train_step(cfg, dist=dist)
+        opt = opt_init(params)
+        b = synthetic_batch(0, 0, 4, 32, cfg.vocab)
+        with mesh:
+            params, opt, m = jax.jit(step)(params, opt, b)
+        assert np.isfinite(float(m["loss"]))

@@ -1,0 +1,127 @@
+"""Rule-based + search-based pruning-scheme mapping tests (paper §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import mapper_rule as MR
+from repro.core import mapper_search as MS
+from repro.core.latency_model import V5E, matmul_latency
+from repro.core.reweighted import match
+
+
+class TestRuleBased:
+    def test_depthwise_never_pruned(self):
+        """§5.2.4: no scheme mapped to depthwise convs (ssm conv1d)."""
+        layers = MR.lm_layers(configs.get("mamba2-1.3b"), tokens=4096)
+        spec, report = MR.map_rules(layers)
+        for r in report:
+            if r["kind"] == "dw":
+                assert r["scheme"] == "none"
+
+    def test_router_and_embed_frozen(self):
+        layers = MR.lm_layers(configs.get("mixtral-8x7b"), tokens=4096)
+        spec, report = MR.map_rules(layers)
+        by_path = {r["path"]: r for r in report}
+        assert by_path[r"moe/router"]["scheme"] == "none"
+        assert by_path[r"embed/table"]["scheme"] == "none"
+
+    def test_remark1_dataset_rule(self):
+        """Remark 1: 3x3 conv -> pattern on hard datasets, block on easy."""
+        convs = MR.conv_layers([("c1", 28, 64, 64, 3, 3, False)])
+        spec_h, rep_h = MR.map_rules(convs, dataset_hard=True)
+        spec_e, rep_e = MR.map_rules(convs, dataset_hard=False)
+        assert rep_h[0]["scheme"] == "pattern"
+        assert rep_e[0]["scheme"] == "block_punched"
+
+    def test_block_size_beta_rule(self):
+        """§5.2.2: chosen block is the smallest whose latency is within
+        (1+beta) of structured — larger beta can only shrink the block."""
+        b_tight, _, _ = MR.select_block_size(4096, 4096, 4096, 8.0,
+                                             beta=0.05)
+        b_loose, _, _ = MR.select_block_size(4096, 4096, 4096, 8.0,
+                                             beta=3.0)
+        assert b_loose[0] * b_loose[1] <= b_tight[0] * b_tight[1]
+
+    def test_all_archs_map(self):
+        for arch in configs.ALIASES:
+            layers = MR.lm_layers(configs.get(arch), tokens=8192)
+            spec, report = MR.map_rules(layers)
+            assert len(spec) == len(report) > 0
+            assert MR.total_latency(report) > 0
+
+    def test_spec_paths_match_real_params(self):
+        """Every non-none rule must match at least one real param path."""
+        from repro.models import transformer as T
+        from repro.models.module import path_str
+        import re
+        cfg = configs.get("mixtral-8x7b", smoke=True)
+        params = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0),
+                                                  cfg))
+        paths = [path_str(p) for p, _ in
+                 jax.tree_util.tree_flatten_with_path(params)[0]]
+        layers = MR.lm_layers(cfg, tokens=512)
+        spec, _ = MR.map_rules(layers)
+        for pat, choice in spec:
+            if choice.scheme != "none":
+                assert any(re.search(pat, p) for p in paths), pat
+
+
+class TestSearchBased:
+    def test_applicability_masks(self):
+        assert not MS.applicable("fc")[MS.SCHEME_MENU.index("pattern")]
+        assert MS.applicable("conv3x3")[MS.SCHEME_MENU.index("pattern")]
+        m = MS.applicable("dw")
+        assert m[0] and not m[1:].any()
+
+    def test_sample_respects_masks(self):
+        layers = MR.conv_layers([("dw1", 14, 32, 32, 3, 3, True),
+                                 ("c2", 14, 32, 64, 3, 3, False)])
+        feats = jnp.asarray(MS.layer_features(layers))
+        app = jnp.asarray(np.stack([MS.applicable(l.kind) for l in layers]))
+        p = MS.policy_init(jax.random.PRNGKey(0), feats.shape[1], 16)
+        for seed in range(5):
+            a_s, a_b, logp = MS.sample_mapping(p, feats, app,
+                                               jax.random.PRNGKey(seed))
+            assert MS.SCHEME_MENU[int(a_s[0])] == "none"   # dw forced
+            assert np.isfinite(float(logp))
+
+    def test_search_improves_reward(self):
+        """REINFORCE learns to prefer the high-reward mapping on a toy
+        problem where one scheme is strictly better."""
+        layers = MR.conv_layers([("c1", 14, 64, 64, 3, 3, False)] * 3)
+
+        def evaluate(spec):
+            # contrived: reward block over everything else
+            return float(np.mean([c.scheme == "block" for _, c in spec]))
+
+        best, hist = MS.search(layers, evaluate, iters=60, samples=8,
+                               lr=0.15, latency_weight=0.0,
+                               key=jax.random.PRNGKey(0))
+        assert np.mean(hist[-5:]) > np.mean(hist[:5])
+        assert evaluate(best) >= 2 / 3
+
+    def test_actions_to_spec_snaps_blocks(self):
+        layers = [MR.LayerDesc("x/w", "fc", 128, 100, 60)]
+        spec = MS.actions_to_spec(layers, np.array([4]), np.array([5]))
+        _, choice = spec[0]
+        assert 100 % choice.block[0] == 0 and 60 % choice.block[1] == 0
+
+
+def test_latency_model_shapes():
+    """Fig 9 behavior: latency falls as block grows, then saturates; Fig 5:
+    unstructured slowest, structured fastest."""
+    M, K, N = 4096, 512, 512
+    lats = [matmul_latency(M, K, N, scheme="block", block=b, compression=8)
+            for b in [(4, 4), (16, 32), (64, 128), (128, 128)]]
+    assert lats[0] > lats[-1]                       # small blocks slower
+    t_un = matmul_latency(M, K, N, scheme="unstructured", compression=8)
+    t_st = matmul_latency(M, K, N, scheme="structured_row", compression=8)
+    assert t_un > lats[-1] > t_st * 0.5
+    # higher compression never slower (same scheme/block)
+    l4 = matmul_latency(M, K, N, scheme="block", block=(128, 128),
+                        compression=4)
+    l16 = matmul_latency(M, K, N, scheme="block", block=(128, 128),
+                         compression=16)
+    assert l16 <= l4

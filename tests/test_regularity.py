@@ -1,0 +1,143 @@
+"""Mask-generator unit + property tests (paper §2.1.1 / §4.1 regularities)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import regularity as R
+
+
+def rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestUnstructured:
+    def test_density_matches_rate(self):
+        w = rand((64, 128))
+        m = R.unstructured_mask(w, rate=0.75)
+        assert abs(R.density(m) - 0.25) < 0.02
+
+    def test_keeps_largest(self):
+        w = jnp.asarray([[1.0, 0.1], [5.0, 0.01]])
+        m = R.unstructured_mask(w, rate=0.5)
+        assert m[1, 0] == 1 and m[1, 1] == 0
+
+
+class TestStructured:
+    def test_row_prunes_whole_rows(self):
+        w = rand((32, 64))
+        m = R.structured_mask(w, rate=0.5, axis="row")
+        rowsum = jnp.sum(m, axis=1)
+        assert set(np.asarray(rowsum).tolist()) <= {0.0, 64.0}
+
+    def test_col_prunes_whole_cols(self):
+        w = rand((32, 64))
+        m = R.structured_mask(w, rate=0.5, axis="col")
+        colsum = jnp.sum(m, axis=0)
+        assert set(np.asarray(colsum).tolist()) <= {0.0, 32.0}
+
+
+class TestBlock:
+    def test_block_rows_within_blocks(self):
+        """§4.1.1: pruning decisions are independent PER BLOCK — each
+        block's mask is a row-subset x col-subset pattern."""
+        w = rand((64, 128))
+        m = R.block_mask(w, (16, 32), rate=0.6, mode="row")
+        mb = np.asarray(R._to_blocks(m, 16, 32))
+        for i in range(mb.shape[0]):
+            for j in range(mb.shape[1]):
+                rows = mb[i, j].sum(axis=1)
+                assert set(rows.tolist()) <= {0.0, 32.0}
+
+    def test_per_block_rates_differ(self):
+        """Auto per-block compression: the global threshold yields
+        different kept-row counts across blocks (the paper's point)."""
+        w = np.asarray(rand((64, 128))).copy()
+        w[:16, :32] *= 10.0  # one block much more important
+        m = R.block_mask(jnp.asarray(w), (16, 32), rate=0.5, mode="row")
+        mb = np.asarray(R._to_blocks(m, 16, 32))
+        kept = mb.sum(axis=(2, 3)) / 32
+        assert kept[0, 0] == 16  # the boosted block keeps all rows
+        assert kept.min() < 16
+
+    def test_block1x1_equals_unstructured(self):
+        """Fig 5: block size 1x1 == unstructured pruning."""
+        w = rand((16, 16))
+        m1 = R.block_mask(w, (1, 1), rate=0.5, mode="row")
+        m2 = R.unstructured_mask(w, rate=0.5)
+        assert jnp.allclose(m1, m2)
+
+    def test_whole_matrix_block_equals_structured(self):
+        """Fig 5: block == whole matrix -> structured pruning."""
+        w = rand((16, 32))
+        m1 = R.block_mask(w, (16, 32), rate=0.5, mode="row")
+        m2 = R.structured_mask(w, rate=0.5, axis="row")
+        assert jnp.allclose(m1, m2)
+
+
+class TestBlockPunched:
+    def test_same_punch_across_block(self):
+        """§4.1.2: same intra-kernel locations pruned for ALL kernels in a
+        block."""
+        w = rand((8, 8, 3, 3))
+        m = np.asarray(R.block_punched_mask(w, (4, 4), rate=0.5))
+        blk = m[:4, :4]          # one block
+        first = blk[0, 0]
+        assert (blk == first[None, None]).all()
+
+    def test_batch_leading_dims(self):
+        w = rand((4, 64, 128))    # e.g. stacked MoE experts
+        m = R.block_mask(w, (16, 32), rate=0.5, mode="row")
+        assert m.shape == w.shape
+
+
+class TestPattern:
+    def test_four_entries_per_kernel(self):
+        w = rand((8, 4, 3, 3))
+        m = R.pattern_mask(w)
+        per_kernel = jnp.sum(m, axis=(-1, -2))
+        assert (per_kernel == 4).all()
+
+    def test_patterns_from_fixed_set(self):
+        w = rand((8, 4, 3, 3))
+        m = np.asarray(R.pattern_mask(w)).reshape(-1, 9)
+        pset = {tuple(p.reshape(-1).tolist()) for p in np.asarray(R.PATTERN_SET)}
+        for k in m:
+            assert tuple(k.tolist()) in pset
+
+    def test_connectivity_prunes_kernels(self):
+        w = rand((8, 8, 3, 3))
+        m = R.pattern_mask(w, connectivity_rate=0.5)
+        per_kernel = np.asarray(jnp.sum(m, axis=(-1, -2)))
+        assert set(per_kernel.reshape(-1).tolist()) <= {0.0, 4.0}
+        assert (per_kernel == 0).mean() == pytest.approx(0.5, abs=0.1)
+
+    def test_rejects_non_3x3(self):
+        with pytest.raises(AssertionError):
+            R.pattern_mask(rand((4, 4, 5, 5)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(pb=st.sampled_from([4, 8, 16]), qb=st.sampled_from([8, 16, 32]),
+       rate=st.floats(0.1, 0.9), seed=st.integers(0, 100))
+def test_block_mask_density_property(pb, qb, rate, seed):
+    """Property: block mask density is within tolerance of (1 - rate)."""
+    w = rand((64, 128), seed)
+    m = R.block_mask(w, (pb, qb), rate=rate, mode="row")
+    assert R.density(m) == pytest.approx(1 - rate, abs=0.15)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scheme=st.sampled_from(["unstructured", "structured_row",
+                               "structured_col", "block", "block_row"]),
+       seed=st.integers(0, 50))
+def test_mask_is_binary_property(scheme, seed):
+    w = rand((32, 64), seed)
+    m = np.asarray(R.make_mask(w, scheme, block=(8, 16), rate=0.5))
+    assert set(np.unique(m).tolist()) <= {0.0, 1.0}
+
+
+def test_legal_blocks_divisibility():
+    for (p, q) in R.legal_blocks(4096, 11008):
+        assert 4096 % p == 0 and 11008 % q == 0

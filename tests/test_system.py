@@ -1,0 +1,133 @@
+"""End-to-end system behaviour tests: the full paper pipeline (map ->
+reweighted train -> threshold -> finetune -> BCS pack -> sparse execute)
+on CPU-sized models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import reweighted as RW
+from repro.core import pruner
+from repro.core.mapper_rule import lm_layers, map_rules
+from repro.core.reweighted import SchemeChoice
+from repro.data.pipeline import synthetic_batch
+from repro.models import layers as ML
+from repro.models import transformer as T
+from repro.train.trainer import make_train_step, apply_masks
+
+
+def small_spec(spec, block=(8, 16)):
+    return [(p, SchemeChoice(c.scheme, block) if c.scheme != "none" else c)
+            for p, c in spec]
+
+
+def test_full_prune_pipeline_compresses_without_blowing_up_loss():
+    cfg = configs.get("yi-9b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    layers = lm_layers(cfg, tokens=256)
+    spec = small_spec(map_rules(layers, dataset_hard=False)[0])
+    rw = RW.ReweightedConfig(spec=tuple(spec), lam=1e-3)
+    opt_init, step = make_train_step(cfg, lr=3e-3, reweighted=rw)
+    opt = opt_init(params)
+    step = jax.jit(step)
+    bf = lambda s: synthetic_batch(0, s, 8, 32, cfg.vocab)
+
+    res = pruner.reweighted_prune(params, opt, spec, step, bf,
+                                  lam=1e-3, steps=60, reweight_every=15,
+                                  target_rate=0.25, finetune_steps=60)
+    overall = res.report["__overall__"]
+    assert overall["compression"] > 1.5
+    # pruned weights are exactly zero
+    flat_m = jax.tree_util.tree_leaves(res.masks)
+    assert any(m.ndim > 0 and float(m.min()) == 0 for m in flat_m)
+    # the pruned model still predicts (well below the ln(V)=5.545
+    # uniform floor on this vocab=256 task)
+    def loss(p, b):
+        logits, _ = T.forward(p, cfg, b["tokens"])
+        return float(ML.cross_entropy(logits, b["labels"]))
+    lp = loss(res.params, bf(999))
+    assert lp < 5.4, lp
+
+
+def test_pruned_model_executes_on_bcs_kernel():
+    """Serving path: pack a pruned projection into BCS and check the Pallas
+    kernel output matches the masked-dense forward."""
+    from repro.core import regularity as R
+    from repro.kernels import ops, ref
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 256), jnp.float32)
+    mask = R.make_mask(w, "block_row", block=(64, 64), rate=0.7)
+    packed = ops.pack(w, mask, (64, 64))
+    assert packed["density"] <= 1.0
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 128), jnp.float32)
+    y_sparse = ops.sparse_linear(x, packed=packed, bm=64)
+    y_dense = ref.masked_matmul_ref(x, w, mask)
+    np.testing.assert_allclose(np.asarray(y_sparse), np.asarray(y_dense),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_masked_training_preserves_sparsity():
+    """Gradient updates through masks never resurrect pruned weights."""
+    cfg = configs.get("yi-9b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    layers = lm_layers(cfg, tokens=256)
+    spec = small_spec(map_rules(layers, dataset_hard=False)[0])
+    masks = RW.masks_for_spec(params, spec, default_rate=0.5)
+    opt_init, step = make_train_step(cfg, lr=1e-2)
+    opt = opt_init(params)
+    step = jax.jit(step)
+    for i in range(5):
+        b = synthetic_batch(0, i, 4, 32, cfg.vocab)
+        params, opt, _ = step(params, opt, b, masks, None)
+    mp = apply_masks(params, masks)
+    m = masks["layers"]["ffn"]["gate"]["w"]
+    w = mp["layers"]["ffn"]["gate"]["w"]
+    assert float(jnp.sum(jnp.abs(w.astype(jnp.float32)) * (1 - m))) == 0.0
+
+
+def test_hybrid_mapping_beats_single_scheme_latency():
+    """Table 2's punchline: a hybrid per-layer mapping is at least as fast
+    as uniform unstructured pruning under the latency model."""
+    from repro.core.mapper_rule import total_latency
+    from repro.core.latency_model import matmul_latency
+    cfg = configs.get("mixtral-8x7b")
+    layers = lm_layers(cfg, tokens=32768)
+    _, rep_hybrid = map_rules(layers, dataset_hard=True, compression=8.0)
+    t_hybrid = total_latency(rep_hybrid)
+    t_unstructured = sum(
+        matmul_latency(l.M, l.K, l.N, scheme="unstructured",
+                       compression=8.0) * l.count
+        for l in layers if l.kind == "fc")
+    assert t_hybrid < t_unstructured
+
+
+def test_checkpoint_restart_mid_training(tmp_path):
+    """Kill/restart: state restores and training continues (the
+    fault-tolerance story end-to-end)."""
+    from repro.distributed import checkpoint as CKPT
+    cfg = configs.get("yi-9b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    opt_init, step = make_train_step(cfg, lr=1e-3)
+    opt = opt_init(params)
+    step = jax.jit(step)
+    for i in range(3):
+        b = synthetic_batch(0, i, 4, 32, cfg.vocab)
+        params, opt, m0 = step(params, opt, b)
+    CKPT.save(tmp_path, 3, {"params": params, "opt": opt})
+    restored, s = CKPT.restore(tmp_path, {"params": params, "opt": opt})
+    assert s == 3
+    b = synthetic_batch(0, 3, 4, 32, cfg.vocab)
+    _, _, m1 = step(restored["params"], restored["opt"], b)
+    assert np.isfinite(float(m1["loss"]))
+
+
+def test_deterministic_data_pipeline():
+    """Straggler story precondition: batches are pure functions of
+    (seed, step, shard)."""
+    b1 = synthetic_batch(0, 5, 4, 16, 100, shard=2)
+    b2 = synthetic_batch(0, 5, 4, 16, 100, shard=2)
+    b3 = synthetic_batch(0, 6, 4, 16, 100, shard=2)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
