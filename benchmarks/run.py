@@ -1,14 +1,18 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §7).
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses longer training
-budgets; default is the fast CI-sized pass."""
+budgets; default is the fast CI-sized pass.  ``--json`` additionally writes
+one ``BENCH_<name>.json`` per module (rows + timestamp) so successive PRs
+accumulate a machine-readable perf trajectory."""
 import argparse
 import importlib
+import json
 import sys
 import time
 
 BENCHES = [
     "bench_latency_model",    # Fig 9/10 (latency model sweeps)
-    "bench_kernel",           # §4.3 BCS kernel skipping + metadata
+    "bench_kernel",           # §4.3 BCS kernel skipping + packing speed
+    "bench_e2e_sparse",       # whole-model prefill+decode via compile_model
     "bench_macs",             # Table 5
     "bench_portability",      # Table 7
     "bench_blocksize",        # Fig 5 + Fig 9 (acc/latency vs block)
@@ -23,6 +27,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json per module")
     args = ap.parse_args()
     names = [b for b in BENCHES if args.only is None or args.only in b]
     print("name,us_per_call,derived")
@@ -38,7 +44,21 @@ def main() -> None:
             continue
         for (n, us, derived) in rows:
             print(f"{n},{us:.2f},{derived}", flush=True)
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        elapsed = time.time() - t0
+        print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)
+        if args.json:
+            short = name.removeprefix("bench_")
+            payload = {
+                "bench": name,
+                "elapsed_s": round(elapsed, 2),
+                "unix_time": int(time.time()),
+                "rows": [{"name": n, "us_per_call": round(us, 2),
+                          "derived": derived} for (n, us, derived) in rows],
+            }
+            path = f"BENCH_{short}.json"
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=1)
+            print(f"# wrote {path}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{len(failures)} benchmark(s) failed: "
                          f"{[f[0] for f in failures]}")

@@ -1,10 +1,13 @@
-"""Quickstart: the paper's pipeline in ~60 lines.
+"""Quickstart: the paper's pipeline in ~70 lines.
 
   1. build a (smoke-sized) LM,
   2. map best-suited pruning schemes per layer (rule-based, training-free),
   3. train with reweighted dynamic regularization,
   4. threshold -> masks (automatic per-layer/per-block rates),
-  5. finetune, report compression, and run the pruned model.
+  5. finetune, report compression,
+  6. COMPILE the pruned model (pack block-pruned layers to the BCS layout,
+     ``serve.compile.compile_model``) and serve it on the sparse kernel
+     through the fused decode loop.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,6 +18,7 @@ from repro.core import pruner, reweighted as RW
 from repro.core.mapper_rule import lm_layers, map_rules
 from repro.data.pipeline import synthetic_batch
 from repro.models import transformer as T
+from repro.serve.compile import compile_model, compiled_summary
 from repro.serve.engine import generate
 from repro.train.trainer import make_train_step
 
@@ -32,7 +36,7 @@ def main():
     spec = [(p, RW.SchemeChoice(c.scheme, (8, 16))
              if c.scheme != "none" else c) for p, c in spec]   # smoke dims
     for r in report[:4]:
-        print(f"  map {r['path']:-22s} -> {r['scheme']} {r['block']}")
+        print(f"  map {r['path']:<22s} -> {r['scheme']} {r['block']}")
 
     # 3-5: reweighted train -> auto-threshold -> finetune (paper §4.2)
     rw = RW.ReweightedConfig(spec=tuple(spec), lam=2e-3)
@@ -47,8 +51,13 @@ def main():
     print(f"compression: {overall['compression']:.2f}x "
           f"(density {overall['density']:.3f})")
 
-    # run the pruned model
-    out = generate(res.params, cfg, bf(0)["tokens"][:2], 8)
+    # 6: compile for sparse execution — pack block-pruned layers into the
+    # BCS layout so serving dispatches through the Pallas kernel
+    exec_params, creport = compile_model(res.params, res.masks, spec)
+    print(compiled_summary(creport))
+
+    # run the compiled model (fused prefill + scan decode)
+    out = generate(exec_params, cfg, bf(0)["tokens"][:2], 8)
     print("pruned model generates:", out[0].tolist())
 
 

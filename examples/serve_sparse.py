@@ -1,6 +1,7 @@
-"""Serving example: prune a projection, pack to BCS, and execute it on the
-Pallas block-sparse kernel — the compiler/runtime half of the paper (§4.3),
-plus batched generation from a smoke model.
+"""Serving example: the compiler/runtime half of the paper (§4.3) end to
+end — (a) one projection packed to BCS and executed on the Pallas
+block-sparse kernel, (b) a WHOLE model block-pruned, compiled with
+``compile_model``, and served through the fused scan decode loop.
 
   PYTHONPATH=src python examples/serve_sparse.py
 """
@@ -11,17 +12,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import regularity as R
 from repro.core import bcs as BCS
+from repro.core import reweighted as RW
 from repro.kernels import ops
 from repro.kernels.ref import masked_matmul_ref
 from repro.models import transformer as T
 from repro.data.pipeline import synthetic_batch
+from repro.serve.compile import compile_model, compiled_summary
 from repro.serve.engine import generate
+from repro.train.trainer import apply_masks
 
 
-def main():
-    # --- BCS + kernel on one projection -------------------------------
+def kernel_demo():
+    """One projection: pack -> sparse kernel -> compare vs masked oracle."""
     K, N = 512, 1024
     w = jax.random.normal(jax.random.PRNGKey(0), (K, N), jnp.float32)
     # block pruning at ~4x with whole blocks dying (structured collapse)
@@ -31,14 +34,35 @@ def main():
     packed = ops.pack(w, mask, (128, 128))
     b = BCS.from_dense(np.asarray(w), np.asarray(mask), (128, 128))
     print(f"density={packed['density']:.2f}  "
-          f"flops_skipped={ops.flops_saved(packed)*100:.0f}%  "
+          f"flops_skipped(effective)={ops.flops_saved(packed)*100:.0f}%  "
+          f"pad_overhead={ops.padding_overhead(packed):.2f}x  "
           f"BCS idx bytes={b.index_bytes()} (CSR {b.csr_index_bytes()})")
     x = jax.random.normal(jax.random.PRNGKey(2), (256, K), jnp.float32)
     y = ops.sparse_linear(x, packed=packed, bm=128)
     err = float(jnp.max(jnp.abs(y - masked_matmul_ref(x, w, mask))))
     print(f"kernel max err vs oracle: {err:.2e}")
 
-    # --- batched serving ------------------------------------------------
+
+def whole_model_demo():
+    """Block-prune a smoke model, compile it, and serve on the kernel."""
+    spec = [(r"(attn/w[qkvo]|ffn/(gate|up|down))/w",
+             RW.SchemeChoice("block", (16, 16)))]
+    cfg = configs.get("yi-9b", smoke=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    # whole (16,16) blocks die — the structured collapse the kernel skips
+    masks = RW.random_block_masks(params, spec, (16, 16), keep_prob=0.4)
+    pm = apply_masks(params, masks)
+    exec_params, report = compile_model(pm, masks, spec, keep_dense=False)
+    print(compiled_summary(report))
+    batch = synthetic_batch(0, 0, 4, 32, cfg.vocab)
+    t0 = time.time()
+    out = jax.block_until_ready(
+        generate(exec_params, cfg, batch["tokens"], 16))
+    print(f"compiled sparse model: {out.shape[0]}x{out.shape[1]} tokens in "
+          f"{time.time()-t0:.2f}s (incl. compile)")
+
+
+def batched_serving_demo():
     for arch in ("mixtral-8x7b", "mamba2-1.3b"):
         cfg = configs.get(arch, smoke=True)
         params = T.init_lm(jax.random.PRNGKey(0), cfg)
@@ -47,6 +71,12 @@ def main():
         out = generate(params, cfg, batch["tokens"], 16)
         print(f"{arch}: {out.shape[0]}x{out.shape[1]} tokens in "
               f"{time.time()-t0:.2f}s (incl. compile)")
+
+
+def main():
+    kernel_demo()
+    whole_model_demo()
+    batched_serving_demo()
 
 
 if __name__ == "__main__":

@@ -10,12 +10,18 @@ skipping pruned weights).  Fine-grained intra-block row/col sparsity from
 block-based pruning rides along inside surviving blocks (accuracy win);
 fully-zero blocks are skipped by the Pallas kernel (compute/HBM win).  The
 kernel consumes the *uniform padded* layout from ``pad_to_uniform`` — equal
-trip counts per grid row = the thread-load-balance analogue."""
+trip counts per grid row = the thread-load-balance analogue.
+
+Packing is fully vectorized (argsort/cumsum CSC construction) so whole-model
+compiles stay off the Python-loop floor; the ``*_loop`` reference
+implementations are kept for equivalence tests and the packing benchmark."""
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -50,18 +56,65 @@ class BCS:
         return 4 * (len(self.col_idx) + len(self.row_ptr))
 
 
-def from_dense(w, mask, block) -> BCS:
-    """Pack the masked weight into BCS.  A block is stored iff any weight in
-    it survives; stored blocks keep their interior zeros (fine-grained
-    sparsity inside the MXU tile)."""
-    w = np.asarray(w * mask.astype(w.dtype))
+def _blockify(w, mask, block):
+    """Shared prologue: (Kb, Nb, bk, bn) weight blocks + (Kb, Nb) liveness.
+    ``wblk`` is a transposed VIEW (no 2·K·N copy); ``any`` reduces over the
+    tuple axis directly instead of materializing a transposed block tensor."""
+    mask = np.asarray(mask)
+    w = np.asarray(w)
+    w = w * mask.astype(w.dtype, copy=False)
     K, N = w.shape
     bk, bn = block
     assert K % bk == 0 and N % bn == 0
     Kb, Nb = K // bk, N // bn
-    mblk = np.asarray(mask).reshape(Kb, bk, Nb, bn).transpose(0, 2, 1, 3)
-    alive = mblk.reshape(Kb, Nb, -1).any(axis=-1)            # (Kb, Nb)
+    # two matmul reductions (BLAS) beat one strided any(axis=(1, 3)); the
+    # abs keeps "any nonzero" exact under float summation
+    am = np.abs(np.asarray(mask, np.float32))
+    ones_k = np.ones(bk, np.float32)
+    ones_n = np.ones(bn, np.float32)
+    s1 = am.reshape(Kb, bk, N).transpose(0, 2, 1) @ ones_k   # (Kb, N)
+    alive = (s1.reshape(Kb * Nb, bn) @ ones_n).reshape(Kb, Nb) > 0
     wblk = w.reshape(Kb, bk, Nb, bn).transpose(0, 2, 1, 3)
+    return w, wblk, alive, (K, N, bk, bn, Kb, Nb)
+
+
+def from_dense(w, mask, block) -> BCS:
+    """Pack the masked weight into BCS.  A block is stored iff any weight in
+    it survives; stored blocks keep their interior zeros (fine-grained
+    sparsity inside the MXU tile).  Vectorized: one ``nonzero`` + ``bincount``
+    replaces the per-(row, col) Python loop."""
+    w, wblk, alive, (K, N, bk, bn, Kb, Nb) = _blockify(w, mask, block)
+
+    rows, cols = np.nonzero(alive)           # row-major = CSR block order
+    values = wblk[rows, cols] if len(rows) else np.zeros((0, bk, bn), w.dtype)
+    row_ptr = np.zeros(Kb + 1, np.int64)
+    np.cumsum(np.bincount(rows, minlength=Kb), out=row_ptr[1:])
+
+    # hierarchical column compression: dedupe identical per-row liveness
+    # patterns in first-occurrence order.  Keyed on packed row bytes — the
+    # dict loop is O(Kb) rows, not O(Kb·Nb) blocks.
+    packed = np.packbits(alive, axis=1)
+    rb, stride = packed.tobytes(), packed.shape[1]
+    patterns, lookup = [], {}
+    occurrence = np.empty(Kb, np.int32)
+    for i in range(Kb):
+        key = rb[i * stride:(i + 1) * stride]
+        pid = lookup.get(key)
+        if pid is None:
+            pid = lookup[key] = len(patterns)
+            patterns.append(np.nonzero(alive[i])[0])
+        occurrence[i] = pid
+    return BCS(shape=(K, N), block=block, values=values,
+               col_idx=cols.astype(np.int32),
+               row_ptr=row_ptr.astype(np.int32),
+               patterns=patterns,
+               occurrence=occurrence)
+
+
+def from_dense_loop(w, mask, block) -> BCS:
+    """Pure-Python reference packer (the original O(Kb·Nb) implementation).
+    Kept for bit-identity tests and the packing speed benchmark."""
+    w, wblk, alive, (K, N, bk, bn, Kb, Nb) = _blockify(w, mask, block)
 
     values, col_idx, row_ptr = [], [], [0]
     patterns, pat_lookup, occurrence = [], {}, []
@@ -87,10 +140,10 @@ def from_dense(w, mask, block) -> BCS:
 def to_dense(bcs: BCS) -> np.ndarray:
     K, N = bcs.shape
     bk, bn = bcs.block
-    out = np.zeros((K // bk, N // bn, bk, bn), bcs.values.dtype)
-    for i in range(K // bk):
-        for k in range(bcs.row_ptr[i], bcs.row_ptr[i + 1]):
-            out[i, bcs.col_idx[k]] = bcs.values[k]
+    Kb, Nb = K // bk, N // bn
+    out = np.zeros((Kb, Nb, bk, bn), bcs.values.dtype)
+    rows = np.repeat(np.arange(Kb), np.diff(bcs.row_ptr))
+    out[rows, bcs.col_idx] = bcs.values
     return out.transpose(0, 2, 1, 3).reshape(K, N)
 
 
@@ -108,10 +161,10 @@ def pad_to_uniform(bcs: BCS):
     Lmax = max(1, int(nnz.max()) if len(nnz) else 1)
     vals = np.zeros((Kb, Lmax, bk, bn), bcs.values.dtype)
     cols = np.zeros((Kb, Lmax), np.int32)
-    for i in range(Kb):
-        s, e = bcs.row_ptr[i], bcs.row_ptr[i + 1]
-        vals[i, :e - s] = bcs.values[s:e]
-        cols[i, :e - s] = bcs.col_idx[s:e]
+    rows = np.repeat(np.arange(Kb), nnz)
+    slot = np.arange(bcs.nnzb) - np.repeat(bcs.row_ptr[:-1], nnz)
+    vals[rows, slot] = bcs.values
+    cols[rows, slot] = bcs.col_idx
     return jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(nnz, jnp.int32)
 
 
@@ -122,7 +175,102 @@ def pad_to_uniform_csc(bcs: BCS):
     indices, zero-padded to the max column degree ``Lmax`` (load-balanced
     static grid).  Returns (values (Nb, Lmax, bk, bn), k_idx (Nb, Lmax)
     int32, nnz (Nb,)).  Padding slots point at k-block 0 with zero values —
-    they contribute nothing."""
+    they contribute nothing.
+
+    Vectorized CSC construction: a stable argsort over ``col_idx`` groups
+    blocks by column while preserving row order; cumsum'd per-column counts
+    give each block's destination slot, and a single scatter through the
+    composed permutation places every block — no Python per-block loop and
+    no intermediate permuted copy of ``values``.  (The serve path uses the
+    even faster ``pack_csc`` below; this stays as the BCS-object route.)"""
+    K, N = bcs.shape
+    bk, bn = bcs.block
+    Kb, Nb = K // bk, N // bn
+    t_order = np.argsort(bcs.col_idx, kind="stable")
+    cnt = np.bincount(bcs.col_idx, minlength=Nb)
+    nnz = cnt.astype(np.int32)
+    Lmax = max(1, int(cnt.max()) if len(cnt) else 1)
+    col_ptr = np.zeros(Nb + 1, np.int64)
+    np.cumsum(cnt, out=col_ptr[1:])
+    row_of = np.repeat(np.arange(Kb), np.diff(bcs.row_ptr))  # block row per t
+    vals = np.zeros((Nb, Lmax, bk, bn), bcs.values.dtype)
+    kidx = np.zeros((Nb, Lmax), np.int32)
+    slot = np.arange(bcs.nnzb) - np.repeat(col_ptr[:-1], cnt)
+    dest = np.empty(bcs.nnzb, np.int64)                      # flat CSC slot
+    dest[t_order] = bcs.col_idx[t_order].astype(np.int64) * Lmax + slot
+    vals.reshape(Nb * Lmax, bk, bn)[dest] = bcs.values
+    kidx.reshape(-1)[dest] = row_of
+    return jnp.asarray(vals), jnp.asarray(kidx), jnp.asarray(nnz)
+
+
+@functools.partial(jax.jit, static_argnames=("kb", "bk", "nb", "bn"))
+def _alive_t(mask, *, kb, bk, nb, bn):
+    """(K, N) mask -> (Nb, Kb) bool block-liveness, transposed (CSC order)."""
+    am = jnp.abs(mask.astype(jnp.float32))
+    return jnp.transpose(am.reshape(kb, bk, nb, bn).sum(axis=(1, 3))) > 0
+
+
+@functools.partial(jax.jit, static_argnames=("kb", "bk", "nb", "bn"))
+def _csc_move(w, mask, src_idx, *, kb, bk, nb, bn):
+    """All heavy data movement of packing in one XLA program: mask multiply,
+    transpose to column-major block order, and ONE gather that places every
+    output slot — slot (j, l) reads its live block, padding slots read the
+    appended all-zero block.  Gather-only on purpose: XLA scatters of many
+    tiny blocks are an order of magnitude slower than the equivalent
+    gather, and the (Nb, Kb) destination scatter lives on host as a cheap
+    int32 index fill instead.  Multithreaded on CPU, fused on accelerator."""
+    wm = w * mask.astype(w.dtype)
+    wcsc = jnp.transpose(wm.reshape(kb, bk, nb, bn),
+                         (2, 0, 1, 3)).reshape(nb * kb, bk, bn)
+    wcsc = jnp.concatenate([wcsc, jnp.zeros((1, bk, bn), w.dtype)])
+    return wcsc[src_idx]                     # (nb, kb, bk, bn)
+
+
+def pack_csc(w, mask, block):
+    """Fused ``from_dense`` + ``pad_to_uniform_csc`` without the BCS (CSR)
+    intermediate — the serve-path packer behind ``kernels.ops.pack``.
+
+    Going through CSR costs a transpose-like permutation of all block
+    payloads (row-major extract, column-major scatter) at (bk·bn)-element
+    granularity — cache-hostile for small blocks, and single-threaded in
+    numpy.  Here only the O(Kb·Nb) index bookkeeping stays on host; the
+    O(K·N) block movement runs as one jitted gather-only XLA program
+    (``_csc_move``) whose (Nb, Kb) slot->source map is filled on host, so
+    the compiled program depends only on (shape, block) — not on the mask —
+    and a final cheap device slice trims the padded column degree to Lmax.
+
+    Returns (values (Nb, Lmax, bk, bn), k_idx (Nb, Lmax) int32, nnz (Nb,),
+    density) — bit-identical to from_dense -> pad_to_uniform_csc."""
+    w = jnp.asarray(w)
+    mask = jnp.asarray(mask)
+    K, N = w.shape
+    bk, bn = block
+    assert K % bk == 0 and N % bn == 0
+    Kb, Nb = K // bk, N // bn
+    dims = dict(kb=Kb, bk=bk, nb=Nb, bn=bn)
+    alive_t = np.asarray(_alive_t(mask, **dims))             # (Nb, Kb)
+    cnt = alive_t.sum(axis=1)
+    nnz = cnt.astype(np.int32)
+    nnzb = int(cnt.sum())
+    Lmax = max(1, int(cnt.max()) if cnt.size else 1)
+    cols_j, rows_j = np.nonzero(alive_t)     # CSC order: by col, then row
+    col_ptr = np.zeros(Nb + 1, np.int64)
+    np.cumsum(cnt, out=col_ptr[1:])
+    slot = np.arange(nnzb) - np.repeat(col_ptr[:-1], cnt)
+    # slot -> source block map; unfilled slots read the appended zero block
+    src = np.full(Nb * Kb, Nb * Kb, np.int32)
+    src[cols_j * Kb + slot] = cols_j * Kb + rows_j
+    vals = _csc_move(w, mask, jnp.asarray(src.reshape(Nb, Kb)), **dims)
+    if Lmax < Kb:
+        vals = vals[:, :Lmax]                                # device slice
+    kidx = np.zeros((Nb, Lmax), np.int32)
+    kidx.reshape(-1)[cols_j * Lmax + slot] = rows_j
+    density = nnzb / (Kb * Nb)
+    return vals, jnp.asarray(kidx), jnp.asarray(nnz), density
+
+
+def pad_to_uniform_csc_loop(bcs: BCS):
+    """Pure-Python reference for ``pad_to_uniform_csc`` (original impl)."""
     K, N = bcs.shape
     bk, bn = bcs.block
     Kb, Nb = K // bk, N // bn

@@ -172,6 +172,56 @@ def masks_for_spec(params, spec, threshold=None, default_rate=None):
     return jax.tree_util.tree_map_with_path(build, params)
 
 
+def block_masks_from(params, spec, block, keep_fn):
+    """Shared scaffold for whole-(bk, bn)-block mask trees: spec matching,
+    sentinel handling, block-tiling guard, and block->element expansion.
+    ``keep_fn(path_str, leaf, (Pb, Qb) grid shape) -> bool keep grid``."""
+    bk, bn = block
+
+    def build(path, leaf):
+        s = M.path_str(path)
+        if match(spec, s) is None or leaf.ndim < 2:
+            return jnp.ones((), jnp.float32)
+        *lead, P, Q = leaf.shape
+        if P % bk or Q % bn:     # block must tile the leaf (e.g. phi3 d=60)
+            return jnp.ones((), jnp.float32)
+        keep = keep_fn(s, leaf, (*lead, P // bk, Q // bn))
+        return jnp.repeat(jnp.repeat(keep, bk, -2), bn, -1).astype(jnp.float32)
+
+    return jax.tree_util.tree_map_with_path(build, params)
+
+
+def random_block_masks(params, spec, block=(16, 16), keep_prob=0.5, seed=0):
+    """Bernoulli whole-block masks on spec-matched leaves, scalar sentinels
+    elsewhere — the structured-collapse scaffolding used by the serving
+    demos, e2e benches, and compile_model tests (real pipelines get masks
+    from ``masks_for_spec``/``pruner``).  Keys derive from crc32(path) +
+    seed, NOT ``hash()``, so the packed/not-packed outcome is stable across
+    processes."""
+    import zlib
+
+    def keep_fn(s, leaf, grid):
+        key = jax.random.PRNGKey((zlib.crc32(s.encode()) + seed) % (2 ** 31))
+        return jax.random.uniform(key, grid) < keep_prob
+
+    return block_masks_from(params, spec, block, keep_fn)
+
+
+def magnitude_block_masks(params, spec, block=(16, 16), rate=0.5):
+    """One-shot magnitude pruning at whole-block granularity: the
+    ``rate``-fraction of blocks with the smallest L2 norms die outright —
+    the structured collapse the BCS executor skips."""
+    bk, bn = block
+
+    def keep_fn(s, leaf, grid):
+        sq = jnp.square(leaf.astype(jnp.float32))
+        *lead, P, Q = leaf.shape
+        g = sq.reshape(*lead, P // bk, bk, Q // bn, bn).sum(axis=(-3, -1))
+        return g > jnp.quantile(g.reshape(-1), rate)
+
+    return block_masks_from(params, spec, block, keep_fn)
+
+
 def sparsity_report(params, masks) -> dict:
     """Per-layer + overall density/compression."""
     flat_p, _ = jax.tree_util.tree_flatten_with_path(params)

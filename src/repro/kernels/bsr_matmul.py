@@ -12,7 +12,16 @@ Layout (from repro.core.bcs.pad_to_uniform_csc):
 Grid: (M/bm, Nb, L) — L innermost so the fp32 VMEM accumulator tile is
 revisited; equal trip counts per (i, j) = the load-balance analogue of the
 paper's row reordering.  Epilogue (bias + activation) fuses into the final
-store (layer-fusion analogue, §A.1)."""
+store (layer-fusion analogue, §A.1).
+
+Accumulation is always fp32 (``preferred_element_type`` on the MXU dot +
+fp32 VMEM scratch); bf16 inputs therefore take the mixed-precision path —
+bf16 reads, fp32 accumulate, one rounding on the final store.
+
+Ragged M is handled here: M is zero-padded up to the next ``bm`` multiple
+before the grid launch and the pad rows are sliced off the output, so
+callers never silently fall back to a dense matmul.
+"""
 from __future__ import annotations
 
 import functools
@@ -45,20 +54,42 @@ def _kernel(k_idx, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act):
         o_ref[...] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "act", "interpret"))
+def _auto_interpret() -> bool:
+    """Run the kernel body in interpret mode unless we are on real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "act", "interpret", "out_dtype"))
 def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
-               interpret=True):
+               interpret=None, out_dtype=None):
     """x (M, K) @ BCS-sparse W (K, N) -> (M, N).
 
-    values (Nb, L, bk, bn); k_idx (Nb, L) int32.  interpret=True runs the
-    kernel body on CPU (this container); on TPU pass interpret=False."""
+    values (Nb, L, bk, bn); k_idx (Nb, L) int32.  ``interpret=None``
+    auto-detects the backend (Pallas lowering on TPU, interpreter
+    elsewhere).  ``out_dtype`` defaults to x.dtype; pass jnp.float32 to
+    keep the fp32 accumulator precision on a bf16 input."""
+    if interpret is None:
+        interpret = _auto_interpret()
     M, K = x.shape
     Nb, L, bk, bn = values.shape
     N = Nb * bn
-    bm = min(bm, M)
-    assert M % bm == 0 and K % bk == 0
+    # Pick the M tile: split M over the minimum number of bm-sized tiles,
+    # then shrink the tile to the aligned ceiling of the per-tile share so
+    # zero-padding stays under one alignment unit (M=129 with bm=128 runs
+    # 2x72 rows, not 2x128).  Alignment is the Mosaic second-minor minimum:
+    # 8 rows for f32, 16 for bf16; decode arrives with M = batch < both.
+    align = 8 if x.dtype == jnp.float32 else 16
+    n_tiles = -(-M // bm) if M > bm else 1
+    per_tile = -(-M // n_tiles)
+    bm = min(bm, ((per_tile + align - 1) // align) * align)
+    assert K % bk == 0, (K, bk)
+    Mp = ((M + bm - 1) // bm) * bm
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+    out_dtype = out_dtype or x.dtype
 
-    grid = (M // bm, Nb, L)
+    grid = (Mp // bm, Nb, L)
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, l, kidx: (i, kidx[j, l])),
         pl.BlockSpec((1, 1, bk, bn), lambda i, j, l, kidx: (j, l, 0, 0)),
@@ -73,7 +104,7 @@ def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
             _kernel(k_idx_ref, x_ref, w_ref, None, o_ref, acc_ref,
                     n_l=L, act=act)
 
-    return pl.pallas_call(
+    y = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -82,6 +113,7 @@ def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, l, kidx: (i, j)),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
         interpret=interpret,
     )(k_idx, *args)
+    return y[:M] if Mp != M else y

@@ -1,7 +1,9 @@
-"""Serving driver: batched prefill + decode with a (optionally pruned)
-model; demonstrates the BCS/Pallas path on a single projection.
+"""Serving driver: batched prefill + fused-scan decode with an optionally
+pruned-and-compiled model — the whole §4.3 pipeline from the CLI:
+map schemes -> one-shot masks -> compile_model (BCS packing) -> generate.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke --sparse
 """
 from __future__ import annotations
 
@@ -9,12 +11,17 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
+from repro.core import reweighted as RW
 from repro.data.pipeline import synthetic_batch
 from repro.models import transformer as T
+from repro.serve.compile import compile_model, compiled_summary
 from repro.serve.engine import generate
+from repro.train.trainer import apply_masks
+
+SPARSE_SPEC = [(r"(attn/w[qkvo]|ffn/(gate|up|down))/w",
+                RW.SchemeChoice("block", (16, 16)))]
 
 
 def main(argv=None):
@@ -24,6 +31,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--sparse", action="store_true",
+                    help="block-prune, compile to BCS, serve on the "
+                         "Pallas sparse kernel")
+    ap.add_argument("--prune-rate", type=float, default=0.6)
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
@@ -32,11 +43,23 @@ def main(argv=None):
                         frontend_tokens=cfg.n_frontend_tokens
                         if cfg.family in ("encdec", "vlm") else 0,
                         d_model=cfg.d_model)
+    if args.sparse:
+        masks = RW.magnitude_block_masks(params, SPARSE_SPEC, (16, 16),
+                                         rate=args.prune_rate)
+        params = apply_masks(params, masks)
+        t0 = time.time()
+        params, report = compile_model(params, masks, SPARSE_SPEC,
+                                       keep_dense=False)
+        print(f"compile_model in {time.time() - t0:.2f}s:")
+        print(compiled_summary(report))
+
     t0 = time.time()
-    out = generate(params, cfg, b["tokens"], args.new_tokens,
-                   frontend=b.get("frontend"))
+    out = jax.block_until_ready(
+        generate(params, cfg, b["tokens"], args.new_tokens,
+                 frontend=b.get("frontend")))
     dt = time.time() - t0
-    print(f"{args.arch}: generated {out.shape} in {dt:.2f}s "
+    mode = "sparse" if args.sparse else "dense"
+    print(f"{args.arch} [{mode}]: generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. compile)")
     print("sample:", out[0][:16].tolist())
 

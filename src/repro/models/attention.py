@@ -7,6 +7,11 @@ Sharding modes (set per arch in configs, see DESIGN.md §5):
   - "seq":   query sequence sharded over the model axis (context parallel) —
     used when n_heads % tp != 0 (phi3: 40H, hymba: 25H).
 Decode KV caches are sequence-sharded over the model axis universally.
+
+Sparse serving: all four projections (wq/wk/wv/wo) dispatch through
+``layers.linear``, so layers compiled by ``repro.serve.compile`` carry packed
+BCS weights and execute on the Pallas block-sparse kernel transparently; the
+training-time pruning masks are baked into the packed layout and dropped.
 """
 from __future__ import annotations
 
@@ -17,6 +22,13 @@ from repro.models import module as M
 from repro.models import layers as L
 
 NEG_INF = -1e30
+
+
+def _proj(params, name, x, masks):
+    """One attention projection.  ``layers.linear`` owns the dispatch:
+    packed BCS layers route to the sparse kernel (and ignore the mask —
+    it is baked into the layout); dense layers apply it."""
+    return L.linear(params[name], x, masks.get(name))
 
 
 def attn_init(key, d_model, n_heads, n_kv, head_dim, dtype=jnp.bfloat16,
@@ -134,11 +146,11 @@ def mha(params, x, positions, n_heads, n_kv, head_dim, *, causal=True,
     performs cross-attention against it (no causal mask, no rope on kv)."""
     m = masks or {}
     B, S, _ = x.shape
-    q = L.linear(params["wq"], x, m.get("wq")).reshape(B, S, n_heads, head_dim)
+    q = _proj(params, "wq", x, m).reshape(B, S, n_heads, head_dim)
     src = memory if memory is not None else x
     Sk = src.shape[1]
-    k = L.linear(params["wk"], src, m.get("wk")).reshape(B, Sk, n_kv, head_dim)
-    v = L.linear(params["wv"], src, m.get("wv")).reshape(B, Sk, n_kv, head_dim)
+    k = _proj(params, "wk", src, m).reshape(B, Sk, n_kv, head_dim)
+    v = _proj(params, "wv", src, m).reshape(B, Sk, n_kv, head_dim)
 
     if memory is None:
         q = L.apply_rotary(q, positions, rope_theta)
@@ -164,7 +176,7 @@ def mha(params, x, positions, n_heads, n_kv, head_dim, *, causal=True,
     out = attend(q, kf, vf, positions, k_pos,
                  causal=causal_, window=window, kv_chunk=kv_chunk)
     out = out.reshape(B, S, n_heads * head_dim)
-    return L.linear(params["wo"], out, m.get("wo")), (k, v)
+    return _proj(params, "wo", out, m), (k, v)
 
 
 def mha_decode(params, x, cache, pos, n_heads, n_kv, head_dim, *,
@@ -175,9 +187,9 @@ def mha_decode(params, x, cache, pos, n_heads, n_kv, head_dim, *,
     """
     m = masks or {}
     B, _, _ = x.shape
-    q = L.linear(params["wq"], x, m.get("wq")).reshape(B, 1, n_heads, head_dim)
-    k = L.linear(params["wk"], x, m.get("wk")).reshape(B, 1, n_kv, head_dim)
-    v = L.linear(params["wv"], x, m.get("wv")).reshape(B, 1, n_kv, head_dim)
+    q = _proj(params, "wq", x, m).reshape(B, 1, n_heads, head_dim)
+    k = _proj(params, "wk", x, m).reshape(B, 1, n_kv, head_dim)
+    v = _proj(params, "wv", x, m).reshape(B, 1, n_kv, head_dim)
     q = L.apply_rotary(q, pos, rope_theta)
     k = L.apply_rotary(k, pos, rope_theta)
 
@@ -194,5 +206,5 @@ def mha_decode(params, x, cache, pos, n_heads, n_kv, head_dim, *,
     out = attend_cached(_grouped(q, n_kv), k_cache, v_cache, pos[:, 0:1][0],
                         k_pos, window=window)
     out = out.reshape(B, 1, n_heads * head_dim)
-    y = L.linear(params["wo"], out, m.get("wo"))
+    y = _proj(params, "wo", out, m)
     return y, {"k": k_cache, "v": v_cache, "pos": k_pos}

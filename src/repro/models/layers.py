@@ -43,7 +43,7 @@ def apply_rotary(x, positions, theta=10000.0):
     return out.astype(x.dtype)
 
 
-# -- Linear (dense or masked-sparse) ----------------------------------------
+# -- Linear (dense, masked-sparse, or packed BCS-sparse) ---------------------
 
 def linear_init(key, in_dim, out_dim, dtype=jnp.bfloat16, bias=False):
     p = {"w": M.dense_init(key, (in_dim, out_dim), dtype)}
@@ -52,17 +52,36 @@ def linear_init(key, in_dim, out_dim, dtype=jnp.bfloat16, bias=False):
     return p
 
 
-def linear(params, x, mask=None):
-    """y = x @ (w * mask).  ``mask`` is a pruning mask broadcastable to w
-    (None means dense).  XLA fuses the mask multiply into the matmul operand.
+def _apply_act(y, act):
+    if act == "silu":
+        return jax.nn.silu(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    return y
+
+
+def linear(params, x, mask=None, act="none"):
+    """y = act(x @ W + b) through whichever executor applies.
+
+    If the layer carries packed BCS weights (``params["packed"]`` holding
+    ``values``/``k_idx``, installed by ``repro.serve.compile.compile_model``)
+    the Pallas block-sparse kernel executes it and fuses bias + activation
+    into the epilogue; any ``mask`` is ignored there (it was baked in at pack
+    time).  Otherwise a dense einsum runs, with an optional pruning ``mask``
+    broadcastable to w (XLA fuses the multiply into the matmul operand).
     """
+    packed = params.get("packed")
+    if packed is not None:
+        from repro.kernels import ops  # late import: kernels -> core only
+        return ops.sparse_linear(x, packed=packed, bias=params.get("b"),
+                                 act=act)
     w = params["w"]
     if mask is not None:
         w = w * mask.astype(w.dtype)
     y = jnp.einsum("...i,io->...o", x, w)
     if "b" in params:
         y = y + params["b"]
-    return y
+    return _apply_act(y, act)
 
 
 # -- Embedding ---------------------------------------------------------------
@@ -107,10 +126,15 @@ def ffn_init(key, d_model, d_ff, dtype=jnp.bfloat16):
 
 
 def ffn(params, x, masks=None):
+    """SwiGLU: silu is requested as the gate projection's epilogue so the
+    packed-BCS path fuses it into the kernel's final store.  Same math, but
+    under bf16 the fused path applies silu to the fp32 accumulator BEFORE
+    the output rounding (one rounding instead of two) — packed and dense
+    outputs may differ by ~1 bf16 ulp; in fp32 they agree tightly."""
     m = masks or {}
-    g = linear(params["gate"], x, m.get("gate"))
+    g = linear(params["gate"], x, m.get("gate"), act="silu")
     u = linear(params["up"], x, m.get("up"))
-    return linear(params["down"], jax.nn.silu(g) * u, m.get("down"))
+    return linear(params["down"], g * u, m.get("down"))
 
 
 # -- Depthwise causal conv1d (mamba/hymba mixers; NOT pruned per paper §5.2.4) --

@@ -431,3 +431,39 @@ def decode_step(params, cfg: ArchConfig, token, cache, pos, *, dist=None):
     if dist is not None:
         logits = dist.shard_logits(logits)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Fused decode loop (scan over decode_step — no per-token Python round-trip)
+# ---------------------------------------------------------------------------
+
+def decode_loop(params, cfg: ArchConfig, tok, cache, start_pos, n_new, *,
+                temperature=0.0, key=None, dist=None):
+    """Generate ``n_new`` tokens with ONE compiled program: a ``lax.scan``
+    whose body is ``decode_step`` + sampling.  The per-token Python loop
+    (dispatch + device sync every token) disappears; the whole decode is a
+    single XLA while-loop on device.
+
+    tok (B, 1) int32 first token to emit; start_pos (B, 1) int32 its
+    position.  Returns (tokens (B, n_new), final cache) — tok itself is the
+    first output token, matching the eager loop in
+    ``serve.engine.generate_python``.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def body(carry, i):
+        tok, cache = carry
+        pos = start_pos + i
+        logits, cache = decode_step(params, cfg, tok, cache, pos, dist=dist)
+        if temperature > 0:
+            sub = jax.random.fold_in(key, i)
+            nxt = jax.random.categorical(
+                sub, logits[:, -1, :] / temperature)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return (nxt.astype(jnp.int32), cache), tok
+
+    (_, cache), toks = jax.lax.scan(
+        body, (tok, cache), jnp.arange(n_new, dtype=jnp.int32))
+    return jnp.swapaxes(toks[..., 0], 0, 1), cache      # (B, n_new)

@@ -1,0 +1,152 @@
+"""Model "codegen" (paper §4.3): pruning masks + per-layer scheme mapping
+-> packed execution params.
+
+``compile_model`` is the compiler step the paper describes between pruning
+and deployment: given trained params, the {0,1} mask tree, and the
+per-layer scheme mapping produced by ``core.mapper_rule``/``mapper_search``,
+it packs every block-pruned projection into the uniform BCS/CSC layout and
+installs it as ``params[...]["packed"]`` so ``models.layers.linear`` (and
+therefore attention qkv/out, FFN gate/up/down) dispatches through the
+Pallas block-sparse kernel — PatDNN-style sparsity baked into the executed
+code, adapted to TPU tiles.
+
+Layer stacks are scanned over a stacked layer axis, so per-layer packed
+layouts are padded to a common max column degree L and stacked — one
+pallas_call per projection *kind*, not per layer.  Packing itself is
+vectorized + content-cached (see ``kernels.ops.pack``); a second compile of
+the same weights is free.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import reweighted as RW
+from repro.kernels import ops
+
+# schemes whose masks the BCS executor can exploit (whole blocks die)
+BLOCK_SCHEMES = ("block", "block_row", "block_col")
+
+
+def _pack_stacked(w, mask, block):
+    """Pack (..., K, N) weights slice-by-slice, pad every slice's column
+    degree to the stack max, and restack -> scan-compatible packed arrays.
+
+    Returns ({"values", "k_idx"}, stats)."""
+    w = np.asarray(w)
+    mask = np.broadcast_to(np.asarray(mask), w.shape)
+    lead = w.shape[:-2]
+    K, N = w.shape[-2:]
+    bk, bn = block
+    Kb = K // bk
+    wf = w.reshape((-1, K, N))
+    mf = mask.reshape((-1, K, N))
+    packs = [ops.pack(wf[i], mf[i], block) for i in range(wf.shape[0])]
+    Lmax = max(p["values"].shape[1] for p in packs)
+    vals, kidx = [], []
+    for p in packs:
+        v = np.asarray(p["values"])
+        k = np.asarray(p["k_idx"])
+        pad = Lmax - v.shape[1]
+        if pad:
+            v = np.concatenate(
+                [v, np.zeros((v.shape[0], pad) + v.shape[2:], v.dtype)], 1)
+            k = np.concatenate(
+                [k, np.zeros((k.shape[0], pad), k.dtype)], 1)
+        vals.append(v)
+        kidx.append(k)
+    values = np.stack(vals).reshape(lead + vals[0].shape)
+    k_idx = np.stack(kidx).reshape(lead + kidx[0].shape)
+    stats = {
+        "block": tuple(block), "shape": (K, N), "L": Lmax, "Kb": Kb,
+        "density": float(np.mean([p["density"] for p in packs])),
+        "flops_saved": max(0.0, 1.0 - Lmax / Kb),
+        "layers": int(np.prod(lead)) if lead else 1,
+    }
+    return {"values": jnp.asarray(values), "k_idx": jnp.asarray(k_idx)}, stats
+
+
+def compile_model(params, masks=None, mapping=(), *, block_override=None,
+                  keep_dense=True, min_saving=0.0,
+                  exclude=("router", "moe/", "embed", "head")):
+    """Pack every block-pruned linear layer of ``params`` for sparse
+    execution.  Returns (exec_params, report).
+
+    params   : model param tree (nested dicts; linear nodes hold "w").
+    masks    : {0,1} mask tree matching ``params`` (scalar sentinels on
+               unpruned leaves, as built by ``reweighted.masks_for_spec``).
+               None derives masks from the zeros already baked into ``w``
+               (i.e. params after ``trainer.apply_masks``).
+    mapping  : PruneSpec [(path_regex, SchemeChoice)] from the mapper —
+               only paths mapped to a block scheme are packed.
+    block_override : force one (bk, bn) packing block for every layer
+               (otherwise each layer uses its mapped choice.block).
+    keep_dense : keep "w" next to "packed" (dense fallback / debugging);
+               False drops it to halve serving weight memory.
+    min_saving : skip packing when the effective skipped-FLOP fraction
+               (1 - L/Kb under the uniform-padded layout) is not above
+               this — a padded layout with no skipping would only add
+               gather overhead.
+    exclude  : path substrings never packed (router/embeddings per §5.2.4;
+               MoE expert einsums don't dispatch through layers.linear yet).
+
+    Every packed node's report entry carries the effective density, padded
+    column degree L, and skipped-FLOP fraction; skipped nodes carry the
+    reason, so the report doubles as the compile log.
+    """
+    report = []
+
+    def walk(p, m, path):
+        if not isinstance(p, dict):
+            return p
+        out = {k: walk(v, m.get(k) if isinstance(m, dict) else None,
+                       f"{path}/{k}" if path else k)
+               for k, v in p.items()}
+        w = p.get("w")
+        if w is None or isinstance(w, dict) or getattr(w, "ndim", 0) < 2:
+            return out
+        wpath = f"{path}/w" if path else "w"
+
+        def skip(reason):
+            report.append({"path": wpath, "packed": False, "reason": reason})
+            return out
+
+        if any(e in wpath for e in exclude):
+            return skip("excluded")
+        choice = RW.match(list(mapping), wpath)
+        if choice is None or choice.scheme not in BLOCK_SCHEMES:
+            return skip("no block scheme mapped")
+        mask = m.get("w") if isinstance(m, dict) else None
+        if masks is None:
+            mask = np.asarray(w) != 0
+        elif mask is None or getattr(mask, "ndim", 0) == 0:
+            return skip("no mask (layer not pruned)")
+        block = tuple(block_override or choice.block)
+        K, N = w.shape[-2:]
+        if K % block[0] or N % block[1]:
+            return skip(f"block {block} does not divide ({K}, {N})")
+        packed, stats = _pack_stacked(w, mask, block)
+        if stats["flops_saved"] <= min_saving:
+            return skip(f"no effective saving (L={stats['L']} of "
+                        f"Kb={stats['Kb']} column blocks survive)")
+        out["packed"] = packed
+        if not keep_dense:
+            del out["w"]
+        report.append({"path": wpath, "packed": True, **stats})
+        return out
+
+    return walk(params, masks, ""), report
+
+
+def compiled_summary(report) -> str:
+    """One-line-per-layer compile log."""
+    lines = []
+    for r in report:
+        if r["packed"]:
+            lines.append(
+                f"  pack {r['path']:<28s} block={r['block']} "
+                f"density={r['density']:.2f} L={r['L']}/{r['Kb']} "
+                f"flops_saved={r['flops_saved']:.2f}")
+        else:
+            lines.append(f"  skip {r['path']:<28s} ({r['reason']})")
+    return "\n".join(lines)

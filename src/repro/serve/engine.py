@@ -3,6 +3,8 @@ the batched decode loop.  ``decode_step`` itself lives in models/transformer
 (it is what the decode_* dry-run shapes lower)."""
 from __future__ import annotations
 
+from collections import OrderedDict
+
 import jax
 import jax.numpy as jnp
 
@@ -125,23 +127,80 @@ def prefill(params, cfg: ArchConfig, tokens, frontend=None, dist=None):
     return logits, cache
 
 
+# jitted closures are cached per call signature: a fresh jax.jit(lambda ...)
+# every generate() would re-trace + re-compile the whole model per request.
+# cfg is a frozen (hashable) dataclass; dist objects are keyed by identity.
+# LRU-bounded — each entry pins a full compiled executable, so an unbounded
+# dict would grow with every distinct (cfg, n_new, temperature) seen.
+_JIT_CACHE: OrderedDict = OrderedDict()
+_JIT_CACHE_MAX = 32
+
+
+def _cached_jit(key, make):
+    if key in _JIT_CACHE:
+        _JIT_CACHE.move_to_end(key)
+    else:
+        _JIT_CACHE[key] = jax.jit(make())
+        while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
+    return _JIT_CACHE[key]
+
+
+def _jit_prefill(cfg, dist):
+    return _cached_jit(
+        ("prefill", cfg, id(dist)),
+        lambda: lambda p, t, f: prefill(p, cfg, t, frontend=f, dist=dist))
+
+
+def _jit_decode_loop(cfg, n_new, temperature, dist):
+    return _cached_jit(
+        ("loop", cfg, n_new, temperature, id(dist)),
+        lambda: lambda p, t, c, s, k: T.decode_loop(
+            p, cfg, t, c, s, n_new, temperature=temperature, key=k,
+            dist=dist))
+
+
+def _jit_decode_step(cfg, dist):
+    return _cached_jit(
+        ("step", cfg, id(dist)),
+        lambda: lambda p, tok, c, pos: T.decode_step(p, cfg, tok, c, pos,
+                                                     dist=dist))
+
+
 def generate(params, cfg: ArchConfig, tokens, n_new, frontend=None,
              dist=None, temperature=0.0, key=None):
-    """Greedy/temperature sampling loop over jitted decode_step."""
+    """Fused generation: jitted prefill, then ONE compiled scan over
+    ``decode_step`` (``models.transformer.decode_loop``) — decoding never
+    round-trips through Python per token.  Works with dense, masked, and
+    ``compile_model``-packed params alike."""
     B, Sq = tokens.shape
-    logits, cache = jax.jit(
-        lambda p, t, f: prefill(p, cfg, t, frontend=f, dist=dist)
-    )(params, tokens, frontend)
-    step_fn = jax.jit(
-        lambda p, tok, c, pos: T.decode_step(p, cfg, tok, c, pos, dist=dist))
+    logits, cache = _jit_prefill(cfg, dist)(params, tokens, frontend)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    start = jnp.full((B, 1), Sq, jnp.int32)
+    loop = _jit_decode_loop(cfg, n_new, temperature, dist)
+    toks, _ = loop(params, tok, cache, start,
+                   key if key is not None else jax.random.PRNGKey(0))
+    return toks
+
+
+def generate_python(params, cfg: ArchConfig, tokens, n_new, frontend=None,
+                    dist=None, temperature=0.0, key=None):
+    """Reference eager loop over jitted decode_step (one dispatch + one
+    device sync per token).  Kept as the parity oracle for the fused scan
+    loop and for step-by-step debugging."""
+    B, Sq = tokens.shape
+    logits, cache = _jit_prefill(cfg, dist)(params, tokens, frontend)
+    step_fn = _jit_decode_step(cfg, dist)
     out = []
     tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    if key is None:
+        key = jax.random.PRNGKey(0)
     for i in range(n_new):
         out.append(tok)
         pos = jnp.full((B, 1), Sq + i, jnp.int32)
         logits, cache = step_fn(params, tok, cache, pos)
         if temperature > 0:
-            key, sub = jax.random.split(key)
+            sub = jax.random.fold_in(key, i)
             tok = jax.random.categorical(
                 sub, logits[:, -1, :] / temperature)[:, None].astype(jnp.int32)
         else:

@@ -1,0 +1,61 @@
+"""Graceful fallback when ``hypothesis`` is not installed.
+
+Provides just enough of the ``given``/``settings``/``strategies`` surface
+for this repo's property tests to run as deterministic example sweeps: each
+strategy exposes a small fixed example list and ``given`` zips through them
+round-robin.  Coverage is obviously thinner than real hypothesis — install
+``requirements-dev.txt`` for the real thing — but the tier-1 suite stays
+runnable (and still exercises every property body) on a clean container.
+"""
+from __future__ import annotations
+
+
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class st:
+    @staticmethod
+    def sampled_from(xs):
+        return _Strategy(xs)
+
+    @staticmethod
+    def floats(lo, hi):
+        return _Strategy([lo, (3 * lo + hi) / 4, (lo + hi) / 2, hi])
+
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy([lo, lo + (hi - lo) // 3, lo + 2 * (hi - lo) // 3,
+                          hi])
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+
+def settings(*_args, **_kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Run the test once per round-robin combination of strategy examples.
+    The sweep length is the max example-list length (each list cycles), so
+    every example of every strategy appears at least once."""
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest would follow __wrapped__ to the
+        # original signature and demand fixtures for the strategy params.
+        def wrapper():
+            n = max(len(s.examples) for s in strategies.values())
+            for i in range(n):
+                picked = {name: s.examples[i % len(s.examples)]
+                          for name, s in strategies.items()}
+                fn(**picked)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean container: deterministic example sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import bcs as BCS
 from repro.core import regularity as R
