@@ -5,14 +5,17 @@ For a smoke LM at several block densities:
   - compile (pack) time through ``compile_model`` — cold and cached,
   - prefill + fused-scan decode latency on packed params,
   - the eager per-token Python decode loop for comparison (what the fused
-    ``lax.scan`` loop in serve.engine replaces).
+    ``lax.scan`` loop in serve.engine replaces),
+  - a MoE row: the three expert GEMMs through the batched sparse path
+    (``kernels.ops.sparse_expert_linear``) vs the dense masked einsum,
+    with the modeled serving-dim latency as the headline (interpret-mode
+    Pallas wall time is not meaningful; same convention as bench_kernel).
 Emitted rows land in BENCH_e2e_sparse.json under ``run.py --json`` so later
 PRs have a perf trajectory to compare against."""
 import time
 
 import jax
 import jax.numpy as jnp
-
 from repro import configs
 from repro.core import reweighted as RW
 from repro.kernels import ops
@@ -24,6 +27,9 @@ from repro.data.pipeline import synthetic_batch
 
 SPEC = [(r"(attn/w[qkvo]|ffn/(gate|up|down))/w",
          RW.SchemeChoice("block", (16, 16)))]
+
+MOE_SPEC = [(r"(attn/w[qkvo]|moe/(gate|up|down))/w",
+             RW.SchemeChoice("block", (16, 16)))]
 
 
 def _block_masks(params, zero_frac, block=(16, 16)):
@@ -38,6 +44,44 @@ def _timed(fn, iters):
         r = fn()
     jax.block_until_ready(r)
     return (time.perf_counter() - t0) / iters
+
+
+def _moe_rows(fast=True):
+    """Packed expert execution vs the dense masked einsum at >=70% block
+    sparsity: correctness + e2e generate on the smoke mixtral, modeled
+    expert-GEMM latency at serving dims (where the uniform-padded,
+    row-reordered layout's executed-block count decides the win)."""
+    rows = []
+    arch = "mixtral-8x7b"
+    cfg = configs.get(arch, smoke=True)
+    batch, prompt, new = 4, 32, 8
+    iters = 1 if fast else 3
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = synthetic_batch(0, 0, batch, prompt, cfg.vocab)["tokens"]
+    zero_frac = 0.75
+    masks = RW.random_block_masks(params, MOE_SPEC, (16, 16),
+                                  keep_prob=1.0 - zero_frac)
+    pm = apply_masks(params, masks)
+    exec_params, report = compile_model(pm, masks, MOE_SPEC)
+    moe_packed = [r for r in report if r["packed"] and "/moe/" in r["path"]]
+    t_dense = _timed(lambda: generate(pm, cfg, toks, new), iters)
+    t_sparse = _timed(lambda: generate(exec_params, cfg, toks, new), iters)
+    saved = (sum(r["flops_saved"] for r in moe_packed) / len(moe_packed)
+             if moe_packed else 0.0)
+
+    # modeled expert GEMMs at serving dims (shared helper — see
+    # benchmarks.bench_moe_sparse.modeled_expert_us)
+    from benchmarks.bench_moe_sparse import modeled_expert_us
+    us_dense, us_sparse, _, _, _ = modeled_expert_us(cfg.n_experts,
+                                                     zero_frac)
+    rows.append((f"e2e,{arch},moe,zf{zero_frac:.2f}", us_sparse,
+                 f"dense_einsum_us={us_dense:.1f};"
+                 f"modeled_speedup={us_dense / us_sparse:.2f}x;"
+                 f"moe_packed_layers={len(moe_packed)};"
+                 f"mean_flops_saved={saved:.2f};"
+                 f"wall_sparse_interp_us={t_sparse * 1e6:.0f};"
+                 f"wall_dense_us={t_dense * 1e6:.0f}"))
+    return rows
 
 
 def bench(fast=True):
@@ -79,4 +123,5 @@ def bench(fast=True):
                      f"mean_flops_saved={saved:.2f};"
                      f"pack_cold_us={t_cold * 1e6:.0f};"
                      f"pack_cached_us={t_warm * 1e6:.0f}"))
+    rows += _moe_rows(fast)
     return rows

@@ -64,6 +64,47 @@ def bench_packing(fast=True):
     return rows
 
 
+def _skewed_mask(K, N, blk, heavy_cols=1, light_degree=1, seed=3):
+    """Degree-skewed fixture: ``heavy_cols`` block columns keep every
+    K-block, the rest keep ``light_degree`` random blocks — the worst case
+    for uniform padding (one heavy column sets L for everyone) and the
+    best case for row reordering/binning."""
+    Kb, Nb = K // blk[0], N // blk[1]
+    keep = np.zeros((Kb, Nb), bool)
+    keep[:, :heavy_cols] = True
+    rng = np.random.default_rng(seed)
+    for j in range(heavy_cols, Nb):
+        keep[rng.choice(Kb, light_degree, replace=False), j] = True
+    return jnp.asarray(np.repeat(np.repeat(keep, blk[0], 0), blk[1], 1),
+                       jnp.float32)
+
+
+def bench_reorder(fast=True):
+    """Row reordering on the skewed-degree fixture: padded L must drop
+    strictly (toward the mean degree) with bit-identical outputs."""
+    rows = []
+    K, N, M, blk = 512, 512, 128, (64, 64)
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    mask = _skewed_mask(K, N, blk)
+    plain = ops.pack(w, mask, blk)
+    for n_bins in ((2, 4) if fast else (2, 4, 8)):
+        reord = ops.pack(w, mask, blk, reorder=True, n_bins=n_bins)
+        y0 = ops.sparse_linear(x, packed=plain, bm=64)
+        y1 = ops.sparse_linear(x, packed=reord, bm=64)
+        bit_identical = bool(np.array_equal(np.asarray(y0), np.asarray(y1)))
+        t = matmul_latency(M, K, N, scheme="block", block=blk,
+                           compression=(plain.Kb * plain.Nb)
+                           / max(reord.executed_blocks, 1))
+        rows.append((f"reorder,bins{n_bins}", t * 1e6,
+                     f"L_max={plain.L_max};L_reordered={reord.L_effective:.2f};"
+                     f"L_reduced={reord.L_effective < plain.L_max};"
+                     f"flops_skipped_eff={ops.flops_saved(reord):.2f};"
+                     f"unreordered_skipped={ops.flops_saved(plain):.2f};"
+                     f"bit_identical={bit_identical}"))
+    return rows
+
+
 def bench(fast=True):
     rows = []
     K, N, M, blk = 512, 512, 128, (64, 64)
@@ -77,11 +118,12 @@ def bench(fast=True):
         err = float(jnp.max(jnp.abs(y - y_ref)))
         b = BCS.from_dense(np.asarray(w), np.asarray(mask, np.float32), blk)
         t = matmul_latency(M, K, N, scheme="block", block=blk,
-                           compression=1.0 / max(packed["density"], 1e-6))
-        rows.append((f"kernel,density{packed['density']:.2f}", t * 1e6,
+                           compression=1.0 / max(packed.density, 1e-6))
+        rows.append((f"kernel,density{packed.density:.2f}", t * 1e6,
                      f"flops_skipped_eff={ops.flops_saved(packed):.2f};"
                      f"pad_overhead={ops.padding_overhead(packed):.2f};"
                      f"idx_bytes={b.index_bytes()};"
                      f"csr_bytes={b.csr_index_bytes()};max_err={err:.1e}"))
+    rows += bench_reorder(fast)
     rows += bench_packing(fast)
     return rows

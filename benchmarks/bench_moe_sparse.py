@@ -1,0 +1,102 @@
+"""Batched sparse MoE expert GEMMs vs the dense masked einsum path.
+
+Two row families per expert count:
+
+  parity rows  — smoke-dim full ``moe()`` through ``compile_model`` +
+    ``kernels.ops.sparse_expert_linear`` (the vmapped BCS kernel) vs the
+    dense masked einsum: measured wall time (interpret-mode Pallas, so
+    only the correctness ``max_err`` is meaningful) and the packed
+    layers' effective skipped-FLOP fraction.
+
+  modeled rows — per-expert packs at serving-scale GEMM dims
+    (D=1024, F=4096, MXU-sized (128,128) blocks): dense vs batched sparse
+    expert latency from ``core.latency_model`` at the layout's
+    executed-block count, with and without row reordering.  Wall-clock on
+    TPU is not measurable in this container, so the modeled number is the
+    headline — the same convention as ``bench_kernel``.
+
+Emitted rows land in BENCH_moe_sparse.json under ``run.py --json``."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reweighted as RW
+from repro.core.latency_model import matmul_latency
+from repro.kernels import ops
+from repro.models.moe import moe, moe_init
+from repro.serve.compile import compile_model
+from repro.train.trainer import apply_masks
+
+MOE_SPEC = [(r"(gate|up|down)/w", RW.SchemeChoice("block", (16, 16)))]
+
+
+def _parity_row(E, zero_frac, top_k=2):
+    D, F = 64, 128
+    params = moe_init(jax.random.PRNGKey(0), D, F, E, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, D), jnp.float32)
+    masks = RW.random_block_masks(params, MOE_SPEC, (16, 16),
+                                  keep_prob=1.0 - zero_frac)
+    masked = apply_masks(params, masks)
+    exec_params, report = compile_model(masked, masks, MOE_SPEC)
+    packed = [r for r in report if r["packed"]]
+    t0 = time.perf_counter()
+    out_d, _ = jax.block_until_ready(moe(masked, x, top_k=top_k, group=64))
+    t_dense = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_s, _ = jax.block_until_ready(
+        moe(exec_params, x, top_k=top_k, group=64))
+    t_sparse = time.perf_counter() - t0
+    err = float(jnp.max(jnp.abs(out_d - out_s)))
+    saved = float(np.mean([r["flops_saved"] for r in packed])) if packed \
+        else 0.0
+    return (f"moe,E{E},zf{zero_frac:.2f},parity", t_sparse * 1e6,
+            f"wall_dense_us={t_dense * 1e6:.0f};packed_layers={len(packed)};"
+            f"mean_flops_saved={saved:.2f};max_err={err:.1e}")
+
+
+def modeled_expert_us(E, zero_frac, tokens_per_expert=1024, seed=0):
+    """Modeled dense vs batched-sparse expert-GEMM latency at serving dims
+    (D=1024, F=4096, MXU (128,128) blocks): the executed-block count comes
+    from a real pack of a weight at those dims and this sparsity.  Shared
+    by ``bench_moe_sparse`` and the MoE row of ``bench_e2e_sparse``.
+
+    Returns (us_dense, us_reordered, us_unreordered, plain, reord)."""
+    D, F, blk = 1024, 4096, (128, 128)
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((D, F)).astype(np.float32)
+    keep = rng.random((D // blk[0], F // blk[1])) > zero_frac
+    mask = np.repeat(np.repeat(keep, blk[0], 0), blk[1], 1)
+    mask = mask.astype(np.float32)
+    plain = ops.pack(w, mask, blk)
+    reord = ops.pack(w, mask, blk, reorder=True, n_bins=8)
+
+    def us(layout):
+        comp = (layout.Kb * layout.Nb) / max(layout.executed_blocks, 1)
+        return E * matmul_latency(tokens_per_expert, D, F, scheme="block",
+                                  block=blk, compression=comp) * 1e6
+
+    us_dense = E * matmul_latency(tokens_per_expert, D, F,
+                                  scheme="none") * 1e6
+    return us_dense, us(reord), us(plain), plain, reord
+
+
+def _modeled_row(E, zero_frac):
+    us_dense, us_reord, us_plain, plain, reord = modeled_expert_us(
+        E, zero_frac)
+    return (f"moe,E{E},zf{zero_frac:.2f},modeled", us_reord,
+            f"dense_einsum_us={us_dense:.1f};"
+            f"speedup_vs_dense={us_dense / us_reord:.2f}x;"
+            f"unreordered_us={us_plain:.1f};"
+            f"flops_saved={reord.flops_saved:.2f};"
+            f"L={plain.L_max}->{reord.L_effective:.2f}")
+
+
+def bench(fast=True):
+    rows = []
+    for E in ((4, 8) if fast else (4, 8, 16)):
+        for zero_frac in ((0.75,) if fast else (0.5, 0.75, 0.875)):
+            rows.append(_parity_row(E, zero_frac))
+            rows.append(_modeled_row(E, zero_frac))
+    return rows

@@ -13,6 +13,7 @@ BENCHES = [
     "bench_latency_model",    # Fig 9/10 (latency model sweeps)
     "bench_kernel",           # §4.3 BCS kernel skipping + packing speed
     "bench_e2e_sparse",       # whole-model prefill+decode via compile_model
+    "bench_moe_sparse",       # batched sparse MoE expert GEMMs vs dense
     "bench_macs",             # Table 5
     "bench_portability",      # Table 7
     "bench_blocksize",        # Fig 5 + Fig 9 (acc/latency vs block)

@@ -33,7 +33,7 @@ def kernel_demo():
     mask = mask.astype(jnp.float32)
     packed = ops.pack(w, mask, (128, 128))
     b = BCS.from_dense(np.asarray(w), np.asarray(mask), (128, 128))
-    print(f"density={packed['density']:.2f}  "
+    print(f"density={packed.density:.2f}  "
           f"flops_skipped(effective)={ops.flops_saved(packed)*100:.0f}%  "
           f"pad_overhead={ops.padding_overhead(packed):.2f}x  "
           f"BCS idx bytes={b.index_bytes()} (CSR {b.csr_index_bytes()})")

@@ -14,7 +14,15 @@ trip counts per grid row = the thread-load-balance analogue.
 
 Packing is fully vectorized (argsort/cumsum CSC construction) so whole-model
 compiles stay off the Python-loop floor; the ``*_loop`` reference
-implementations are kept for equivalence tests and the packing benchmark."""
+implementations are kept for equivalence tests and the packing benchmark.
+
+Downstream interchange format: everything the executor consumes is a
+``core.packed.PackedLayout`` (built here by ``pack_csc_reordered`` or
+assembled from ``pack_csc`` by ``kernels.ops.pack``) — the single layout
+object shared by ``serve.compile``, ``kernels.ops``/``bsr_matmul``, and
+``models.layers``/``models.moe``.  Row reordering for load balance (Fig 4)
+lives in ``pack_csc_reordered``: block columns sorted by degree and binned
+so the padded column degree L drops toward the mean instead of the max."""
 from __future__ import annotations
 
 import functools
@@ -267,6 +275,55 @@ def pack_csc(w, mask, block):
     kidx.reshape(-1)[cols_j * Lmax + slot] = rows_j
     density = nnzb / (Kb * Nb)
     return vals, jnp.asarray(kidx), jnp.asarray(nnz), density
+
+
+def bin_bounds(nb: int, n_bins: int) -> tuple:
+    """Contiguous (start, end) ranges splitting ``nb`` sorted block columns
+    into ``n_bins`` near-equal bins.  Depends only on (nb, n_bins), so every
+    slice of a stacked layer/expert axis gets identical bin sizes — the
+    stacking invariant ``serve.compile._pack_stacked`` relies on."""
+    n_bins = max(1, min(n_bins, nb))
+    edges = np.linspace(0, nb, n_bins + 1).round().astype(int)
+    return tuple((int(a), int(b)) for a, b in zip(edges[:-1], edges[1:])
+                 if b > a)
+
+
+def pack_csc_reordered(w, mask, block, n_bins=4):
+    """Degree-sorted, binned CSC packing — the paper's Fig 4 *row reordering
+    for load balance*, applied to the kernel's work rows (block columns).
+
+    ``pack_csc`` pads every block column to the global max degree L, so one
+    heavy column makes the whole matrix execute L·Nb blocks.  Here columns
+    are sorted by descending degree and split into ``n_bins`` contiguous
+    bins, each padded only to its own max — heavy columns share a deep bin,
+    light columns a shallow one, and the executed degree drops toward the
+    mean.  Within a column the K-block order is untouched, so per-output
+    accumulation order (and therefore the result) is bit-identical to the
+    unreordered kernel; outputs just need a final column gather.
+
+    Returns a ``core.packed.PackedLayout`` with per-bin values/k_idx,
+    ``perm`` (layout position -> original column) and ``inv_perm``.
+    """
+    from repro.core.packed import PackedLayout
+
+    vals, kidx, nnz, density = pack_csc(w, mask, block)
+    cnt = np.asarray(nnz)
+    Nb = cnt.shape[0]
+    order = np.argsort(-cnt, kind="stable").astype(np.int32)
+    inv = np.empty(Nb, np.int32)
+    inv[order] = np.arange(Nb, dtype=np.int32)
+    vs = jnp.take(vals, jnp.asarray(order), axis=0)
+    ks = jnp.take(kidx, jnp.asarray(order), axis=0)
+    cnt_sorted = cnt[order]
+    bin_values, bin_kidx = [], []
+    for s, e in bin_bounds(Nb, n_bins):
+        Lb = max(1, int(cnt_sorted[s:e].max()))
+        bin_values.append(vs[s:e, :Lb])
+        bin_kidx.append(ks[s:e, :Lb])
+    return PackedLayout(values=tuple(bin_values), k_idx=tuple(bin_kidx),
+                        nnz=jnp.asarray(cnt_sorted),
+                        perm=jnp.asarray(order), inv_perm=jnp.asarray(inv),
+                        block=tuple(block), shape=tuple(np.shape(w)))
 
 
 def pad_to_uniform_csc_loop(bcs: BCS):

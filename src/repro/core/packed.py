@@ -1,0 +1,196 @@
+"""PackedLayout — the single interchange format for block-sparse execution.
+
+Every sparse consumer in the repo (``serve.compile.compile_model``,
+``kernels.ops``, ``kernels.bsr_matmul``, ``models.layers.linear`` and the
+batched MoE expert path in ``models.moe``) produces/consumes this one object
+instead of ad-hoc ``{"values", "k_idx"}`` dicts.  It is a registered pytree,
+so layouts live inside param trees, survive ``jax.jit``/``lax.scan`` over
+stacked layer axes (leaves may carry leading stack dims; ``block``/``shape``
+are static aux data), and new consumers (conv, SSM) become layout
+*producers*, not new dict formats.
+
+Layout semantics (paper §4.3 Fig 4, CSC orientation — see ``core.bcs``):
+the dense weight is (K, N); each block COLUMN j (output tile) stores the
+list of surviving K-block indices.  With *row reordering for load balance*
+(the paper's Fig 4 reorder step), block columns are sorted by degree and
+split into ``n_bins`` contiguous bins, each padded only to its OWN max
+degree — so the executed column degree drops toward the mean instead of
+every column paying the global max.  ``perm``/``inv_perm`` carry the
+(inverse) permutation; the executor gathers outputs back to original column
+order (bit-identical results, since per-column accumulation order is
+untouched).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# frozen: ops.pack hands out the SAME cached instance to every caller, so a
+# mutable layout would let one consumer corrupt the pack cache for all.
+# eq=False: the generated __eq__ would compare jax array leaves (ambiguous
+# truth value); identity comparison is the meaningful one for layouts.
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True, eq=False)
+class PackedLayout:
+    """Uniform-padded BCS/CSC layout, optionally degree-sorted and binned.
+
+    Array leaves (may carry leading stack dims ``...`` = layers / experts):
+      values   : tuple of per-bin arrays (..., nb_b, L_b, bk, bn)
+      k_idx    : tuple of per-bin arrays (..., nb_b, L_b) int32
+      nnz      : (..., Nb) int32 live K-blocks per column, in LAYOUT order
+      perm     : (..., Nb) int32 layout position -> original block column,
+                 or None when the layout is in original column order
+      inv_perm : (..., Nb) int32 original block column -> layout position,
+                 or None (identity)
+
+    Static aux data (hashable; part of the jit cache key):
+      block : (bk, bn)
+      shape : (K, N) of one dense weight slice
+    """
+
+    values: tuple
+    k_idx: tuple
+    nnz: object
+    perm: object = None
+    inv_perm: object = None
+    block: tuple = (128, 128)
+    shape: tuple = (0, 0)
+
+    # -- pytree protocol -----------------------------------------------------
+
+    def tree_flatten(self):
+        children = (self.values, self.k_idx, self.nnz, self.perm,
+                    self.inv_perm)
+        return children, (self.block, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, k_idx, nnz, perm, inv_perm = children
+        block, shape = aux
+        return cls(values=values, k_idx=k_idx, nnz=nnz, perm=perm,
+                   inv_perm=inv_perm, block=block, shape=shape)
+
+    # -- static geometry (no device sync) ------------------------------------
+
+    @property
+    def Kb(self) -> int:
+        return self.shape[0] // self.block[0]
+
+    @property
+    def Nb(self) -> int:
+        return self.shape[1] // self.block[1]
+
+    @property
+    def n_bins(self) -> int:
+        return len(self.values)
+
+    @property
+    def bin_sizes(self) -> tuple:
+        """Block columns per bin."""
+        return tuple(v.shape[-4] for v in self.values)
+
+    @property
+    def bin_degrees(self) -> tuple:
+        """Padded column degree L_b of each bin."""
+        return tuple(v.shape[-3] for v in self.values)
+
+    @property
+    def L_max(self) -> int:
+        """Worst padded column degree across bins — what every column would
+        pay without reordering/binning."""
+        return max(self.bin_degrees)
+
+    @property
+    def executed_blocks(self) -> int:
+        """Blocks the kernel actually multiplies per dense-weight slice:
+        sum over bins of nb_b * L_b (padding included)."""
+        return sum(s * d for s, d in zip(self.bin_sizes, self.bin_degrees))
+
+    @property
+    def L_effective(self) -> float:
+        """Mean executed column degree under the binned layout; equals
+        ``L_max`` for a single unreordered bin."""
+        return self.executed_blocks / max(self.Nb, 1)
+
+    @property
+    def flops_saved(self) -> float:
+        """Fraction of dense matmul FLOPs the kernel skips.  The padded
+        layout executes ``executed_blocks`` of Kb*Nb — NOT the raw block
+        density: imbalanced column degrees execute padding blocks."""
+        return max(0.0, 1.0 - self.executed_blocks / (self.Kb * self.Nb))
+
+    # -- data-dependent stats (host sync; report/test time only) -------------
+
+    @property
+    def nnzb(self) -> int:
+        """Surviving blocks per dense-weight slice (mean over stack dims)."""
+        n = np.asarray(self.nnz)
+        per_slice = n.reshape(-1, n.shape[-1]).sum(axis=1)
+        return int(round(float(per_slice.mean())))
+
+    @property
+    def density(self) -> float:
+        return self.nnzb / (self.Kb * self.Nb)
+
+    @property
+    def padding_overhead(self) -> float:
+        """Executed-block overhead of padding vs ideal CSC."""
+        return self.executed_blocks / max(self.nnzb, 1)
+
+    # -- helpers -------------------------------------------------------------
+
+    def unpermute_cols(self, y):
+        """Gather a (..., M, N) output from layout column order back to the
+        original column order (identity when the layout is unreordered)."""
+        if self.inv_perm is None:
+            return y
+        bn = self.block[1]
+        yb = y.reshape(y.shape[:-1] + (self.Nb, bn))
+        yb = jnp.take(yb, self.inv_perm, axis=-2)
+        return yb.reshape(y.shape)
+
+    def permute_bias(self, bias):
+        """Gather a (N,) bias into layout column order for fused epilogues."""
+        if bias is None or self.perm is None:
+            return bias
+        bn = self.block[1]
+        bb = bias.reshape(self.Nb, bn)
+        return jnp.take(bb, self.perm, axis=0).reshape(-1)
+
+    def bin_bias(self, bias):
+        """Per-bin (nb_b * bn,) bias slices in layout order (or Nones)."""
+        if bias is None:
+            return (None,) * self.n_bins
+        bn = self.block[1]
+        pb = self.permute_bias(bias).reshape(self.Nb, bn)
+        out, start = [], 0
+        for s in self.bin_sizes:
+            out.append(pb[start:start + s].reshape(-1))
+            start += s
+        return tuple(out)
+
+    def to_dense(self):
+        """Reconstruct the dense (K, N) weight (single-slice layouts only) —
+        the test/debug oracle for round-trip identity."""
+        assert self.values[0].ndim == 4, "to_dense needs an unstacked layout"
+        K, N = self.shape
+        bk, bn = self.block
+        Kb, Nb = self.Kb, self.Nb
+        dense = np.zeros((Kb, Nb, bk, bn),
+                         np.asarray(self.values[0]).dtype)
+        col = 0
+        perm = (np.asarray(self.perm) if self.perm is not None
+                else np.arange(Nb))
+        nnz = np.asarray(self.nnz)
+        for vals, kidx in zip(self.values, self.k_idx):
+            vals, kidx = np.asarray(vals), np.asarray(kidx)
+            for j in range(vals.shape[0]):
+                oj = int(perm[col + j])
+                for l in range(int(nnz[col + j])):
+                    dense[int(kidx[j, l]), oj] += vals[j, l]
+            col += vals.shape[0]
+        return dense.transpose(0, 2, 1, 3).reshape(K, N)

@@ -21,6 +21,12 @@ bf16 reads, fp32 accumulate, one rounding on the final store.
 Ragged M is handled here: M is zero-padded up to the next ``bm`` multiple
 before the grid launch and the pad rows are sliced off the output, so
 callers never silently fall back to a dense matmul.
+
+``bsr_matmul`` is the raw single-bin launch; consumers go through
+``bsr_matmul_packed``, which takes a ``core.packed.PackedLayout`` — the
+repo-wide interchange format — runs one launch per degree bin (row
+reordering/binning: each bin is padded only to its own max column degree)
+and gathers outputs back to original column order in the epilogue.
 """
 from __future__ import annotations
 
@@ -117,3 +123,25 @@ def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
         interpret=interpret,
     )(k_idx, *args)
     return y[:M] if Mp != M else y
+
+
+def bsr_matmul_packed(x, layout, bias=None, *, bm=128, act="none",
+                      interpret=None, out_dtype=None):
+    """x (M, K) @ PackedLayout W (K, N) -> (M, N).
+
+    One ``bsr_matmul`` launch per degree bin — each bin's columns are padded
+    only to the bin max, so a reordered layout executes
+    ``layout.executed_blocks`` < Nb * L_max blocks.  Bias and activation
+    fuse into each bin's epilogue (bias is gathered into layout column
+    order first); the final column gather restores the original output
+    order.  Per-column accumulation order is identical to the single-bin
+    kernel, so reordered and unreordered results are bit-identical.
+    """
+    outs = []
+    for vals_b, kidx_b, bias_b in zip(layout.values, layout.k_idx,
+                                      layout.bin_bias(bias)):
+        outs.append(bsr_matmul(x, vals_b, kidx_b, bias=bias_b, bm=bm,
+                               act=act, interpret=interpret,
+                               out_dtype=out_dtype))
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+    return layout.unpermute_cols(y)

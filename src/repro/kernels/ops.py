@@ -2,25 +2,34 @@
 
 ``sparse_linear`` picks the execution strategy the compiler framework
 would emit for a pruned layer:
-  packed BCS layout    -> Pallas bsr_matmul (skips pruned blocks; ragged
+  PackedLayout         -> Pallas bsr_matmul (skips pruned blocks; ragged
                           M is zero-padded inside the kernel wrapper, so
                           the packed path never falls back to dense)
   dense weight (+mask) -> masked-dense matmul (mask fused by XLA)
 
-``pack`` is the host-side codegen step: it converts a pruned weight into
-the uniform CSC block layout the kernel consumes.  Results are memoized on
-a content digest of (w, mask, block) so recompiles and repeated serve-path
-setup never repack — packing cost is paid once per distinct weight."""
+``sparse_expert_linear`` is the batched variant for MoE expert stacks: a
+``jax.vmap`` of the packed kernel over the leading expert axis, so the
+three expert GEMMs (gate/up/down) execute through the same sparse path as
+every other projection.
+
+``pack`` is the host-side codegen step: it converts a pruned weight into a
+``core.packed.PackedLayout`` — the single interchange format every sparse
+consumer shares — optionally degree-sorted/binned (``reorder``) so the
+padded column degree L drops toward the mean.  Results are memoized on a
+content digest of (w, mask, block, reorder, n_bins); reordered and
+unreordered packs of the same weights can never collide."""
 from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import bcs as BCS
-from repro.kernels.bsr_matmul import bsr_matmul
+from repro.core.packed import PackedLayout
+from repro.kernels.bsr_matmul import bsr_matmul_packed
 from repro.kernels import ref
 
 _PACK_CACHE: OrderedDict = OrderedDict()
@@ -30,37 +39,45 @@ _PACK_CACHE_MAX = 256
 _PACK_CACHE_MAX_BYTES = 256 << 20
 
 
-def _entry_bytes(out) -> int:
-    return sum(int(np.prod(out[k].shape)) * out[k].dtype.itemsize
-               for k in ("values", "k_idx", "nnz"))
+def _entry_bytes(layout: PackedLayout) -> int:
+    leaves = jax.tree_util.tree_leaves(layout)
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in leaves)
 
 
-def _digest(w: np.ndarray, mask: np.ndarray, block) -> str:
+def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins) -> str:
     h = hashlib.blake2b(digest_size=16)
-    h.update(str((w.shape, str(w.dtype), block)).encode())
+    h.update(str((w.shape, str(w.dtype), block, bool(reorder),
+                  int(n_bins))).encode())
     h.update(np.ascontiguousarray(w).tobytes())
     h.update(np.ascontiguousarray(mask).tobytes())
     return h.hexdigest()
 
 
-def pack(w, mask, block=(128, 128), use_cache=True):
+def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4,
+         use_cache=True) -> PackedLayout:
     """Host-side packing of a pruned weight into the kernel layout.
 
-    Returns {"values", "k_idx", "nnz", "block", "shape", "density"}.
-    ``values``/``k_idx``/``nnz`` are device arrays; the rest is metadata.
+    Returns a ``PackedLayout``.  With ``reorder`` the block columns are
+    degree-sorted and split into ``n_bins`` bins (see
+    ``core.bcs.pack_csc_reordered``); without it the layout is a single bin
+    in original column order, bit-identical to the historical uniform CSC
+    arrays.
     """
     w = np.asarray(w)
     mask = np.asarray(mask)
-    key = _digest(w, mask, tuple(block)) if use_cache else None
+    key = (_digest(w, mask, tuple(block), reorder, n_bins)
+           if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
-        return dict(_PACK_CACHE[key])
-    values, k_idx, nnz, density = BCS.pack_csc(w, mask, block)
-    out = {"values": values, "k_idx": k_idx, "nnz": nnz,
-           "block": tuple(block), "shape": tuple(w.shape),
-           "density": density}
+        return _PACK_CACHE[key]
+    if reorder:
+        out = BCS.pack_csc_reordered(w, mask, block, n_bins=n_bins)
+    else:
+        values, k_idx, nnz, _ = BCS.pack_csc(w, mask, block)
+        out = PackedLayout(values=(values,), k_idx=(k_idx,), nnz=nnz,
+                           block=tuple(block), shape=tuple(w.shape))
     if key is not None:
-        _PACK_CACHE[key] = dict(out)
+        _PACK_CACHE[key] = out
         total = sum(_entry_bytes(e) for e in _PACK_CACHE.values())
         while (len(_PACK_CACHE) > _PACK_CACHE_MAX
                or total > _PACK_CACHE_MAX_BYTES) and len(_PACK_CACHE) > 1:
@@ -73,19 +90,20 @@ def clear_pack_cache():
     _PACK_CACHE.clear()
 
 
-def sparse_linear(x, packed=None, w=None, mask=None, bias=None, act="none",
-                  bm=128, interpret=None):
+def sparse_linear(x, packed: PackedLayout | None = None, w=None, mask=None,
+                  bias=None, act="none", bm=128, interpret=None):
     """x (..., K) -> (..., N) through whichever path applies.
 
-    With ``packed`` the Pallas BCS kernel always runs (ragged leading
-    dims are flattened; ragged M is padded inside ``bsr_matmul``).
-    ``interpret=None`` auto-detects the backend."""
+    With ``packed`` (a PackedLayout) the Pallas BCS kernel always runs —
+    one launch per degree bin, outputs gathered back to original column
+    order (ragged leading dims are flattened; ragged M is padded inside
+    ``bsr_matmul``).  ``interpret=None`` auto-detects the backend."""
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     if packed is not None:
-        y = bsr_matmul(x2, packed["values"], packed["k_idx"], bias=bias,
-                       bm=bm, act=act, interpret=interpret)
+        y = bsr_matmul_packed(x2, packed, bias=bias, bm=bm, act=act,
+                              interpret=interpret)
     else:
         y = ref.masked_matmul_ref(
             x2, w, mask if mask is not None else jnp.ones_like(w),
@@ -93,20 +111,34 @@ def sparse_linear(x, packed=None, w=None, mask=None, bias=None, act="none",
     return y.reshape(*lead, y.shape[-1])
 
 
-def flops_saved(packed) -> float:
+def sparse_expert_linear(x, packed: PackedLayout, bias=None, act="none",
+                         bm=128, interpret=None):
+    """Batched per-expert sparse GEMM: x (E, M, K) -> (E, M, N).
+
+    ``packed`` carries a leading expert axis on every leaf (values
+    (E, nb_b, L_b, bk, bn), perm (E, Nb), ...) — exactly what
+    ``serve.compile._pack_stacked`` emits for MoE expert weights.  The
+    packed kernel is ``jax.vmap``-ed over that axis, so all experts run as
+    one batched launch per bin instead of E Python-level calls."""
+    def fn(xe, le, be=None):
+        return bsr_matmul_packed(xe, le, bias=be, bm=bm, act=act,
+                                 interpret=interpret)
+
+    if bias is not None:
+        return jax.vmap(fn)(x, packed, bias)
+    return jax.vmap(lambda xe, le: fn(xe, le))(x, packed)
+
+
+def flops_saved(packed: PackedLayout) -> float:
     """Fraction of dense matmul FLOPs the kernel actually skips.
 
-    The uniform CSC layout pads every block column to the max column
-    degree L, so the executed fraction is L·Nb / (Kb·Nb) = L/Kb — NOT the
-    raw block density: imbalanced column degrees execute padding blocks.
-    """
-    Nb, L, bk, bn = packed["values"].shape
-    Kb = packed["shape"][0] // packed["block"][0]
-    return max(0.0, 1.0 - L / Kb)
+    The uniform CSC layout pads every block column of a bin to the bin's
+    max degree, so the executed fraction is ``executed_blocks / (Kb*Nb)``
+    — NOT the raw block density: imbalanced column degrees execute padding
+    blocks.  Reordering/binning shrinks exactly this padding."""
+    return packed.flops_saved
 
 
-def padding_overhead(packed) -> float:
-    """Executed-block overhead of uniform padding vs ideal CSC: L·Nb/nnzb."""
-    Nb, L, _, _ = packed["values"].shape
-    nnzb = int(np.asarray(packed["nnz"]).sum())
-    return (L * Nb) / max(nnzb, 1)
+def padding_overhead(packed: PackedLayout) -> float:
+    """Executed-block overhead of uniform padding vs ideal CSC."""
+    return packed.padding_overhead

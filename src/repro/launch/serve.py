@@ -20,7 +20,7 @@ from repro.serve.compile import compile_model, compiled_summary
 from repro.serve.engine import generate
 from repro.train.trainer import apply_masks
 
-SPARSE_SPEC = [(r"(attn/w[qkvo]|ffn/(gate|up|down))/w",
+SPARSE_SPEC = [(r"(attn/w[qkvo]|(ffn|moe)/(gate|up|down))/w",
                 RW.SchemeChoice("block", (16, 16)))]
 
 

@@ -63,12 +63,15 @@ def _apply_act(y, act):
 def linear(params, x, mask=None, act="none"):
     """y = act(x @ W + b) through whichever executor applies.
 
-    If the layer carries packed BCS weights (``params["packed"]`` holding
-    ``values``/``k_idx``, installed by ``repro.serve.compile.compile_model``)
-    the Pallas block-sparse kernel executes it and fuses bias + activation
-    into the epilogue; any ``mask`` is ignored there (it was baked in at pack
-    time).  Otherwise a dense einsum runs, with an optional pruning ``mask``
-    broadcastable to w (XLA fuses the multiply into the matmul operand).
+    If the layer carries a packed BCS layout (``params["packed"]``, a
+    ``core.packed.PackedLayout`` installed by
+    ``repro.serve.compile.compile_model``) the Pallas block-sparse kernel
+    executes it — one launch per degree bin, bias + activation fused into
+    the epilogue, outputs gathered back to original column order when the
+    layout was row-reordered; any ``mask`` is ignored there (it was baked
+    in at pack time).  Otherwise a dense einsum runs, with an optional
+    pruning ``mask`` broadcastable to w (XLA fuses the multiply into the
+    matmul operand).
     """
     packed = params.get("packed")
     if packed is not None:

@@ -7,6 +7,14 @@ resharding (tokens data-sharded -> experts model-sharded) is GSPMD's
 all-to-all — the paper's per-expert block pruning shrinks exactly this
 expert-side compute and the expert weight footprint.
 
+Sparse serving: when ``serve.compile.compile_model`` installs a
+``core.packed.PackedLayout`` next to an expert weight
+(``params[name]["packed"]``, leading expert axis on every leaf), the three
+expert GEMMs (gate/up/down) execute through
+``kernels.ops.sparse_expert_linear`` — the Pallas BCS kernel vmapped over
+experts — instead of the dense masked einsum; silu fuses into the gate
+projection's epilogue exactly as in ``layers.ffn``.
+
 Router stays dense and fp32 — the LM-family analogue of the paper's
 "don't prune tiny, sensitive layers" depthwise rule (§5.2.4).
 """
@@ -31,7 +39,13 @@ def moe_init(key, d_model, d_ff, n_experts, dtype=jnp.bfloat16):
 
 
 def _dispatch_tensors(logits, top_k, capacity):
-    """logits (G,S,E) -> dispatch (G,S,E,C) one-hot-ish, combine (G,S,E,C)."""
+    """logits (G,S,E) -> dispatch (G,S,E,C) one-hot-ish, combine (G,S,E,C).
+
+    Logits are normalized to fp32 up front so externally supplied bf16
+    logits can't shift the softmax/top_k expert choice (``moe()`` itself
+    always routes in fp32; the one-hots and cumsum slot positions were
+    already built in explicit fp32 below)."""
+    logits = logits.astype(jnp.float32)
     G, S, E = logits.shape
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, idx = jax.lax.top_k(probs, top_k)             # (G,S,K)
@@ -53,6 +67,31 @@ def _dispatch_tensors(logits, top_k, capacity):
     return disp, combine, aux
 
 
+def _expert_linear(p, x, mask=None, act="none"):
+    """Per-expert projection: x (G,E,C,din) @ w (E,din,dout) -> (G,E,C,dout).
+
+    Dispatches through the batched sparse kernel when the compiler
+    installed a ``PackedLayout`` (``p["packed"]``, leading expert axis);
+    otherwise the dense masked einsum.  ``act`` fuses into the packed
+    kernel's epilogue; on the dense path it applies after the einsum —
+    same math (under bf16 the fused path rounds once instead of twice,
+    ~1 ulp, exactly as documented for ``layers.ffn``)."""
+    packed = p.get("packed")
+    if packed is not None:
+        from repro.kernels import ops  # late import: kernels -> core only
+        G, E, C, din = x.shape
+        xe = x.transpose(1, 0, 2, 3).reshape(E, G * C, din)
+        ye = ops.sparse_expert_linear(xe, packed, act=act)
+        return ye.reshape(E, G, C, -1).transpose(1, 0, 2, 3)
+    w = p["w"]
+    if mask is not None:
+        w = w * mask.astype(w.dtype)
+    y = jnp.einsum("gecd,edf->gecf", x, w)
+    if act == "silu":
+        y = jax.nn.silu(y)
+    return y
+
+
 def moe(params, x, *, top_k, capacity_factor=1.25, group=1024,
         masks=None, dist=None):
     """x: (B,S,D) -> (B,S,D), aux_loss.  Tokens regrouped to bound the
@@ -66,8 +105,10 @@ def moe(params, x, *, top_k, capacity_factor=1.25, group=1024,
     xt = x.reshape(G, Sg, D)
     logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
                         params["router"]["w"])
-    C = max(4, int(Sg * top_k / E * capacity_factor))
-    C = min(C, Sg)
+    # the group-size clamp must stay OUTSIDE the floor of 4: on tiny
+    # groups (Sg < 4) the floor alone would hand _dispatch_tensors a
+    # capacity beyond the group size (locked by a regression test)
+    C = min(Sg, max(4, int(Sg * top_k / E * capacity_factor)))
     disp, combine, aux = _dispatch_tensors(logits, top_k, C)
 
     dt = x.dtype
@@ -75,14 +116,8 @@ def moe(params, x, *, top_k, capacity_factor=1.25, group=1024,
     if dist is not None:
         expert_in = dist.shard_experts(expert_in)
 
-    def mw(name):
-        w = params[name]["w"]
-        mk = m.get(name)
-        return w * mk.astype(w.dtype) if mk is not None else w
-
-    g = jnp.einsum("gecd,edf->gecf", expert_in, mw("gate"))
-    u = jnp.einsum("gecd,edf->gecf", expert_in, mw("up"))
-    h = jax.nn.silu(g) * u
-    expert_out = jnp.einsum("gecf,efd->gecd", h, mw("down"))
+    g = _expert_linear(params["gate"], expert_in, m.get("gate"), act="silu")
+    u = _expert_linear(params["up"], expert_in, m.get("up"))
+    expert_out = _expert_linear(params["down"], g * u, m.get("down"))
     out = jnp.einsum("gecd,gsec->gsd", expert_out, combine.astype(dt))
     return out.reshape(B, S, D), aux

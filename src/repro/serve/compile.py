@@ -4,17 +4,23 @@
 ``compile_model`` is the compiler step the paper describes between pruning
 and deployment: given trained params, the {0,1} mask tree, and the
 per-layer scheme mapping produced by ``core.mapper_rule``/``mapper_search``,
-it packs every block-pruned projection into the uniform BCS/CSC layout and
-installs it as ``params[...]["packed"]`` so ``models.layers.linear`` (and
-therefore attention qkv/out, FFN gate/up/down) dispatches through the
-Pallas block-sparse kernel — PatDNN-style sparsity baked into the executed
-code, adapted to TPU tiles.
+it packs every block-pruned projection into a ``core.packed.PackedLayout``
+— the single interchange format shared by every sparse consumer — and
+installs it as ``params[...]["packed"]`` so ``models.layers.linear``
+(attention qkv/out, FFN gate/up/down) and the batched MoE expert path in
+``models.moe`` dispatch through the Pallas block-sparse kernel —
+PatDNN-style sparsity baked into the executed code, adapted to TPU tiles.
 
-Layer stacks are scanned over a stacked layer axis, so per-layer packed
-layouts are padded to a common max column degree L and stacked — one
-pallas_call per projection *kind*, not per layer.  Packing itself is
-vectorized + content-cached (see ``kernels.ops.pack``); a second compile of
-the same weights is free.
+Row reordering for load balance (Fig 4) happens here by default
+(``reorder=True``): block columns are degree-sorted and binned before
+padding, so the executed column degree drops from the max toward the mean
+(the report carries ``L`` -> ``L_reordered`` and the gain per layer).
+
+Layer stacks are scanned over a stacked layer axis (MoE expert weights add
+an expert axis), so per-layer layouts are padded to common per-bin column
+degrees and stacked — one pallas_call per projection *kind* and bin, not
+per layer.  Packing itself is vectorized + content-cached (see
+``kernels.ops.pack``); a second compile of the same weights is free.
 """
 from __future__ import annotations
 
@@ -22,17 +28,34 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import reweighted as RW
+from repro.core.packed import PackedLayout
 from repro.kernels import ops
 
 # schemes whose masks the BCS executor can exploit (whole blocks die)
 BLOCK_SCHEMES = ("block", "block_row", "block_col")
 
 
-def _pack_stacked(w, mask, block):
-    """Pack (..., K, N) weights slice-by-slice, pad every slice's column
-    degree to the stack max, and restack -> scan-compatible packed arrays.
+def _stack_pad_L(arrays, Lb):
+    """Stack per-slice bin arrays after zero-padding axis 1 (the column
+    degree) to ``Lb`` — padding slots keep k_idx 0 / zero values."""
+    out = []
+    for a in arrays:
+        a = np.asarray(a)
+        pad = Lb - a.shape[1]
+        if pad:
+            a = np.concatenate(
+                [a, np.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)], 1)
+        out.append(a)
+    return np.stack(out)
 
-    Returns ({"values", "k_idx"}, stats)."""
+
+def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4):
+    """Pack (..., K, N) weights slice-by-slice, pad every slice's per-bin
+    column degree to the stack max, and restack -> a scan/vmap-compatible
+    ``PackedLayout`` whose leaves carry the leading stack dims (layers,
+    experts, or both).
+
+    Returns (PackedLayout, stats)."""
     w = np.asarray(w)
     mask = np.broadcast_to(np.asarray(mask), w.shape)
     lead = w.shape[:-2]
@@ -41,34 +64,47 @@ def _pack_stacked(w, mask, block):
     Kb = K // bk
     wf = w.reshape((-1, K, N))
     mf = mask.reshape((-1, K, N))
-    packs = [ops.pack(wf[i], mf[i], block) for i in range(wf.shape[0])]
-    Lmax = max(p["values"].shape[1] for p in packs)
-    vals, kidx = [], []
-    for p in packs:
-        v = np.asarray(p["values"])
-        k = np.asarray(p["k_idx"])
-        pad = Lmax - v.shape[1]
-        if pad:
-            v = np.concatenate(
-                [v, np.zeros((v.shape[0], pad) + v.shape[2:], v.dtype)], 1)
-            k = np.concatenate(
-                [k, np.zeros((k.shape[0], pad), k.dtype)], 1)
-        vals.append(v)
-        kidx.append(k)
-    values = np.stack(vals).reshape(lead + vals[0].shape)
-    k_idx = np.stack(kidx).reshape(lead + kidx[0].shape)
+    layouts = [ops.pack(wf[i], mf[i], block, reorder=reorder, n_bins=n_bins)
+               for i in range(wf.shape[0])]
+    nb = layouts[0].n_bins                    # identical across slices
+    values, k_idx = [], []
+    for b in range(nb):
+        Lb = max(l.bin_degrees[b] for l in layouts)
+        values.append(jnp.asarray(_stack_pad_L(
+            [l.values[b] for l in layouts], Lb).reshape(
+                lead + (-1, Lb, bk, bn))))
+        k_idx.append(jnp.asarray(_stack_pad_L(
+            [l.k_idx[b] for l in layouts], Lb).reshape(lead + (-1, Lb))))
+
+    def restack(get):
+        a = np.stack([np.asarray(get(l)) for l in layouts])
+        return jnp.asarray(a.reshape(lead + a.shape[1:]))
+
+    nnz = restack(lambda l: l.nnz)
+    perm = restack(lambda l: l.perm) if reorder else None
+    inv_perm = restack(lambda l: l.inv_perm) if reorder else None
+    stacked = PackedLayout(values=tuple(values), k_idx=tuple(k_idx),
+                           nnz=nnz, perm=perm, inv_perm=inv_perm,
+                           block=tuple(block), shape=(K, N))
+    # L: the padded max column degree (what every column pays without
+    # reordering); L_reordered: mean executed degree under the binned
+    # stacked layout.  Equal when reorder is off.
+    L_pre = max(1, int(np.asarray(nnz).max()))
+    L_eff = stacked.L_effective
     stats = {
-        "block": tuple(block), "shape": (K, N), "L": Lmax, "Kb": Kb,
-        "density": float(np.mean([p["density"] for p in packs])),
-        "flops_saved": max(0.0, 1.0 - Lmax / Kb),
+        "block": tuple(block), "shape": (K, N), "L": L_pre, "Kb": Kb,
+        "L_reordered": round(L_eff, 2),
+        "reorder_gain": round(L_pre / max(L_eff, 1e-9), 2),
+        "density": stacked.density,
+        "flops_saved": stacked.flops_saved,
         "layers": int(np.prod(lead)) if lead else 1,
     }
-    return {"values": jnp.asarray(values), "k_idx": jnp.asarray(k_idx)}, stats
+    return stacked, stats
 
 
 def compile_model(params, masks=None, mapping=(), *, block_override=None,
-                  keep_dense=True, min_saving=0.0,
-                  exclude=("router", "moe/", "embed", "head")):
+                  keep_dense=True, min_saving=0.0, reorder=True, n_bins=4,
+                  exclude=("router", "embed", "head")):
     """Pack every block-pruned linear layer of ``params`` for sparse
     execution.  Returns (exec_params, report).
 
@@ -84,14 +120,20 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
     keep_dense : keep "w" next to "packed" (dense fallback / debugging);
                False drops it to halve serving weight memory.
     min_saving : skip packing when the effective skipped-FLOP fraction
-               (1 - L/Kb under the uniform-padded layout) is not above
+               (1 - executed/(Kb*Nb) under the padded layout) is not above
                this — a padded layout with no skipping would only add
                gather overhead.
-    exclude  : path substrings never packed (router/embeddings per §5.2.4;
-               MoE expert einsums don't dispatch through layers.linear yet).
+    reorder  : degree-sort + bin block columns before padding (paper Fig 4
+               row reordering) so L drops toward the mean degree; outputs
+               stay bit-identical (see ``core.bcs.pack_csc_reordered``).
+    n_bins   : number of degree bins when reordering.
+    exclude  : path substrings never packed (router/embeddings per §5.2.4).
+               MoE expert projections (gate/up/down) ARE packed — they
+               dispatch through ``kernels.ops.sparse_expert_linear``.
 
-    Every packed node's report entry carries the effective density, padded
-    column degree L, and skipped-FLOP fraction; skipped nodes carry the
+    Every packed node's report entry carries the effective density, the
+    pre-reorder padded column degree L, the post-reorder ``L_reordered``
+    with its gain, and the skipped-FLOP fraction; skipped nodes carry the
     reason, so the report doubles as the compile log.
     """
     report = []
@@ -125,7 +167,8 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
         K, N = w.shape[-2:]
         if K % block[0] or N % block[1]:
             return skip(f"block {block} does not divide ({K}, {N})")
-        packed, stats = _pack_stacked(w, mask, block)
+        packed, stats = _pack_stacked(w, mask, block, reorder=reorder,
+                                      n_bins=n_bins)
         if stats["flops_saved"] <= min_saving:
             return skip(f"no effective saving (L={stats['L']} of "
                         f"Kb={stats['Kb']} column blocks survive)")
@@ -139,13 +182,16 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
 
 
 def compiled_summary(report) -> str:
-    """One-line-per-layer compile log."""
+    """One-line-per-layer compile log, including the load-balance lever:
+    pre-reorder L -> post-reorder effective L and the gain."""
     lines = []
     for r in report:
         if r["packed"]:
             lines.append(
                 f"  pack {r['path']:<28s} block={r['block']} "
-                f"density={r['density']:.2f} L={r['L']}/{r['Kb']} "
+                f"density={r['density']:.2f} "
+                f"L={r['L']}->{r['L_reordered']}/{r['Kb']} "
+                f"(reorder_gain={r['reorder_gain']:.2f}x) "
                 f"flops_saved={r['flops_saved']:.2f}")
         else:
             lines.append(f"  skip {r['path']:<28s} ({r['reason']})")

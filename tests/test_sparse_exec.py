@@ -100,11 +100,29 @@ def test_pack_cache_hits():
     w, mask = block_case(128, 128, 32, 32, 0.5, seed=6)
     p1 = ops.pack(w, mask, (32, 32))
     p2 = ops.pack(w, mask, (32, 32))
-    assert p1["values"] is p2["values"]     # cached, not repacked
+    assert p1.values[0] is p2.values[0]     # cached, not repacked
     p3 = ops.pack(w, mask, (32, 32), use_cache=False)
-    assert p3["values"] is not p1["values"]
-    np.testing.assert_array_equal(np.asarray(p3["values"]),
-                                  np.asarray(p1["values"]))
+    assert p3.values[0] is not p1.values[0]
+    np.testing.assert_array_equal(np.asarray(p3.values[0]),
+                                  np.asarray(p1.values[0]))
+
+
+def test_pack_cache_keys_reorder_and_block_apart():
+    """Reordered and unreordered packs of the SAME weights must not collide
+    in the content cache — the key carries (block, reorder, n_bins)."""
+    ops.clear_pack_cache()
+    w, mask = block_case(128, 128, 32, 32, 0.6, seed=7)
+    plain = ops.pack(w, mask, (32, 32))
+    reord = ops.pack(w, mask, (32, 32), reorder=True, n_bins=2)
+    reord4 = ops.pack(w, mask, (32, 32), reorder=True, n_bins=4)
+    other_block = ops.pack(w, mask, (16, 16))
+    assert plain.perm is None and reord.perm is not None
+    assert reord.n_bins != reord4.n_bins or reord is not reord4
+    assert other_block.block == (16, 16)
+    # hits still work per-variant
+    assert ops.pack(w, mask, (32, 32), reorder=True,
+                    n_bins=2).values[0] is reord.values[0]
+    assert ops.pack(w, mask, (32, 32)).values[0] is plain.values[0]
 
 
 def test_flops_saved_is_effective_not_raw_density():
@@ -116,9 +134,41 @@ def test_flops_saved_is_effective_not_raw_density():
     mask[:32, 32:64] = 1.0                  # column 1: 1 live block
     packed = ops.pack(w, mask, (32, 32))
     # density = 5/16 but L = max degree = 4 of Kb = 4 -> nothing skipped
-    assert packed["density"] == pytest.approx(5 / 16)
+    assert packed.density == pytest.approx(5 / 16)
     assert ops.flops_saved(packed) == 0.0
     assert ops.padding_overhead(packed) == pytest.approx(16 / 5)
+    # ... until row reordering bins the heavy column away from the light
+    # ones: the same matrix under the binned layout skips most of the pad
+    reordered = ops.pack(w, mask, (32, 32), reorder=True, n_bins=4)
+    assert reordered.L_effective < reordered.L_max
+    assert ops.flops_saved(reordered) > 0.5
+    x = jax.random.normal(jax.random.PRNGKey(8), (16, 128), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.sparse_linear(x, packed=packed, bm=64)),
+        np.asarray(ops.sparse_linear(x, packed=reordered, bm=64)))
+
+
+# -- row reordering: round-trip + bit-identity through layers.linear ---------
+
+@pytest.mark.parametrize("n_bins", [1, 2, 4])
+def test_reorder_roundtrip_bit_identity_layers_linear(n_bins):
+    """Reordered layout reconstructs the exact masked weight, and
+    ``layers.linear`` produces bit-identical outputs with and without the
+    reorder (per-column accumulation order is untouched; the epilogue
+    gather only relabels output columns)."""
+    w, mask = block_case(128, 192, 16, 16, 0.7, seed=9)
+    plain = ops.pack(w, mask, (16, 16))
+    reord = ops.pack(w, mask, (16, 16), reorder=True, n_bins=n_bins)
+    np.testing.assert_array_equal(reord.to_dense(), w * mask)
+    x = jax.random.normal(jax.random.PRNGKey(10), (5, 128), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(11), (192,), jnp.float32)
+    y0 = L.linear({"w": jnp.asarray(w), "b": b, "packed": plain}, x,
+                  act="silu")
+    y1 = L.linear({"w": jnp.asarray(w), "b": b, "packed": reord}, x,
+                  act="silu")
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    # and the executed degree never exceeds the unreordered padding
+    assert reord.L_effective <= plain.L_max
 
 
 # -- compile_model: whole-model forward == dense-masked reference ------------
@@ -187,6 +237,97 @@ def test_compile_model_skips_unprunable_and_indivisible():
     assert not by_path["layers/attn/wq/w"]["packed"]
     assert "does not divide" in by_path["layers/attn/wq/w"]["reason"]
     assert not by_path["layers/ffn/gate/w"]["packed"]
+
+
+# -- MoE: batched sparse expert execution ------------------------------------
+
+MOE_SPEC = [(r"moe/(gate|up|down)/w", RW.SchemeChoice("block", (16, 16)))]
+
+
+def _compiled_moe(dtype, seed=0, keep_prob=0.4):
+    cfg = configs.get("mixtral-8x7b", smoke=True)
+    params = M.cast_tree(T.init_lm(jax.random.PRNGKey(seed), cfg), dtype)
+    masks = RW.random_block_masks(params, MOE_SPEC, (16, 16),
+                                  keep_prob=keep_prob, seed=seed)
+    pm = apply_masks(params, masks)
+    exec_params, report = compile_model(pm, masks, MOE_SPEC)
+    packed = [r["path"] for r in report if r["packed"]]
+    assert {"layers/moe/gate/w", "layers/moe/up/w",
+            "layers/moe/down/w"} <= set(packed), report
+    return cfg, pm, exec_params
+
+
+def test_moe_sparse_parity_fp32():
+    """Packed expert execution == dense-masked moe(), bit-close in fp32:
+    the three expert GEMMs run through the vmapped BCS kernel."""
+    cfg, pm, exec_params = _compiled_moe(jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    ld, _ = T.forward(pm, cfg, tokens)
+    ls, _ = T.forward(exec_params, cfg, tokens)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ls),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_moe_sparse_parity_bf16():
+    """bf16 params: fp32-accumulating kernel with the silu fused into the
+    gate epilogue tracks the dense path to bf16 tolerance (one rounding
+    instead of two, exactly as for layers.ffn)."""
+    cfg, pm, exec_params = _compiled_moe(jnp.bfloat16)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
+    ld, _ = T.forward(pm, cfg, tokens)
+    ls, _ = T.forward(exec_params, cfg, tokens)
+    np.testing.assert_allclose(np.asarray(ld, np.float32),
+                               np.asarray(ls, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_moe_packed_generate_matches_dense_masked():
+    cfg, pm, exec_params = _compiled_moe(jnp.float32, seed=3)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab)
+    ref = generate(pm, cfg, tokens, 4)
+    out = generate(exec_params, cfg, tokens, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -- MoE capacity / dispatch dtype regressions --------------------------------
+
+def test_moe_tiny_group_capacity_clamped(monkeypatch):
+    """Regression lock: for Sg < 4 the capacity floor of 4 must stay
+    clamped to the group size before dispatch — a tiny group would
+    otherwise hand _dispatch_tensors more slots than tokens.  Spies on
+    the capacity actually passed to _dispatch_tensors (shape/finiteness
+    alone can't distinguish an unclamped capacity)."""
+    import repro.models.moe as moe_mod
+    D, F, E = 16, 32, 4
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), D, F, E,
+                              dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, D), jnp.float32)
+    seen = {}
+    orig = moe_mod._dispatch_tensors
+
+    def spy(logits, top_k, capacity):
+        seen["C"] = capacity
+        return orig(logits, top_k, capacity)
+
+    monkeypatch.setattr(moe_mod, "_dispatch_tensors", spy)
+    out, aux = moe_mod.moe(params, x, top_k=2, group=2)     # Sg = 2 < 4
+    assert seen["C"] == 2                   # clamped to Sg, not floor of 4
+    assert out.shape == (1, 2, D)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_moe_dispatch_one_hot_fp32_under_bf16():
+    """Externally supplied bf16 logits must be normalized to fp32 before
+    softmax/top_k, so the expert choice (and hence dispatch/combine) is
+    identical to routing the same values in fp32."""
+    from repro.models.moe import _dispatch_tensors
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 4),
+                               jnp.bfloat16)
+    d_bf, c_bf, _ = _dispatch_tensors(logits, 2, 4)
+    d_f32, c_f32, _ = _dispatch_tensors(logits.astype(jnp.float32), 2, 4)
+    assert d_bf.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(d_bf), np.asarray(d_f32))
+    np.testing.assert_array_equal(np.asarray(c_bf), np.asarray(c_f32))
 
 
 # -- fused decode loop == eager python loop ----------------------------------

@@ -58,7 +58,7 @@ def test_pruned_model_executes_on_bcs_kernel():
     w = jax.random.normal(jax.random.PRNGKey(0), (128, 256), jnp.float32)
     mask = R.make_mask(w, "block_row", block=(64, 64), rate=0.7)
     packed = ops.pack(w, mask, (64, 64))
-    assert packed["density"] <= 1.0
+    assert packed.density <= 1.0
     x = jax.random.normal(jax.random.PRNGKey(1), (64, 128), jnp.float32)
     y_sparse = ops.sparse_linear(x, packed=packed, bm=64)
     y_dense = ref.masked_matmul_ref(x, w, mask)
