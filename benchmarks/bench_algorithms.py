@@ -6,11 +6,9 @@ Same budget each; report (loss, achieved compression, manual-rate?):
   - Reweighted: dynamic alphas -> automatic rates (the paper's choice)
 """
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import train_convnet, eval_convnet
 from repro.core import reweighted as RW
-from repro.core import regularity as R
 from repro.core.reweighted import SchemeChoice
 from repro.models import convnet as C
 

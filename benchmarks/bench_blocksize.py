@@ -4,7 +4,6 @@ Accuracy: small convnet, block-punched pruning at 8x, short finetune.
 Latency: the offline TPU latency model for the same layer shapes.
 Reproduces the paper's qualitative result: unstructured (1x1) = best acc /
 worst latency; whole-matrix = worst acc / best latency; mid blocks win."""
-import jax
 
 from benchmarks.common import train_convnet, eval_convnet
 from repro.core import regularity as R

@@ -1,0 +1,72 @@
+"""CONV layers through the BCS sparse path — the Fig 5 block-size sweep at
+the layer level, reported in *executed-L* terms.
+
+For a serving-ish conv layer the kernel-block sweep packs a block-punched
+mask through the im2col lowering (``core.bcs.conv_lower``) and reports the
+modeled GEMM latency at the layout's executed-block count (wall-clock on
+TPU is not measurable in this container; same convention as bench_kernel),
+the effective skipped-FLOP fraction (1 - executed/(Kb*Nb)) next to the raw
+zero fraction it replaces, the row-reordering speedup (unreordered vs
+binned executed-L — the deterministic load-balance win; small punched
+blocks are MXU-hostile by design, so speedup-vs-dense is the *mapper's*
+trade-off, covered by bench_mapping), and the parity error of
+``kernels.ops.sparse_conv2d`` against the masked ``lax.conv`` oracle.  A
+5x5 stride-2 row covers the non-3x3 case the paper calls out; whole-model
+conv rows (VGG_TINY through ``compile_model``) live in the conv section of
+``bench_e2e_sparse``.  Emitted rows land in BENCH_conv_sparse.json under
+``run.py --json``."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcs as BCS
+from repro.core import regularity as R
+from repro.core.latency_model import conv_as_gemm, matmul_latency
+from repro.kernels import ops
+
+
+def _layer_row(P, Q, kh, kw, stride, kernel_block, feat=14, rate=0.6,
+               seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (P, Q, kh, kw),
+                          jnp.float32) * 0.1
+    mask = R.block_punched_mask(w, kernel_block, rate=rate)
+    wm = w * mask
+    gemm_block, why = BCS.conv_gemm_block(kernel_block, w.shape)
+    assert gemm_block is not None, why
+    wl, ml = BCS.conv_lower(wm), BCS.conv_lower(mask)
+    plain = ops.pack(wl, ml, gemm_block)
+    reord = ops.pack(wl, ml, gemm_block, reorder=True, n_bins=4)
+    # output positions under SAME padding: ceil(feat/stride) per dim
+    M, K, N = conv_as_gemm(-(-feat // stride), Q, P, kh, kw)
+
+    def modeled_us(layout):
+        comp = (layout.Kb * layout.Nb) / max(layout.executed_blocks, 1)
+        return matmul_latency(M, K, N, scheme="block_punched",
+                              block=gemm_block, compression=comp) * 1e6
+
+    us_sparse = modeled_us(reord)
+    us_plain = modeled_us(plain)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, feat, feat, Q),
+                          jnp.float32)
+    y = ops.sparse_conv2d(x, reord, kh=kh, kw=kw, stride=stride)
+    kernel = wm.transpose(2, 3, 1, 0)
+    y_ref = jax.lax.conv_general_dilated(
+        x, kernel, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    bp, bq = kernel_block
+    return (f"conv,{P}x{Q}x{kh}x{kw},s{stride},blk{bp}x{bq}", us_sparse,
+            f"unreordered_us={us_plain:.1f};"
+            f"reorder_speedup={us_plain / us_sparse:.2f}x;"
+            f"flops_saved_exec={reord.flops_saved:.2f};"
+            f"raw_zero_frac={1 - reord.density:.2f};"
+            f"L={plain.L_max}->{reord.L_effective:.2f};max_err={err:.1e}")
+
+
+def bench(fast=True):
+    rows = []
+    # Fig 5 analogue: kernel-block sweep on a serving-ish 3x3 conv
+    for kb in (((4, 4), (8, 8)) if fast else ((4, 4), (8, 8), (16, 16))):
+        rows.append(_layer_row(128, 64, 3, 3, 1, kb))
+    # the paper's non-3x3 point: 5x5 kernel, stride 2
+    rows.append(_layer_row(128, 64, 5, 5, 2, (8, 8)))
+    return rows

@@ -9,16 +9,23 @@ For a smoke LM at several block densities:
   - a MoE row: the three expert GEMMs through the batched sparse path
     (``kernels.ops.sparse_expert_linear``) vs the dense masked einsum,
     with the modeled serving-dim latency as the headline (interpret-mode
-    Pallas wall time is not meaningful; same convention as bench_kernel).
+    Pallas wall time is not meaningful; same convention as bench_kernel),
+  - conv rows: the whole VGG_TINY net through the im2col conv producer at
+    two kernel-block sizes (the Fig 5/7 sweep axis), reporting the
+    *executed-L* savings of the padded layout next to the raw zero
+    fraction it replaces (layer-level sweeps live in bench_conv_sparse).
 Emitted rows land in BENCH_e2e_sparse.json under ``run.py --json`` so later
 PRs have a perf trajectory to compare against."""
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
 from repro import configs
 from repro.core import reweighted as RW
 from repro.kernels import ops
+from repro.models import convnet as CN
 from repro.models import transformer as T
 from repro.serve.compile import compile_model
 from repro.serve.engine import generate, generate_python
@@ -84,6 +91,45 @@ def _moe_rows(fast=True):
     return rows
 
 
+CONV_SPEC_TMPL = r"(^|/)(c|pw|dw)\d+/w"
+
+
+def _conv_rows(fast=True):
+    """Whole-convnet sparse execution at two kernel-block sizes: the Fig 5/7
+    sweep reported as *executed-L* savings (what the kernel actually skips
+    under the padded layout) instead of the raw zero fraction."""
+    rows = []
+    arch = CN.VGG_TINY
+    params = CN.convnet_init(jax.random.PRNGKey(0), arch, dtype=jnp.float32)
+    x, _ = CN.synthetic_images(jax.random.PRNGKey(1), 4 if fast else 16)
+    for kb in ((4, 4), (8, 8)):
+        spec = [(CONV_SPEC_TMPL, RW.SchemeChoice("block_punched", kb))]
+        masks = RW.punched_conv_masks(params, spec, kb, rate=0.6)
+        pm = apply_masks(params, masks)
+        t0 = time.perf_counter()
+        exec_params, report = compile_model(pm, masks, spec)
+        t_pack = time.perf_counter() - t0
+        packed = [r for r in report if r["packed"]]
+        jax.block_until_ready(CN.convnet_apply(pm, x, arch))
+        t0 = time.perf_counter()
+        jax.block_until_ready(CN.convnet_apply(pm, x, arch))
+        t_dense = time.perf_counter() - t0
+        jax.block_until_ready(CN.convnet_apply(exec_params, x, arch))
+        t0 = time.perf_counter()
+        jax.block_until_ready(CN.convnet_apply(exec_params, x, arch))
+        t_sparse = time.perf_counter() - t0
+        saved = float(np.mean([r["flops_saved"] for r in packed]))
+        raw = float(np.mean([1 - r["density"] for r in packed]))
+        rows.append((f"e2e,vgg_tiny,conv,blk{kb[0]}x{kb[1]}",
+                     t_sparse * 1e6,
+                     f"wall_dense_us={t_dense * 1e6:.0f};"
+                     f"conv_packed_layers={len(packed)};"
+                     f"mean_flops_saved_exec={saved:.2f};"
+                     f"mean_raw_zero_frac={raw:.2f};"
+                     f"pack_us={t_pack * 1e6:.0f}"))
+    return rows
+
+
 def bench(fast=True):
     rows = []
     arch = "yi-9b"
@@ -124,4 +170,5 @@ def bench(fast=True):
                      f"pack_cold_us={t_cold * 1e6:.0f};"
                      f"pack_cached_us={t_warm * 1e6:.0f}"))
     rows += _moe_rows(fast)
+    rows += _conv_rows(fast)
     return rows

@@ -1,7 +1,6 @@
 """Paper Table 2 (YOLOv4 comparison, reproduced on the tiny conv net with a
 5x5 and 1x1 layer): per-scheme compression / accuracy / modeled FPS, plus
 the HYBRID mapping (pattern on 3x3 + block elsewhere) that wins."""
-import jax
 
 from benchmarks.common import train_convnet, eval_convnet
 from repro.core import regularity as R

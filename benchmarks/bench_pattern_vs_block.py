@@ -1,6 +1,5 @@
 """Paper Fig 7 / Remark 1: pattern vs block-punched accuracy on EASY vs
 HARD tasks (same compression on 3x3 layers only)."""
-import jax
 
 from benchmarks.common import train_convnet, eval_convnet
 from repro.core import regularity as R

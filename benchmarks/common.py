@@ -5,11 +5,8 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.models import convnet as C
-from repro.train.trainer import apply_masks
 
 
 def train_convnet(arch=C.VGG_TINY, steps=120, batch=64, lr=5e-2, hard=False,

@@ -1,0 +1,174 @@
+"""Benchmark-regression gate: diff freshly produced ``BENCH_*.json`` files
+against the committed baselines and fail when a gated metric regresses.
+
+Gated metrics (parsed from each row's ``derived`` string):
+
+  * any ``*speedup*=<X>x`` ratio — modeled speedups are deterministic
+    (latency model at the layout's executed-block count) and gate at the
+    strict threshold; packing-throughput and loop speedups are wall-clock
+    ratios that swing tens of percent with machine load, so they gate at
+    the looser ``--wall-threshold`` — still catching the collapse that
+    matters (e.g. the vectorized packer falling back toward the loop
+    packer's floor) without flaking on CI noise.
+  * effective skipped-FLOP fractions (``flops_saved*``,
+    ``flops_skipped_eff``) — exact properties of the packed layout; any
+    drop means the packing or reordering algorithm got worse.  Baselines
+    below 0.05 are skipped (relative noise on ~zero).
+
+A metric regresses when ``fresh < baseline * (1 - threshold)`` (default
+threshold 10%, wall metrics 50%).  Rows or metrics present in the baseline
+but missing from the fresh run also fail — a silently dropped row is a
+lost metric, not a pass.  New rows/metrics are reported and ignored until
+the baselines are refreshed.
+
+Workflow when a change legitimately shifts the numbers::
+
+    PYTHONPATH=src python -m benchmarks.run --json
+    python -m benchmarks.compare --update-baselines   # then commit
+
+Baselines live in ``benchmarks/baselines/``; fresh files are written to the
+working directory by ``benchmarks.run --json``.
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import shutil
+import sys
+
+BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+FRACTION_KEYS = (
+    "flops_saved",
+    "flops_saved_exec",
+    "flops_skipped_eff",
+    "mean_flops_saved",
+    "mean_flops_saved_exec",
+)
+FRACTION_FLOOR = 0.05
+SPEEDUP_RE = re.compile(r"^([0-9.]+)x$")
+# wall-clock-derived ratios: gated at --wall-threshold, not --threshold
+WALL_KEYS = ("loop_speedup",)
+WALL_ROW_PREFIXES = ("pack_vectorized",)
+
+
+def is_wall_metric(key):
+    row, _, metric = key.rpartition(":")
+    return metric in WALL_KEYS or row.startswith(WALL_ROW_PREFIXES)
+
+
+def metrics_from(payload):
+    """{'row:key': value} for every gated metric of one BENCH payload."""
+    out = {}
+    for row in payload.get("rows", []):
+        pairs = [kv.split("=", 1) for kv in row["derived"].split(";") if "=" in kv]
+        for key, val in pairs:
+            ratio = SPEEDUP_RE.match(val)
+            if "speedup" in key and ratio:
+                out[f"{row['name']}:{key}"] = float(ratio.group(1))
+            elif key in FRACTION_KEYS:
+                out[f"{row['name']}:{key}"] = float(val)
+    return out
+
+
+def compare_one(name, base_path, fresh_path, threshold, wall_threshold):
+    """Returns (failures, notes) for one benchmark file pair."""
+    failures, notes = [], []
+    if not fresh_path.exists():
+        return [f"{name}: fresh {fresh_path} missing (bench not run?)"], []
+    base = metrics_from(json.loads(base_path.read_text()))
+    fresh = metrics_from(json.loads(fresh_path.read_text()))
+    for key, b in sorted(base.items()):
+        if key not in fresh:
+            failures.append(
+                f"{name}: metric {key!r} vanished (baseline {b:.2f}); "
+                "refresh with --update-baselines if intentional"
+            )
+            continue
+        f = fresh[key]
+        is_fraction = key.rsplit(":", 1)[-1] in FRACTION_KEYS
+        if is_fraction and b < FRACTION_FLOOR:
+            continue
+        allowed = wall_threshold if is_wall_metric(key) else threshold
+        if f < b * (1 - allowed):
+            failures.append(
+                f"{name}: {key} regressed {b:.2f} -> {f:.2f} "
+                f"({(1 - f / b) * 100:.0f}% > {allowed * 100:.0f}% allowed)"
+            )
+    for key in sorted(set(fresh) - set(base)):
+        notes.append(f"{name}: new metric {key} = {fresh[key]:.2f} (not gated)")
+    return failures, notes
+
+
+def update_baselines(fresh_dir):
+    BASELINE_DIR.mkdir(exist_ok=True)
+    copied = []
+    for path in sorted(fresh_dir.glob("BENCH_*.json")):
+        shutil.copy(path, BASELINE_DIR / path.name)
+        copied.append(path.name)
+    if not copied:
+        raise SystemExit(f"no BENCH_*.json in {fresh_dir} to promote")
+    print(f"promoted {len(copied)} baseline(s): {', '.join(copied)}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="allowed relative regression before failing (default 0.10)",
+    )
+    ap.add_argument(
+        "--wall-threshold",
+        type=float,
+        default=0.50,
+        help="allowed regression for wall-clock-derived ratios (default 0.50)",
+    )
+    ap.add_argument(
+        "--fresh-dir",
+        type=pathlib.Path,
+        default=pathlib.Path("."),
+        help="directory holding the freshly produced BENCH_*.json",
+    )
+    ap.add_argument(
+        "--update-baselines",
+        action="store_true",
+        help="copy fresh BENCH_*.json over benchmarks/baselines/ and exit",
+    )
+    args = ap.parse_args(argv)
+    if args.update_baselines:
+        update_baselines(args.fresh_dir)
+        return 0
+    baselines = sorted(BASELINE_DIR.glob("BENCH_*.json"))
+    if not baselines:
+        raise SystemExit(f"no baselines committed under {BASELINE_DIR}")
+    failures, notes = [], []
+    for base_path in baselines:
+        fail, note = compare_one(
+            base_path.stem,
+            base_path,
+            args.fresh_dir / base_path.name,
+            args.threshold,
+            args.wall_threshold,
+        )
+        failures += fail
+        notes += note
+    for line in notes:
+        print(f"note: {line}")
+    if failures:
+        for line in failures:
+            print(f"FAIL: {line}", file=sys.stderr)
+        return 1
+    gated = sum(
+        len(metrics_from(json.loads(p.read_text()))) for p in baselines
+    )
+    print(
+        f"benchmark gate passed: {gated} metric(s) across "
+        f"{len(baselines)} file(s) within {args.threshold * 100:.0f}%"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

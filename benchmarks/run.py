@@ -14,6 +14,7 @@ BENCHES = [
     "bench_kernel",           # §4.3 BCS kernel skipping + packing speed
     "bench_e2e_sparse",       # whole-model prefill+decode via compile_model
     "bench_moe_sparse",       # batched sparse MoE expert GEMMs vs dense
+    "bench_conv_sparse",      # conv via im2col PackedLayout (Fig 5 sweep)
     "bench_macs",             # Table 5
     "bench_portability",      # Table 7
     "bench_blocksize",        # Fig 5 + Fig 9 (acc/latency vs block)
@@ -32,6 +33,10 @@ def main() -> None:
                     help="write BENCH_<name>.json per module")
     args = ap.parse_args()
     names = [b for b in BENCHES if args.only is None or args.only in b]
+    if not names:
+        raise SystemExit(
+            f"--only {args.only!r} matches no benchmark suite; "
+            f"choose a substring of one of: {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     failures = []
     for name in names:

@@ -9,7 +9,6 @@ CPU container; without it the config is a true ~100M model.)
 """
 import argparse
 
-import jax
 
 from repro.configs.base import ArchConfig
 from repro.launch import train as train_driver

@@ -326,6 +326,37 @@ def pack_csc_reordered(w, mask, block, n_bins=4):
                         block=tuple(block), shape=tuple(np.shape(w)))
 
 
+def conv_lower(w):
+    """Im2col lowering of a conv weight: (P, Q, Kh, Kw) -> (Kh*Kw*Q, P).
+
+    Row order is (kh, kw, q) — tap-major, channel-minor — matching the patch
+    extraction in ``kernels.ops.sparse_conv2d``, so ``patches @ lowered`` is
+    exactly the convolution.  Works on masks too (same shape convention).
+
+    Why this orientation makes block-punched masks BCS-skippable: a punched
+    group (paper §4.1.2, kernel block (bp, bq), position (m, n)) zeroes all
+    bq consecutive channels q of the (m, n) band times bp consecutive
+    filters p — a contiguous (bq, bp) zero tile of the lowered GEMM, i.e. a
+    whole dead block under packing block (bk, bn) = (bq, bp) whenever
+    Q % bq == 0 (bands are length Q, so bq-blocks never straddle taps)."""
+    w = np.asarray(w)
+    P, Q, Kh, Kw = w.shape
+    return np.ascontiguousarray(
+        w.transpose(2, 3, 1, 0).reshape(Kh * Kw * Q, P))
+
+
+def conv_gemm_block(kernel_block, conv_shape):
+    """Packing block for the lowered conv GEMM from the paper's kernel-block
+    choice (bp over filters P, bq over channels Q): (bk, bn) = (bq, bp).
+    Returns None (with a reason) when the block cannot tile the layer."""
+    bp, bq = kernel_block
+    P, Q, Kh, Kw = conv_shape
+    if Q % bq or P % bp:
+        return None, (f"kernel block {kernel_block} does not divide "
+                      f"(P={P}, Q={Q})")
+    return (bq, bp), None
+
+
 def pad_to_uniform_csc_loop(bcs: BCS):
     """Pure-Python reference for ``pad_to_uniform_csc`` (original impl)."""
     K, N = bcs.shape

@@ -15,7 +15,7 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
-from repro.core.reweighted import SchemeChoice, match
+from repro.core.reweighted import match
 
 
 @dataclass(frozen=True)

@@ -13,7 +13,7 @@ The latency model is the offline artifact (§5.2.1); the whole mapping is
 training-free."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs.base import ArchConfig
 from repro.core.latency_model import (TPUTarget, V5E, matmul_latency,

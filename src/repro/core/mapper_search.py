@@ -10,7 +10,6 @@ accuracy from one-shot magnitude pruning + a short retrain (paper uses
 2-epoch proxies), latency from the offline latency model (§5.2.1)."""
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 import numpy as np
 import jax

@@ -12,8 +12,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 
 from repro.core import reweighted as RW
 from repro.train.trainer import apply_masks

@@ -22,7 +22,6 @@ Two selection modes everywhere:
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 SCHEMES = ("none", "unstructured", "structured_row", "structured_col",

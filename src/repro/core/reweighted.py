@@ -17,7 +17,7 @@ one-shot magnitude-based, as in PatDNN) — see masks_for_spec.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -175,13 +175,17 @@ def masks_for_spec(params, spec, threshold=None, default_rate=None):
 def block_masks_from(params, spec, block, keep_fn):
     """Shared scaffold for whole-(bk, bn)-block mask trees: spec matching,
     sentinel handling, block-tiling guard, and block->element expansion.
-    ``keep_fn(path_str, leaf, (Pb, Qb) grid shape) -> bool keep grid``."""
-    bk, bn = block
+    ``keep_fn(path_str, leaf, (Pb, Qb) grid shape) -> bool keep grid``.
+    ``block=None`` uses each matched rule's own ``choice.block`` — what the
+    serving CLI needs when one spec mixes block shapes (e.g. FC (16, 16)
+    next to the narrower SSM in_proj block)."""
 
     def build(path, leaf):
         s = M.path_str(path)
-        if match(spec, s) is None or leaf.ndim < 2:
+        choice = match(spec, s)
+        if choice is None or leaf.ndim < 2:
             return jnp.ones((), jnp.float32)
+        bk, bn = block if block is not None else choice.block
         *lead, P, Q = leaf.shape
         if P % bk or Q % bn:     # block must tile the leaf (e.g. phi3 d=60)
             return jnp.ones((), jnp.float32)
@@ -207,15 +211,41 @@ def random_block_masks(params, spec, block=(16, 16), keep_prob=0.5, seed=0):
     return block_masks_from(params, spec, block, keep_fn)
 
 
+def punched_conv_masks(params, spec, block=(8, 8), rate=0.5):
+    """One-shot magnitude block-punched masks (§4.1.2) on spec-matched 4-D
+    (P, Q, Kh, Kw) conv leaves, scalar sentinels elsewhere — the conv
+    analogue of ``magnitude_block_masks``: the same intra-kernel position is
+    pruned across every kernel of a (bp, bq) kernel block, which is exactly
+    the structure ``serve.compile`` lowers into dead BCS blocks.
+    ``block=None`` punches each leaf at its matched rule's own
+    ``choice.block`` (keeping mask and packing block in lockstep, as for
+    the FC builders).  Leaves the block cannot tile (e.g. a 3-channel
+    stem) stay unpruned."""
+
+    def build(path, leaf):
+        s = M.path_str(path)
+        choice = match(spec, s)
+        if choice is None or leaf.ndim != 4:
+            return jnp.ones((), jnp.float32)
+        bp, bq = block if block is not None else choice.block
+        P, Q = leaf.shape[:2]
+        if P % bp or Q % bq:
+            return jnp.ones((), jnp.float32)
+        return R.block_punched_mask(leaf, (bp, bq), rate=rate)
+
+    return jax.tree_util.tree_map_with_path(build, params)
+
+
 def magnitude_block_masks(params, spec, block=(16, 16), rate=0.5):
     """One-shot magnitude pruning at whole-block granularity: the
     ``rate``-fraction of blocks with the smallest L2 norms die outright —
-    the structured collapse the BCS executor skips."""
-    bk, bn = block
+    the structured collapse the BCS executor skips.  ``block=None`` prunes
+    each matched leaf at its rule's own ``choice.block``."""
 
     def keep_fn(s, leaf, grid):
         sq = jnp.square(leaf.astype(jnp.float32))
         *lead, P, Q = leaf.shape
+        bk, bn = P // grid[-2], Q // grid[-1]
         g = sq.reshape(*lead, P // bk, bk, Q // bn, bn).sum(axis=(-3, -1))
         return g > jnp.quantile(g.reshape(-1), rate)
 

@@ -8,7 +8,7 @@ single-pod.  Batch/DP shards over (pod, data); TP/EP/SP over model; FSDP
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -12,6 +12,14 @@ would emit for a pruned layer:
 three expert GEMMs (gate/up/down) execute through the same sparse path as
 every other projection.
 
+``sparse_conv2d`` is the CONV consumer: im2col patch extraction (tap-major
+(kh, kw, q) feature order, matching ``core.bcs.conv_lower``) flattens the
+convolution to one GEMM that dispatches through the same
+``bsr_matmul_packed`` — block-punched conv masks (paper §4.1.2) become
+whole dead BCS blocks, so pruned taps are skipped, not multiplied by zero.
+Stride/padding are handled in the patch extraction; bias + activation fuse
+into the kernel epilogue exactly as for ``sparse_linear``.
+
 ``pack`` is the host-side codegen step: it converts a pruned weight into a
 ``core.packed.PackedLayout`` — the single interchange format every sparse
 consumer shares — optionally degree-sorted/binned (``reorder``) so the
@@ -109,6 +117,59 @@ def sparse_linear(x, packed: PackedLayout | None = None, w=None, mask=None,
             x2, w, mask if mask is not None else jnp.ones_like(w),
             bias=bias, act=act)
     return y.reshape(*lead, y.shape[-1])
+
+
+def _same_pads(size, k, s):
+    """XLA 'SAME' padding for one spatial dim: output ceil(size/s)."""
+    out = -(-size // s)
+    pad = max((out - 1) * s + k - size, 0)
+    return pad // 2, pad - pad // 2
+
+
+def im2col(x, kh, kw, stride=1, padding="SAME"):
+    """x (B, H, W, C) -> patches (B, Ho, Wo, kh*kw*C).
+
+    Feature order is tap-major, channel-minor — feature r = (i*kw + j)*C + c
+    reads input channel c at kernel tap (i, j) — the exact row order of
+    ``core.bcs.conv_lower``, so ``patches.reshape(-1, kh*kw*C) @ lowered_w``
+    is the convolution.  The taps are a tiny unrolled loop (<= kh*kw slices)
+    over one padded copy; XLA fuses the strided slices."""
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        ph, pw = _same_pads(H, kh, stride), _same_pads(W, kw, stride)
+    elif padding == "VALID":
+        ph = pw = (0, 0)
+    else:
+        raise ValueError(padding)
+    Ho = (H + ph[0] + ph[1] - kh) // stride + 1
+    Wo = (W + pw[0] + pw[1] - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    taps = [xp[:, i:i + stride * (Ho - 1) + 1:stride,
+               j:j + stride * (Wo - 1) + 1:stride, :]
+            for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(taps, axis=-1) if len(taps) > 1 else taps[0]
+
+
+def sparse_conv2d(x, packed: PackedLayout, *, kh, kw, stride=1,
+                  padding="SAME", bias=None, act="none", bm=128,
+                  interpret=None):
+    """x (B, H, W, Cin) * packed conv weight -> (B, Ho, Wo, Cout).
+
+    ``packed`` is the PackedLayout of the im2col-lowered (Kh*Kw*Q, P) conv
+    weight (``serve.compile.compile_model`` on a block-punched conv layer).
+    The conv runs as ONE sparse GEMM over the extracted patches: pruned
+    kernel-position blocks are never read nor multiplied, and bias +
+    activation fuse into the kernel epilogue.  Depthwise convs are never
+    packed (compile_model skips them with a logged reason), so this path
+    only sees full convolutions."""
+    B, H, W, C = x.shape
+    assert packed.shape[0] == kh * kw * C, (
+        f"layout K={packed.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    patches = im2col(x, kh, kw, stride, padding)
+    _, Ho, Wo, K = patches.shape
+    y = bsr_matmul_packed(patches.reshape(B * Ho * Wo, K), packed,
+                          bias=bias, bm=bm, act=act, interpret=interpret)
+    return y.reshape(B, Ho, Wo, y.shape[-1])
 
 
 def sparse_expert_linear(x, packed: PackedLayout, bias=None, act="none",

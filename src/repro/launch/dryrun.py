@@ -21,7 +21,6 @@ import re
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -29,7 +28,6 @@ from repro.configs.base import SHAPES
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
-from repro.optim.adamw import make_optimizer
 from repro.train.trainer import make_train_step
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"

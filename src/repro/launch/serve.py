@@ -21,7 +21,11 @@ from repro.serve.engine import generate
 from repro.train.trainer import apply_masks
 
 SPARSE_SPEC = [(r"(attn/w[qkvo]|(ffn|moe)/(gate|up|down))/w",
-                RW.SchemeChoice("block", (16, 16)))]
+                RW.SchemeChoice("block", (16, 16))),
+               # SSM in/out projections pack too (PR 3); the narrower (16, 8)
+               # block tiles the smoke mamba2 in_proj (proj dim 296 = 37*8)
+               (r"ssm/(in_proj|out_proj)/w",
+                RW.SchemeChoice("block", (16, 8)))]
 
 
 def main(argv=None):
@@ -44,7 +48,7 @@ def main(argv=None):
                         if cfg.family in ("encdec", "vlm") else 0,
                         d_model=cfg.d_model)
     if args.sparse:
-        masks = RW.magnitude_block_masks(params, SPARSE_SPEC, (16, 16),
+        masks = RW.magnitude_block_masks(params, SPARSE_SPEC, None,
                                          rate=args.prune_rate)
         params = apply_masks(params, masks)
         t0 = time.time()

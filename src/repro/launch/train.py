@@ -11,8 +11,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.core import reweighted as RW

@@ -1,7 +1,16 @@
 """Small VGG/MobileNet-style conv nets for the paper-faithful CONV-layer
 experiments (Fig 5/7, Table 2/4 reproductions run on these + synthetic
 CIFAR-like data).  Weight layout: (out_ch, in_ch, kh, kw) = the paper's
-(P, Q, Kh, Kw), so block-punched / pattern masks apply directly."""
+(P, Q, Kh, Kw), so block-punched / pattern masks apply directly.
+
+Sparse serving: ``serve.compile.compile_model`` installs a
+``core.packed.PackedLayout`` of the im2col-lowered weight next to each
+block-punched conv (``params[name]["packed"]``); ``convnet_apply`` then
+executes that layer through ``kernels.ops.sparse_conv2d`` — one BCS GEMM
+over extracted patches, bias + relu fused in the kernel epilogue — instead
+of the masked-dense ``lax.conv`` (kept below as the parity oracle).
+Depthwise layers are never packed (§5.2.4) and always take the dense
+path."""
 from __future__ import annotations
 
 import jax
@@ -53,6 +62,12 @@ def convnet_apply(params, x, arch=VGG_TINY, masks=None):
     """x: (B, H, W, Cin) -> logits (B, n_classes)."""
     m = masks or {}
     for (name, out, kh, kw, stride, dw) in arch:
+        packed = params[name].get("packed")
+        if packed is not None and not dw:
+            from repro.kernels import ops  # late import: kernels -> core only
+            x = ops.sparse_conv2d(x, packed, kh=kh, kw=kw, stride=stride,
+                                  bias=params[name]["b"], act="relu")
+            continue
         w = params[name]["w"]
         mk = m.get(name)
         if mk is not None:

@@ -7,7 +7,7 @@ table per architecture family keeps every param's PartitionSpec in one place.
 from __future__ import annotations
 
 import re
-from typing import Any, Callable, Iterable
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import module as M
-from repro.models import layers as L
 
 
 def moe_init(key, d_model, d_ff, n_experts, dtype=jnp.bfloat16):

@@ -5,6 +5,15 @@ linear-across-chunks algorithm, plus the O(1)-state decode step used for the
 Pruning applicability (paper §5.2.4 analogue, see DESIGN.md): in/out
 projections are block-based-prunable FC layers; the depthwise conv1d and the
 small SSD parameters (A, D, dt bias) are never pruned.
+
+Sparse serving: both projections go through ``layers.linear``, so when
+``serve.compile.compile_model`` installs a ``core.packed.PackedLayout``
+next to ``in_proj``/``out_proj`` (stacked over the scanned layer axis) they
+dispatch through ``kernels.ops.sparse_linear`` — the Pallas BCS kernel —
+in both the full-sequence mixer and the O(1)-state decode step.  The
+in_proj covers the z (gate), xBC, and dt streams in one GEMM, so packing it
+sparsifies all three at once.  ``_dims`` reads layer geometry from either
+the dense weight or the layout, so ``keep_dense=False`` serving works.
 """
 from __future__ import annotations
 
@@ -33,8 +42,16 @@ def ssm_init(key, d_model, d_state, headdim=64, expand=2, conv_width=4,
     }
 
 
+def _proj_kn(p):
+    """(K, N) of a projection node, from the dense weight or — when
+    ``compile_model(keep_dense=False)`` dropped "w" — the packed layout's
+    static shape (identical by construction)."""
+    w = p.get("w")
+    return tuple(w.shape[-2:]) if w is not None else tuple(p["packed"].shape)
+
+
 def _dims(params, d_model):
-    d_inner = params["out_proj"]["w"].shape[0]
+    d_inner = _proj_kn(params["out_proj"])[0]
     n_heads = params["A_log"].shape[0]
     headdim = d_inner // n_heads
     conv_dim = params["conv"]["w"].shape[1]

@@ -7,8 +7,6 @@ Heterogeneous stacks (vlm cross-attn every k layers) scan over homogeneous
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -4,12 +4,19 @@
 ``compile_model`` is the compiler step the paper describes between pruning
 and deployment: given trained params, the {0,1} mask tree, and the
 per-layer scheme mapping produced by ``core.mapper_rule``/``mapper_search``,
-it packs every block-pruned projection into a ``core.packed.PackedLayout``
+it packs every block-pruned layer into a ``core.packed.PackedLayout``
 — the single interchange format shared by every sparse consumer — and
 installs it as ``params[...]["packed"]`` so ``models.layers.linear``
-(attention qkv/out, FFN gate/up/down) and the batched MoE expert path in
-``models.moe`` dispatch through the Pallas block-sparse kernel —
-PatDNN-style sparsity baked into the executed code, adapted to TPU tiles.
+(attention qkv/out, FFN gate/up/down, SSM in/out projections), the batched
+MoE expert path in ``models.moe``, and the conv path in
+``models.convnet``/``kernels.ops.sparse_conv2d`` dispatch through the
+Pallas block-sparse kernel — PatDNN-style sparsity baked into the executed
+code, adapted to TPU tiles.
+
+Layer kinds are detected structurally (``_layer_kind``): block-punched
+4-D (P, Q, Kh, Kw) conv weights are im2col-lowered before packing
+(``core.bcs.conv_lower``), depthwise convs are skipped with a logged
+reason (§5.2.4), everything else packs as a (possibly stacked) GEMM.
 
 Row reordering for load balance (Fig 4) happens here by default
 (``reorder=True``): block columns are degree-sorted and binned before
@@ -27,12 +34,37 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import bcs as BCS
 from repro.core import reweighted as RW
 from repro.core.packed import PackedLayout
 from repro.kernels import ops
 
-# schemes whose masks the BCS executor can exploit (whole blocks die)
+# schemes whose masks the BCS executor can exploit (whole blocks die):
+# FC schemes pack the weight as-is; block_punched (the paper's CONV scheme)
+# packs the im2col-lowered weight — see _layer_kind below.
 BLOCK_SCHEMES = ("block", "block_row", "block_col")
+CONV_SCHEMES = ("block_punched",)
+PACKABLE_SCHEMES = BLOCK_SCHEMES + CONV_SCHEMES
+
+
+def _layer_kind(w, scheme: str) -> str:
+    """Structural layer-kind detection — what decides the PackedLayout
+    producer, instead of path-name heuristics:
+
+      conv      : 4-D (P, Q, Kh, Kw) weight mapped to a CONV scheme
+      depthwise : conv with Q == 1 (never packed, §5.2.4)
+      linear    : trailing (K, N) GEMM weight, any leading stack dims
+                  (scanned layers, MoE experts, or both)
+
+    The mapped scheme disambiguates rank-4 weights: a stacked MoE expert
+    weight (L, E, K, N) is also 4-D, but the mapper only ever assigns
+    ``block_punched`` to real conv weights (its groups are kernel
+    positions), so scheme + rank identifies the producer."""
+    if scheme in CONV_SCHEMES:
+        if getattr(w, "ndim", 0) != 4:
+            return "bad_conv"
+        return "depthwise" if w.shape[1] == 1 else "conv"
+    return "linear"
 
 
 def _stack_pad_L(arrays, Lb):
@@ -105,7 +137,7 @@ def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4):
 def compile_model(params, masks=None, mapping=(), *, block_override=None,
                   keep_dense=True, min_saving=0.0, reorder=True, n_bins=4,
                   exclude=("router", "embed", "head")):
-    """Pack every block-pruned linear layer of ``params`` for sparse
+    """Pack every block-pruned linear/conv layer of ``params`` for sparse
     execution.  Returns (exec_params, report).
 
     params   : model param tree (nested dicts; linear nodes hold "w").
@@ -114,7 +146,9 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
                None derives masks from the zeros already baked into ``w``
                (i.e. params after ``trainer.apply_masks``).
     mapping  : PruneSpec [(path_regex, SchemeChoice)] from the mapper —
-               only paths mapped to a block scheme are packed.
+               only paths mapped to a block scheme are packed (FC block
+               schemes pack the weight as-is; ``block_punched`` conv
+               layers pack the im2col-lowered weight).
     block_override : force one (bk, bn) packing block for every layer
                (otherwise each layer uses its mapped choice.block).
     keep_dense : keep "w" next to "packed" (dense fallback / debugging);
@@ -156,26 +190,45 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
         if any(e in wpath for e in exclude):
             return skip("excluded")
         choice = RW.match(list(mapping), wpath)
-        if choice is None or choice.scheme not in BLOCK_SCHEMES:
+        if choice is None or choice.scheme not in PACKABLE_SCHEMES:
             return skip("no block scheme mapped")
+        kind = _layer_kind(w, choice.scheme)
+        if kind == "depthwise":
+            return skip("depthwise conv never packed (§5.2.4)")
+        if kind == "bad_conv":
+            return skip(f"{choice.scheme} needs a (P, Q, Kh, Kw) conv "
+                        f"weight, got shape {tuple(w.shape)}")
         mask = m.get("w") if isinstance(m, dict) else None
         if masks is None:
             mask = np.asarray(w) != 0
         elif mask is None or getattr(mask, "ndim", 0) == 0:
             return skip("no mask (layer not pruned)")
         block = tuple(block_override or choice.block)
-        K, N = w.shape[-2:]
-        if K % block[0] or N % block[1]:
-            return skip(f"block {block} does not divide ({K}, {N})")
-        packed, stats = _pack_stacked(w, mask, block, reorder=reorder,
-                                      n_bins=n_bins)
+        if kind == "conv":
+            # im2col producer: lower weight AND mask to the GEMM the conv
+            # executes as (kernels.ops.sparse_conv2d), then reuse the one
+            # packing pipeline.  The kernel-block choice (bp filters, bq
+            # channels) becomes GEMM block (bq, bp) — see bcs.conv_lower.
+            gemm_block, why = BCS.conv_gemm_block(block, w.shape)
+            if gemm_block is None:
+                return skip(why)
+            wl = BCS.conv_lower(w)
+            ml = BCS.conv_lower(np.broadcast_to(np.asarray(mask), w.shape))
+            packed, stats = _pack_stacked(wl, ml, gemm_block,
+                                          reorder=reorder, n_bins=n_bins)
+        else:
+            K, N = w.shape[-2:]
+            if K % block[0] or N % block[1]:
+                return skip(f"block {block} does not divide ({K}, {N})")
+            packed, stats = _pack_stacked(w, mask, block, reorder=reorder,
+                                          n_bins=n_bins)
         if stats["flops_saved"] <= min_saving:
             return skip(f"no effective saving (L={stats['L']} of "
                         f"Kb={stats['Kb']} column blocks survive)")
         out["packed"] = packed
         if not keep_dense:
             del out["w"]
-        report.append({"path": wpath, "packed": True, **stats})
+        report.append({"path": wpath, "packed": True, "kind": kind, **stats})
         return out
 
     return walk(params, masks, ""), report
@@ -188,7 +241,8 @@ def compiled_summary(report) -> str:
     for r in report:
         if r["packed"]:
             lines.append(
-                f"  pack {r['path']:<28s} block={r['block']} "
+                f"  pack {r['path']:<28s} [{r.get('kind', 'linear')}] "
+                f"block={r['block']} "
                 f"density={r['density']:.2f} "
                 f"L={r['L']}->{r['L_reordered']}/{r['Kb']} "
                 f"(reorder_gain={r['reorder_gain']:.2f}x) "

@@ -7,8 +7,6 @@ multiply into matmul operands (the training-time path; the BCS Pallas kernel
 is the serving-time path)."""
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

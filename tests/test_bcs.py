@@ -1,6 +1,5 @@
 """Blocked Compressed Storage format tests (paper Fig 4)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 try:
     from hypothesis import given, settings, strategies as st
@@ -8,7 +7,6 @@ except ImportError:          # clean container: deterministic example sweep
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import bcs as BCS
-from repro.core import regularity as R
 
 
 def make(K=128, N=256, bk=32, bn=64, zero_frac=0.5, seed=0):

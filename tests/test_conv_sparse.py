@@ -1,0 +1,167 @@
+"""CONV layers as PackedLayout producers/consumers: im2col lowering
+round-trips, packed-vs-masked-dense parity on both tiny conv archs
+(including the 5x5 and stride-2 layers), reorder bit-identity through
+``sparse_conv2d``, and the depthwise / indivisible skip regressions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bcs as BCS
+from repro.core import regularity as R
+from repro.core import reweighted as RW
+from repro.kernels import ops
+from repro.models import convnet as C
+from repro.serve.compile import compile_model, compiled_summary
+from repro.train.trainer import apply_masks
+
+CONV_SPEC = [(r"(^|/)(c|pw|dw)\d+/w", RW.SchemeChoice("block_punched",
+                                                      (8, 8)))]
+
+
+def conv_case(P, Q, kh, kw, rate=0.5, block=(8, 8), seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (P, Q, kh, kw),
+                          jnp.float32) * 0.1
+    mask = R.block_punched_mask(w, block, rate=rate)
+    return w * mask, mask
+
+
+def dense_conv(wm, x, stride):
+    kernel = wm.transpose(2, 3, 1, 0)            # (kh,kw,Q,P)
+    return jax.lax.conv_general_dilated(
+        x, kernel, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# -- lowering: im2col GEMM == lax.conv, punched masks -> dead blocks ---------
+
+@pytest.mark.parametrize("P,Q,kh,kw,stride", [
+    (32, 16, 3, 3, 1),
+    (64, 32, 5, 5, 2),      # non-3x3 kernel AND stride 2
+    (32, 16, 1, 1, 1),
+])
+def test_sparse_conv2d_matches_dense_conv(P, Q, kh, kw, stride):
+    wm, mask = conv_case(P, Q, kh, kw)
+    gemm_block, why = BCS.conv_gemm_block((8, 8), wm.shape)
+    assert gemm_block == (8, 8) and why is None
+    packed = ops.pack(BCS.conv_lower(wm), BCS.conv_lower(mask), gemm_block,
+                      reorder=True, n_bins=4)
+    # punched groups became whole dead BCS blocks: real executed-L savings
+    assert packed.flops_saved > 0.3
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, Q), jnp.float32)
+    y = ops.sparse_conv2d(x, packed, kh=kh, kw=kw, stride=stride)
+    y_ref = dense_conv(wm, x, stride)
+    assert y.shape == y_ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_conv_lower_row_order_is_tap_major():
+    """Row r of the lowered weight = channel q at tap (i, j) with
+    r = (i*Kw + j)*Q + q — the contract im2col relies on."""
+    P, Q, Kh, Kw = 4, 3, 2, 2
+    w = np.arange(P * Q * Kh * Kw, dtype=np.float32).reshape(P, Q, Kh, Kw)
+    wl = BCS.conv_lower(w)
+    assert wl.shape == (Kh * Kw * Q, P)
+    for i in range(Kh):
+        for j in range(Kw):
+            for q in range(Q):
+                np.testing.assert_array_equal(wl[(i * Kw + j) * Q + q],
+                                              w[:, q, i, j])
+
+
+@pytest.mark.parametrize("n_bins", [1, 2, 4])
+def test_sparse_conv2d_reorder_bit_identity(n_bins):
+    """Row-reordered conv layouts produce bit-identical outputs — the
+    epilogue gather relabels output channels, accumulation is untouched."""
+    wm, mask = conv_case(64, 32, 3, 3, rate=0.7, seed=3)
+    wl, ml = BCS.conv_lower(wm), BCS.conv_lower(mask)
+    plain = ops.pack(wl, ml, (8, 8))
+    reord = ops.pack(wl, ml, (8, 8), reorder=True, n_bins=n_bins)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 9, 9, 32), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(5), (64,), jnp.float32)
+    y0 = ops.sparse_conv2d(x, plain, kh=3, kw=3, stride=2, bias=b,
+                           act="relu")
+    y1 = ops.sparse_conv2d(x, reord, kh=3, kw=3, stride=2, bias=b,
+                           act="relu")
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    assert reord.L_effective <= plain.L_max
+
+
+# -- compile_model: whole-convnet packed forward == masked-dense oracle ------
+
+def _compiled_convnet(arch, rate=0.5, seed=0):
+    params = C.convnet_init(jax.random.PRNGKey(seed), arch,
+                            dtype=jnp.float32)
+    masks = RW.punched_conv_masks(params, CONV_SPEC, (8, 8), rate=rate)
+    pm = apply_masks(params, masks)
+    exec_params, report = compile_model(pm, masks, CONV_SPEC)
+    return pm, exec_params, report
+
+
+@pytest.mark.parametrize("arch,expect_packed", [
+    (C.VGG_TINY, {"c2", "c3", "c4", "c5", "c6"}),      # stride-2 + 1x1
+    (C.MOBILE_TINY, {"pw2", "pw3", "c4"}),             # 5x5 + depthwise mix
+])
+def test_convnet_packed_forward_parity(arch, expect_packed):
+    pm, exec_params, report = _compiled_convnet(arch)
+    packed = {r["path"].split("/")[0] for r in report if r["packed"]}
+    assert packed == expect_packed, compiled_summary(report)
+    assert all(r["kind"] == "conv" for r in report if r["packed"])
+    x, _ = C.synthetic_images(jax.random.PRNGKey(2), 4)
+    y_ref = C.convnet_apply(pm, x, arch)
+    y = C.convnet_apply(exec_params, x, arch)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_convnet_packed_drop_dense():
+    """keep_dense=False: packed conv layers lose "w" and the net still runs
+    through the kernel path (depthwise/stem keep their dense weights)."""
+    params = C.convnet_init(jax.random.PRNGKey(0), C.MOBILE_TINY,
+                            dtype=jnp.float32)
+    masks = RW.punched_conv_masks(params, CONV_SPEC, (8, 8))
+    pm = apply_masks(params, masks)
+    exec_params, report = compile_model(pm, masks, CONV_SPEC,
+                                        keep_dense=False)
+    for r in report:
+        name = r["path"].split("/")[0]
+        assert ("w" in exec_params[name]) == (not r["packed"])
+    x, _ = C.synthetic_images(jax.random.PRNGKey(1), 2)
+    y_ref = C.convnet_apply(pm, x, C.MOBILE_TINY)
+    y = C.convnet_apply(exec_params, x, C.MOBILE_TINY)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_depthwise_skips_with_logged_reason_not_crash():
+    """Regression: depthwise layers must SKIP packing with a logged reason
+    (§5.2.4) — never crash, never pack — even when the spec maps them."""
+    _, exec_params, report = _compiled_convnet(C.MOBILE_TINY)
+    by_name = {r["path"].split("/")[0]: r for r in report}
+    for dw_name in ("dw2", "dw3"):
+        assert not by_name[dw_name]["packed"]
+        assert "depthwise" in by_name[dw_name]["reason"]
+        assert "packed" not in exec_params[dw_name]
+
+
+def test_conv_gemm_block_indivisible_skips():
+    """A kernel block that cannot tile (P, Q) skips with the reason in the
+    report — e.g. the 3-channel stem conv under an (8, 8) kernel block."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 3, 3, 3), jnp.float32)
+    gb, why = BCS.conv_gemm_block((8, 8), w.shape)
+    assert gb is None and "does not divide" in why
+    params = {"c1": {"w": w, "b": jnp.zeros((32,), jnp.float32)}}
+    exec_params, report = compile_model(
+        params, None, [(r"c1/w", RW.SchemeChoice("block_punched", (8, 8)))])
+    assert not report[0]["packed"]
+    assert "does not divide" in report[0]["reason"]
+
+
+def test_block_punched_on_non_conv_weight_skips():
+    """block_punched mapped onto a 2-D FC weight must skip, not lower."""
+    params = {"fc": {"w": jnp.ones((64, 64), jnp.float32)}}
+    exec_params, report = compile_model(
+        params, None, [(r"fc/w", RW.SchemeChoice("block_punched", (8, 8)))])
+    assert not report[0]["packed"]
+    assert "conv weight" in report[0]["reason"]

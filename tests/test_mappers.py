@@ -2,13 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.core import mapper_rule as MR
 from repro.core import mapper_search as MS
-from repro.core.latency_model import V5E, matmul_latency
-from repro.core.reweighted import match
+from repro.core.latency_model import matmul_latency
 
 
 class TestRuleBased:

@@ -4,7 +4,6 @@ on CPU-sized models."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.core import reweighted as RW
