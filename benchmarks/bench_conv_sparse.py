@@ -1,5 +1,6 @@
-"""CONV layers through the BCS sparse path — the Fig 5 block-size sweep at
-the layer level, reported in *executed-L* terms.
+"""CONV layers through the sparse paths — the Fig 5 block-size sweep at
+the layer level, reported in *executed-L* terms, plus the pattern/
+connectivity rows through the tap-gather kernel.
 
 For a serving-ish conv layer the kernel-block sweep packs a block-punched
 mask through the im2col lowering (``core.bcs.conv_lower``) and reports the
@@ -13,8 +14,18 @@ trade-off, covered by bench_mapping), and the parity error of
 ``kernels.ops.sparse_conv2d`` against the masked ``lax.conv`` oracle.  A
 5x5 stride-2 row covers the non-3x3 case the paper calls out; whole-model
 conv rows (VGG_TINY through ``compile_model``) live in the conv section of
-``bench_e2e_sparse``.  Emitted rows land in BENCH_conv_sparse.json under
-``run.py --json``."""
+``bench_e2e_sparse``.
+
+Pattern rows (``pattern,...``) cover the tap-gather path: a 4-of-9
+pattern mask (optionally with connectivity pruning, and a connectivity-
+only 5x5 row) is tap-lowered (``core.bcs.pattern_lower``) and the row
+reports the *executed-tap* savings of the padded ``TapLayout`` (what the
+kernel multiplies, NOT raw mask density), the degree-binning gain on the
+tap lists, the modeled tap-gather latency next to the modeled dense conv
+(pattern is the accuracy-first scheme — on TPU the tap gather runs at VPU
+efficiency, so the win is skipped work and HBM, not MXU throughput), and
+the kernel's parity error against the masked ``lax.conv`` oracle.
+Emitted rows land in BENCH_conv_sparse.json under ``run.py --json``."""
 import jax
 import jax.numpy as jnp
 
@@ -62,6 +73,46 @@ def _layer_row(P, Q, kh, kw, stride, kernel_block, feat=14, rate=0.6,
             f"L={plain.L_max}->{reord.L_effective:.2f};max_err={err:.1e}")
 
 
+def _pattern_row(P, Q, kh, kw, stride, connectivity, feat=14, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (P, Q, kh, kw),
+                          jnp.float32) * 0.1
+    if (kh, kw) == (3, 3):
+        mask = R.pattern_mask(w, connectivity_rate=connectivity)
+    else:                      # non-3x3: the scheme's connectivity half
+        mask = R.connectivity_mask(w, rate=connectivity)
+    wm = w * mask
+    plain = ops.pack_taps(wm, mask, reorder=False)
+    tap = ops.pack_taps(wm, mask, reorder=True, n_bins=4)
+    M, K, N = conv_as_gemm(-(-feat // stride), Q, P, kh, kw)
+
+    def modeled_us(layout):
+        frac = 1.0 - layout.flops_saved
+        return matmul_latency(M, K, N, scheme="pattern",
+                              compression=1 / max(frac, 1e-9),
+                              executed_frac=frac) * 1e6
+
+    us_tap = modeled_us(tap)
+    us_plain = modeled_us(plain)
+    us_dense = matmul_latency(M, K, N) * 1e6
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, feat, feat, Q),
+                          jnp.float32)
+    y = ops.sparse_conv2d_pattern(x, tap, kh=kh, kw=kw, stride=stride)
+    kernel = wm.transpose(2, 3, 1, 0)
+    y_ref = jax.lax.conv_general_dilated(
+        x, kernel, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    return (f"pattern,{P}x{Q}x{kh}x{kw},s{stride},conn{connectivity:.1f}",
+            us_tap,
+            f"unreordered_us={us_plain:.1f};"
+            f"reorder_speedup={us_plain / us_tap:.2f}x;"
+            f"flops_saved_exec={tap.flops_saved:.2f};"
+            f"raw_zero_frac={1 - tap.density:.2f};"
+            f"L={plain.L_max}->{tap.L_effective:.2f};"
+            f"alive_band={tap.n_alive}/{tap.shape[0]};"
+            f"dense_us={us_dense:.1f};max_err={err:.1e}")
+
+
 def bench(fast=True):
     rows = []
     # Fig 5 analogue: kernel-block sweep on a serving-ish 3x3 conv
@@ -69,4 +120,9 @@ def bench(fast=True):
         rows.append(_layer_row(128, 64, 3, 3, 1, kb))
     # the paper's non-3x3 point: 5x5 kernel, stride 2
     rows.append(_layer_row(128, 64, 5, 5, 2, (8, 8)))
+    # tap-gather rows: pure 4-of-9 patterns, patterns + connectivity, and
+    # the connectivity-only 5x5 — executed-tap savings, not raw density
+    rows.append(_pattern_row(128, 64, 3, 3, 1, 0.0))
+    rows.append(_pattern_row(128, 64, 3, 3, 1, 0.5))
+    rows.append(_pattern_row(128, 64, 5, 5, 2, 0.5))
     return rows

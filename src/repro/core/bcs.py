@@ -345,6 +345,78 @@ def conv_lower(w):
         w.transpose(2, 3, 1, 0).reshape(Kh * Kw * Q, P))
 
 
+def pattern_lower(w, mask, *, group=1, n_bins=4, reorder=True):
+    """Tap lowering of a pattern/connectivity-pruned conv (PatDNN/PCONV
+    schemes, paper §2.1.1): per-kernel pattern masks carry NO block
+    structure — every (p, q) kernel keeps its own 4-of-9 tap set — so the
+    skippable unit is a single ROW of the im2col band ("tap" = input
+    channel q at kernel position (i, j)), not a (bk, bn) block.
+
+    Builds a ``core.packed.TapLayout`` for ``kernels.bsr_matmul.
+    tap_gather_conv``: per group of ``group`` consecutive output filters,
+    the list of band rows any filter in the group survives at, degree-
+    sorted and split into ``n_bins`` bins each padded to its own max (the
+    same Fig 4 load-balance move as ``pack_csc_reordered`` — connectivity-
+    pruned filters carry fewer taps, so binning keeps them from paying the
+    densest filter's degree).  Rows dead for EVERY group are dropped from
+    the ``alive`` index entirely: whole pruned taps and whole pruned input
+    channels are never even gathered into the kernel's input band.
+
+    ``group=1`` (the default, and what ``serve.compile`` uses) stores exact
+    per-filter tap lists — maximum skipping.  Larger groups widen the
+    kernel's output tile but store the tap UNION of the group; since
+    patterns differ per kernel, the union approaches dense quickly (for
+    random 4-of-9 patterns a group of 8 keeps ~99% of taps), so wide
+    groups only pay off after PatDNN-style similarity reordering.
+
+    Works for any (P, Q, Kh, Kw) mask — 3x3 pattern masks, connectivity
+    (whole-kernel) masks on arbitrary kernel sizes, or their product."""
+    from repro.core.packed import TapLayout
+
+    w = np.asarray(w)
+    mask = np.broadcast_to(np.asarray(mask), w.shape)
+    assert w.ndim == 4, \
+        f"pattern_lower needs a (P, Q, Kh, Kw) conv weight, got {w.shape}"
+    P = w.shape[0]
+    assert P % group == 0, (P, group)
+    wl = conv_lower(w * mask.astype(w.dtype))          # (K, P)
+    ml = conv_lower(mask) > 0
+    K = wl.shape[0]
+    G = P // group
+    galive = ml.reshape(K, G, group).any(axis=2)       # (K, G)
+    alive = np.nonzero(galive.any(axis=1))[0]          # rows live anywhere
+    if len(alive) == 0:
+        alive = np.zeros(1, np.int64)                  # fully-pruned layer
+    ga = galive[alive]                                 # (R, G)
+    cnt = ga.sum(axis=0).astype(np.int64)              # taps per group
+    if reorder:
+        order = np.argsort(-cnt, kind="stable").astype(np.int32)
+        bounds = bin_bounds(G, n_bins)
+    else:
+        order = np.arange(G, dtype=np.int32)
+        bounds = ((0, G),)
+    inv = np.empty(G, np.int32)
+    inv[order] = np.arange(G, dtype=np.int32)
+    cnt_sorted = cnt[order]
+    bin_values, bin_tidx = [], []
+    for s, e in bounds:
+        Lb = max(1, int(cnt_sorted[s:e].max()) if e > s else 1)
+        vals = np.zeros((e - s, Lb, group), w.dtype)
+        tidx = np.zeros((e - s, Lb), np.int32)
+        for gi, g in enumerate(order[s:e]):
+            rows = np.nonzero(ga[:, g])[0]
+            vals[gi, :len(rows)] = wl[alive[rows], g * group:(g + 1) * group]
+            tidx[gi, :len(rows)] = rows
+        bin_values.append(jnp.asarray(vals))
+        bin_tidx.append(jnp.asarray(tidx))
+    return TapLayout(values=tuple(bin_values), t_idx=tuple(bin_tidx),
+                     nnz=jnp.asarray(cnt_sorted, jnp.int32),
+                     alive=jnp.asarray(alive, jnp.int32),
+                     perm=jnp.asarray(order) if reorder else None,
+                     inv_perm=jnp.asarray(inv) if reorder else None,
+                     group=group, shape=(K, P))
+
+
 def conv_gemm_block(kernel_block, conv_shape):
     """Packing block for the lowered conv GEMM from the paper's kernel-block
     choice (bp over filters P, bq over channels Q): (bk, bn) = (bq, bp).

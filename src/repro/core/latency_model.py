@@ -34,6 +34,10 @@ class TPUTarget:
     mxu: int = 128
     step_overhead: float = 1.5e-7     # per pallas grid step (pipeline bubble)
     gather_bw_frac: float = 0.08      # unstructured: effective HBM fraction
+    vpu_frac: float = 0.02            # VPU-only compute as a peak fraction
+                                      # (gather-fed paths that defeat MXU
+                                      # tiling: unstructured CSR and the
+                                      # pattern tap-gather kernel)
 
 
 V4 = TPUTarget("v4", 275e12, 1228e9, 45e9)
@@ -57,11 +61,27 @@ def _util(scheme: str, block, mxu=128) -> float:
     raise ValueError(scheme)
 
 
+def pattern_executed_frac(connectivity=0.0, taps=4, positions=9) -> float:
+    """Executed-tap fraction of the tap-gather kernel under a pattern
+    scheme: ``taps``-of-``positions`` kernel patterns times the kernels
+    that survive connectivity pruning.  This is the *executed* cost the
+    mappers rank pattern picks by — when a real ``TapLayout`` exists, pass
+    its measured ``1 - flops_saved`` (which also counts bin padding) as
+    ``executed_frac`` instead."""
+    return taps / positions * (1.0 - connectivity)
+
+
 def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
                    compression=1.0, target: TPUTarget = V5E,
-                   dtype_bytes=2) -> float:
+                   dtype_bytes=2, executed_frac=None) -> float:
     """One FC/CONV-as-GEMM layer: y(M,N) = x(M,K) @ w(K,N) with the given
-    pruning scheme at `compression` (param reduction factor)."""
+    pruning scheme at `compression` (param reduction factor).
+
+    ``executed_frac`` overrides the raw density with the fraction of dense
+    MACs the kernel actually executes under its padded layout (pattern
+    scheme: measured tap savings from a ``core.packed.TapLayout``) — the
+    executed-cost hook the mappers use so a pattern pick is ranked by what
+    the tap-gather kernel runs, not by raw mask density."""
     density = 1.0 / max(compression, 1.0)
     dense_flops = 2.0 * M * K * N
     x_b = M * K * dtype_bytes
@@ -78,7 +98,7 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
         # CSR gather: no MXU, index+value traffic at degraded bandwidth
         w_b = density * K * N * (dtype_bytes + 4)
         t_m = (x_b + y_b + w_b) / (target.hbm_bw * target.gather_bw_frac)
-        t_c = density * dense_flops / (target.peak_flops * 0.02)  # VPU only
+        t_c = density * dense_flops / (target.peak_flops * target.vpu_frac)
         return max(t_c, t_m)
 
     if scheme in ("structured_row", "structured_col"):
@@ -92,12 +112,18 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
                               dtype_bytes=dtype_bytes)
 
     if scheme == "pattern":
-        # HBM shrinks (4/9 weights + per-kernel pattern ids); compute dense
-        w_b = density * w_dense_b + (K * N / 9) * 1
-        t_c = dense_flops / target.peak_flops
-        t_m = (x_b + y_b + w_b) / target.hbm_bw
-        return max(t_c, t_m) + max(1, (M // target.mxu) * (N // target.mxu)) \
-            * target.step_overhead
+        # tap-gather kernel (kernels.bsr_matmul.tap_gather_conv): only the
+        # executed taps are gathered and multiplied — compute scales with
+        # the executed-tap fraction at VPU efficiency (per-filter tap sets
+        # defeat MXU tiling), HBM shrinks to surviving values + 4-byte tap
+        # ids + the alive activation band.  One grid step per (M tile,
+        # filter group) at group=1 — the serve-path layout.
+        frac = executed_frac if executed_frac is not None else density
+        t_c = frac * dense_flops / (target.peak_flops * target.vpu_frac)
+        w_b = frac * K * N * (dtype_bytes + 4)
+        t_m = (x_b * min(1.0, 9 * frac) + y_b + w_b) / target.hbm_bw
+        steps = max(1.0, max(1, M // 512) * N)
+        return max(t_c, t_m) + steps * target.step_overhead
 
     # block / block_punched: skip zero blocks, pay utilization + per-step
     # overhead for sub-MXU tiles

@@ -17,6 +17,7 @@ from dataclasses import dataclass
 
 from repro.configs.base import ArchConfig
 from repro.core.latency_model import (TPUTarget, V5E, matmul_latency,
+                                      pattern_executed_frac,
                                       structured_baseline, conv_as_gemm)
 from repro.core.regularity import legal_blocks
 from repro.core.reweighted import SchemeChoice
@@ -114,11 +115,17 @@ def map_rules(layers: list[LayerDesc], *, dataset_hard=True, beta=0.2,
             t = t_base = 0.0
         elif ld.kind == "conv3x3":
             if dataset_hard:
-                choice = SchemeChoice("pattern",
-                                      connectivity=1 - 4 / 9 / 1.0)
+                conn = 1 - 4 / 9 / 1.0
+                choice = SchemeChoice("pattern", connectivity=conn)
+                # rank the pattern pick by what the tap-gather kernel
+                # EXECUTES (4-of-9 taps x surviving kernels), not by the
+                # raw 4/9 mask density it used to be priced at
+                frac = pattern_executed_frac(conn)
                 t = matmul_latency(ld.M, ld.K, ld.N, scheme="pattern",
-                                   compression=2.25, target=target)
-                t_base = structured_baseline(ld.M, ld.K, ld.N, 2.25, target)
+                                   compression=1 / frac, target=target,
+                                   executed_frac=frac)
+                t_base = structured_baseline(ld.M, ld.K, ld.N, 1 / frac,
+                                             target)
             else:
                 b, t, t_base = select_block_size(ld.M, ld.K, ld.N,
                                                  compression, beta, target)

@@ -15,7 +15,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.latency_model import V5E, matmul_latency
+from repro.core.latency_model import (V5E, matmul_latency,
+                                      pattern_executed_frac)
 from repro.core.mapper_rule import LayerDesc
 from repro.core.reweighted import SchemeChoice
 
@@ -125,18 +126,23 @@ def actions_to_spec(layers, a_s, a_b, rate=None) -> list:
 
 
 def mapping_latency(layers, a_s, a_b, compression=8.0, target=V5E) -> float:
+    """Modeled total latency of a sampled mapping — the reward's latency
+    term.  Pattern picks are priced at the tap-gather kernel's executed-tap
+    fraction (``pattern_executed_frac``), not raw mask density."""
     t = 0.0
     for ld, s, b in zip(layers, np.asarray(a_s), np.asarray(a_b)):
         scheme = SCHEME_MENU[int(s)]
+        frac = None
         if scheme == "none":
             comp = 1.0
         elif scheme == "pattern":
-            comp = 2.25
+            frac = pattern_executed_frac()
+            comp = 1 / frac
         else:
             comp = compression
         t += ld.count * matmul_latency(
             ld.M, ld.K, ld.N, scheme=scheme, block=BLOCK_MENU[int(b)],
-            compression=comp, target=target)
+            compression=comp, target=target, executed_frac=frac)
     return t
 
 

@@ -1,24 +1,36 @@
-"""PackedLayout — the single interchange format for block-sparse execution.
+"""Interchange formats for sparse execution: PackedLayout and TapLayout.
 
 Every sparse consumer in the repo (``serve.compile.compile_model``,
-``kernels.ops``, ``kernels.bsr_matmul``, ``models.layers.linear`` and the
-batched MoE expert path in ``models.moe``) produces/consumes this one object
-instead of ad-hoc ``{"values", "k_idx"}`` dicts.  It is a registered pytree,
-so layouts live inside param trees, survive ``jax.jit``/``lax.scan`` over
-stacked layer axes (leaves may carry leading stack dims; ``block``/``shape``
-are static aux data), and new consumers (conv, SSM) become layout
-*producers*, not new dict formats.
+``kernels.ops``, ``kernels.bsr_matmul``, ``models.layers.linear``, the
+batched MoE expert path in ``models.moe`` and the conv paths in
+``models.convnet``) produces/consumes one of these two objects instead of
+ad-hoc ``{"values", "k_idx"}`` dicts.  Both are registered pytrees, so
+layouts live inside param trees, survive ``jax.jit``/``lax.scan`` over
+stacked layer axes (leaves may carry leading stack dims; geometry is static
+aux data), and new consumers become layout *producers*, not new dict
+formats.
 
-Layout semantics (paper §4.3 Fig 4, CSC orientation — see ``core.bcs``):
-the dense weight is (K, N); each block COLUMN j (output tile) stores the
-list of surviving K-block indices.  With *row reordering for load balance*
-(the paper's Fig 4 reorder step), block columns are sorted by degree and
-split into ``n_bins`` contiguous bins, each padded only to its OWN max
-degree — so the executed column degree drops toward the mean instead of
-every column paying the global max.  ``perm``/``inv_perm`` carry the
-(inverse) permutation; the executor gathers outputs back to original column
-order (bit-identical results, since per-column accumulation order is
-untouched).
+``PackedLayout`` (paper §4.3 Fig 4, CSC orientation — see ``core.bcs``) is
+the block-sparse format: the dense weight is (K, N); each block COLUMN j
+(output tile) stores the list of surviving K-block indices.  With *row
+reordering for load balance* (the paper's Fig 4 reorder step), block
+columns are sorted by degree and split into ``n_bins`` contiguous bins,
+each padded only to its OWN max degree — so the executed column degree
+drops toward the mean instead of every column paying the global max.
+``perm``/``inv_perm`` carry the (inverse) permutation; the executor gathers
+outputs back to original column order (bit-identical results, since
+per-column accumulation order is untouched).
+
+``TapLayout`` is the fine-grained sibling for pattern/connectivity-pruned
+convolutions (paper §2.1.1 / PatDNN, PCONV): pattern masks carry no block
+structure — each (filter, channel) kernel keeps its own 4-of-9 tap set —
+so the skippable unit is a single row ("tap") of the im2col band, not a
+(bk, bn) block.  ``core.bcs.pattern_lower`` builds it; the Pallas
+``kernels.bsr_matmul.tap_gather_conv`` kernel consumes it.  The two layouts
+share the same structural conventions (per-bin leaf tuples, degree
+sort + binning, perm/inv_perm over the output axis, fused-epilogue bias
+helpers), so ``serve.compile`` and the model dispatch treat "packed" as one
+concept and pick the executor by layout type.
 """
 from __future__ import annotations
 
@@ -50,6 +62,10 @@ class PackedLayout:
     Static aux data (hashable; part of the jit cache key):
       block : (bk, bn)
       shape : (K, N) of one dense weight slice
+
+    Padding slots (column degree below the bin max) carry ``k_idx`` 0 and
+    all-zero values, so they multiply to nothing; ``nnz`` records the true
+    per-column degree for stats and ``to_dense``.
     """
 
     values: tuple
@@ -63,12 +79,14 @@ class PackedLayout:
     # -- pytree protocol -----------------------------------------------------
 
     def tree_flatten(self):
+        """Flatten into (array leaves, static aux) for jax pytree traversal."""
         children = (self.values, self.k_idx, self.nnz, self.perm,
                     self.inv_perm)
         return children, (self.block, self.shape)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
         values, k_idx, nnz, perm, inv_perm = children
         block, shape = aux
         return cls(values=values, k_idx=k_idx, nnz=nnz, perm=perm,
@@ -78,14 +96,17 @@ class PackedLayout:
 
     @property
     def Kb(self) -> int:
+        """Number of block rows (K // bk)."""
         return self.shape[0] // self.block[0]
 
     @property
     def Nb(self) -> int:
+        """Number of block columns (N // bn)."""
         return self.shape[1] // self.block[1]
 
     @property
     def n_bins(self) -> int:
+        """Number of degree bins (1 for an unreordered layout)."""
         return len(self.values)
 
     @property
@@ -134,6 +155,7 @@ class PackedLayout:
 
     @property
     def density(self) -> float:
+        """Surviving-block fraction of the Kb x Nb block grid."""
         return self.nnzb / (self.Kb * self.Nb)
 
     @property
@@ -194,3 +216,189 @@ class PackedLayout:
                     dense[int(kidx[j, l]), oj] += vals[j, l]
             col += vals.shape[0]
         return dense.transpose(0, 2, 1, 3).reshape(K, N)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True, eq=False)
+class TapLayout:
+    """Per-filter tap lists over the im2col band — the pattern-conv layout.
+
+    Built by ``core.bcs.pattern_lower`` from a 4-D pattern/connectivity conv
+    mask; consumed by ``kernels.bsr_matmul.tap_gather_conv`` via
+    ``kernels.ops.sparse_conv2d_pattern``.  The dense object it represents
+    is the im2col-lowered conv weight (K, P) with K = Kh*Kw*Q rows ("taps":
+    input channel q at kernel position (i, j)) and P output filters.  Each
+    GROUP of ``group`` consecutive filters stores the list of taps any of
+    its filters survives at; the kernel gathers exactly those rows of the
+    patch matrix and contracts them in one step — pruned taps are never
+    multiplied, and rows dead for EVERY filter (``alive`` excludes them)
+    are never even materialized in the gathered band.
+
+    Array leaves (single-slice — conv layers are not stacked):
+      values   : tuple of per-bin arrays (G_b, L_b, group) — the weight of
+                 each filter in the group at tap slot l (zero when that
+                 filter prunes the tap, and on padding slots)
+      t_idx    : tuple of per-bin arrays (G_b, L_b) int32 — tap slot ->
+                 row of the ALIVE band (position in ``alive``, not the full
+                 K-row band); padding slots point at row 0 with zero values
+      nnz      : (G,) int32 true tap-degree per group, in LAYOUT order
+      alive    : (R,) int32 rows of the full im2col band live for at least
+                 one group — the host-side gather that builds the kernel's
+                 input band
+      perm     : (G,) int32 layout position -> original filter group, or
+                 None when unreordered
+      inv_perm : (G,) int32 original filter group -> layout position
+
+    Static aux data (hashable; part of the jit cache key):
+      group : filters per tap-list (1 = exact per-filter taps; larger
+              groups widen the output tile but store the tap UNION, which
+              erodes savings because patterns differ per kernel)
+      shape : (K, P) of the lowered dense weight
+
+    Degree sort + binning mirror ``PackedLayout``: groups are sorted by
+    tap-degree and each bin padded to its own max, so connectivity-pruned
+    filters (fewer taps) don't pay the densest filter's degree.
+    """
+
+    values: tuple
+    t_idx: tuple
+    nnz: object
+    alive: object
+    perm: object = None
+    inv_perm: object = None
+    group: int = 1
+    shape: tuple = (0, 0)
+
+    # -- pytree protocol -----------------------------------------------------
+
+    def tree_flatten(self):
+        """Flatten into (array leaves, static aux) for jax pytree traversal."""
+        children = (self.values, self.t_idx, self.nnz, self.alive,
+                    self.perm, self.inv_perm)
+        return children, (self.group, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
+        values, t_idx, nnz, alive, perm, inv_perm = children
+        group, shape = aux
+        return cls(values=values, t_idx=t_idx, nnz=nnz, alive=alive,
+                   perm=perm, inv_perm=inv_perm, group=group, shape=shape)
+
+    # -- static geometry (no device sync) ------------------------------------
+
+    @property
+    def n_groups(self) -> int:
+        """Number of filter groups (P // group)."""
+        return self.shape[1] // self.group
+
+    @property
+    def n_alive(self) -> int:
+        """Rows of the im2col band live for at least one group."""
+        return self.alive.shape[-1]
+
+    @property
+    def n_bins(self) -> int:
+        """Number of degree bins (1 for an unreordered layout)."""
+        return len(self.values)
+
+    @property
+    def bin_sizes(self) -> tuple:
+        """Filter groups per bin."""
+        return tuple(v.shape[-3] for v in self.values)
+
+    @property
+    def bin_degrees(self) -> tuple:
+        """Padded tap degree L_b of each bin."""
+        return tuple(v.shape[-2] for v in self.values)
+
+    @property
+    def L_max(self) -> int:
+        """Worst padded tap degree across bins."""
+        return max(self.bin_degrees)
+
+    @property
+    def executed_taps(self) -> int:
+        """Tap slots the kernel gathers+multiplies (padding included):
+        sum over bins of G_b * L_b."""
+        return sum(s * d for s, d in zip(self.bin_sizes, self.bin_degrees))
+
+    @property
+    def L_effective(self) -> float:
+        """Mean executed tap degree under the binned layout."""
+        return self.executed_taps / max(self.n_groups, 1)
+
+    @property
+    def flops_saved(self) -> float:
+        """Fraction of dense conv-GEMM FLOPs the tap-gather kernel skips:
+        1 - executed/(K * n_groups), padding included — the executed-tap
+        analogue of ``PackedLayout.flops_saved`` (NOT the raw mask
+        density)."""
+        K = self.shape[0]
+        return max(0.0, 1.0 - self.executed_taps / (K * self.n_groups))
+
+    # -- data-dependent stats (host sync; report/test time only) -------------
+
+    @property
+    def nnz_taps(self) -> int:
+        """True surviving tap-list entries (union over each group)."""
+        return int(np.asarray(self.nnz).sum())
+
+    @property
+    def density(self) -> float:
+        """Surviving tap-list fraction of the K x n_groups tap grid."""
+        return self.nnz_taps / (self.shape[0] * self.n_groups)
+
+    @property
+    def padding_overhead(self) -> float:
+        """Executed-tap overhead of bin padding vs exact tap lists."""
+        return self.executed_taps / max(self.nnz_taps, 1)
+
+    # -- helpers -------------------------------------------------------------
+
+    def unpermute_cols(self, y):
+        """Gather a (..., M, P) output from layout group order back to the
+        original filter order (identity when unreordered)."""
+        if self.inv_perm is None:
+            return y
+        yb = y.reshape(y.shape[:-1] + (self.n_groups, self.group))
+        yb = jnp.take(yb, self.inv_perm, axis=-2)
+        return yb.reshape(y.shape)
+
+    def permute_bias(self, bias):
+        """Gather a (P,) bias into layout group order for fused epilogues."""
+        if bias is None or self.perm is None:
+            return bias
+        bb = bias.reshape(self.n_groups, self.group)
+        return jnp.take(bb, self.perm, axis=0).reshape(-1)
+
+    def bin_bias(self, bias):
+        """Per-bin (G_b * group,) bias slices in layout order (or Nones)."""
+        if bias is None:
+            return (None,) * self.n_bins
+        pb = self.permute_bias(bias).reshape(self.n_groups, self.group)
+        out, start = [], 0
+        for s in self.bin_sizes:
+            out.append(pb[start:start + s].reshape(-1))
+            start += s
+        return tuple(out)
+
+    def to_dense(self):
+        """Reconstruct the dense lowered (K, P) weight — the round-trip
+        oracle: must equal ``core.bcs.conv_lower(w * mask)``."""
+        K, P = self.shape
+        dense = np.zeros((K, P), np.asarray(self.values[0]).dtype)
+        alive = np.asarray(self.alive)
+        perm = (np.asarray(self.perm) if self.perm is not None
+                else np.arange(self.n_groups))
+        nnz = np.asarray(self.nnz)
+        col = 0
+        for vals, tidx in zip(self.values, self.t_idx):
+            vals, tidx = np.asarray(vals), np.asarray(tidx)
+            for g in range(vals.shape[0]):
+                og = int(perm[col + g])
+                sl = slice(og * self.group, (og + 1) * self.group)
+                for l in range(int(nnz[col + g])):
+                    dense[alive[int(tidx[g, l])], sl] += vals[g, l]
+            col += vals.shape[0]
+        return dense

@@ -138,6 +138,18 @@ for i, cells in enumerate([
 PATTERN_SET = jnp.asarray(_P)                     # (8, 3, 3)
 
 
+def connectivity_mask(w, rate=None, threshold=None):
+    """Connectivity pruning alone (PCONV's inter-kernel half): whole (p, q)
+    kernels with the smallest L2 norms die, any kernel size.  This is the
+    pattern-scheme component that applies beyond 3x3 — ``masks_for_spec``
+    routes a ``pattern`` choice on a non-3x3 conv here, and the tap-gather
+    executor skips the dead kernels' taps wholesale.  w: (P, Q, Kh, Kw)."""
+    sq = jnp.square(w.astype(jnp.float32))
+    g = jnp.sum(sq, axis=(-1, -2))                # (P, Q)
+    keep = _select(g, rate, threshold)
+    return jnp.broadcast_to(keep[..., None, None], w.shape).astype(jnp.float32)
+
+
 def pattern_mask(w, connectivity_rate=0.0):
     """Kernel-pattern pruning (+optional connectivity pruning) for 3x3 CONV.
     Each kernel gets the pattern from the fixed 8-set that preserves the

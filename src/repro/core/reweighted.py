@@ -157,7 +157,13 @@ def masks_for_spec(params, spec, threshold=None, default_rate=None):
         if choice is None or choice.scheme == "none" or leaf.ndim < 2:
             return one
         if choice.scheme == "pattern":
-            return R.pattern_mask(leaf, choice.connectivity)
+            if leaf.ndim == 4 and leaf.shape[-2:] == (3, 3):
+                return R.pattern_mask(leaf, choice.connectivity)
+            if leaf.ndim == 4 and choice.connectivity > 0:
+                # the 8-pattern set is 3x3-only (§2.1.1); other kernel
+                # sizes keep the scheme's connectivity (whole-kernel) half
+                return R.connectivity_mask(leaf, rate=choice.connectivity)
+            return one
         if threshold is not None:
             # global_threshold works on layer-mean-normalized sqnorms;
             # rescale back to this leaf's raw group sqnorm scale.

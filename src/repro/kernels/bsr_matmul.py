@@ -27,6 +27,14 @@ callers never silently fall back to a dense matmul.
 repo-wide interchange format — runs one launch per degree bin (row
 reordering/binning: each bin is padded only to its own max column degree)
 and gathers outputs back to original column order in the epilogue.
+
+``tap_gather_conv`` (bottom of this file) is the second kernel: the
+executor for pattern/connectivity-pruned convolutions, consuming the
+``core.packed.TapLayout`` sibling format.  Where the BCS grid pays one
+step per surviving BLOCK, per-kernel pattern masks have no block
+structure, so that grid shape would cost one step per scalar tap; the tap
+kernel instead keeps the alive im2col band VMEM-resident and gathers each
+output filter's surviving taps in one (M tile, filter group) step.
 """
 from __future__ import annotations
 
@@ -65,6 +73,19 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _m_tile(M, bm, dtype):
+    """Pick the M tile: split M over the minimum number of bm-sized tiles,
+    then shrink the tile to the aligned ceiling of the per-tile share so
+    zero-padding stays under one alignment unit (M=129 with bm=128 runs
+    2x72 rows, not 2x128).  Alignment is the Mosaic second-minor minimum:
+    8 rows for f32, 16 for bf16; decode arrives with M = batch < both."""
+    align = 8 if dtype == jnp.float32 else 16
+    n_tiles = -(-M // bm) if M > bm else 1
+    per_tile = -(-M // n_tiles)
+    bm = min(bm, ((per_tile + align - 1) // align) * align)
+    return bm, ((M + bm - 1) // bm) * bm
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bm", "act", "interpret", "out_dtype"))
 def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
@@ -80,17 +101,8 @@ def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
     M, K = x.shape
     Nb, L, bk, bn = values.shape
     N = Nb * bn
-    # Pick the M tile: split M over the minimum number of bm-sized tiles,
-    # then shrink the tile to the aligned ceiling of the per-tile share so
-    # zero-padding stays under one alignment unit (M=129 with bm=128 runs
-    # 2x72 rows, not 2x128).  Alignment is the Mosaic second-minor minimum:
-    # 8 rows for f32, 16 for bf16; decode arrives with M = batch < both.
-    align = 8 if x.dtype == jnp.float32 else 16
-    n_tiles = -(-M // bm) if M > bm else 1
-    per_tile = -(-M // n_tiles)
-    bm = min(bm, ((per_tile + align - 1) // align) * align)
+    bm, Mp = _m_tile(M, bm, x.dtype)
     assert K % bk == 0, (K, bk)
-    Mp = ((M + bm - 1) // bm) * bm
     if Mp != M:
         x = jnp.pad(x, ((0, Mp - M), (0, 0)))
     out_dtype = out_dtype or x.dtype
@@ -143,5 +155,107 @@ def bsr_matmul_packed(x, layout, bias=None, *, bm=128, act="none",
         outs.append(bsr_matmul(x, vals_b, kidx_b, bias=bias_b, bm=bm,
                                act=act, interpret=interpret,
                                out_dtype=out_dtype))
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+    return layout.unpermute_cols(y)
+
+
+# ---------------------------------------------------------------------------
+# Tap-gather kernel: pattern/connectivity-pruned convs (PatDNN/PCONV style)
+# ---------------------------------------------------------------------------
+
+def _tap_kernel(t_idx, x_ref, w_ref, b_ref, o_ref, *, act):
+    """One grid step per (M tile, filter group): gather this group's
+    surviving taps from the VMEM-resident alive band and contract them in a
+    single dot — no cross-step accumulator, epilogue fused into the same
+    step."""
+    j = pl.program_id(1)
+    taps = t_idx[j]                                     # (L,) int32, SMEM
+    g = jnp.take(x_ref[...], taps, axis=1)              # (bm, L)
+    out = jnp.dot(g, w_ref[0], preferred_element_type=jnp.float32)
+    if b_ref is not None:
+        out = out + b_ref[0].astype(jnp.float32)
+    if act == "silu":
+        out = out * jax.nn.sigmoid(out)
+    elif act == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "act", "interpret", "out_dtype"))
+def tap_gather_conv(x, values, t_idx, bias=None, *, bm=128, act="none",
+                    interpret=None, out_dtype=None):
+    """x (M, R) alive im2col band @ per-group tap lists -> (M, G*group).
+
+    The executor for pattern/connectivity-pruned convolutions (one launch
+    per ``core.packed.TapLayout`` degree bin): ``values`` (G, L, group)
+    holds each filter group's surviving-tap weights, ``t_idx`` (G, L) the
+    band row each slot reads.  Where the BCS kernel's grid pays one step
+    per (bk, bn) BLOCK — a full grid step per single tap at the (1, group)
+    granularity pattern masks force — this kernel keeps the whole alive
+    band (bm, R) resident in VMEM and gathers each group's taps inside ONE
+    step, so the grid is (M/bm, G) regardless of tap count.  Pruned weight
+    taps are never stored nor multiplied; band rows dead for every filter
+    never reach the kernel at all (``TapLayout.alive`` excludes them from
+    the host-side patch gather).  Padding slots read row 0 with zero
+    values.  Bias + activation fuse into the same step (there is no
+    cross-step accumulator to epilogue).
+
+    The in-kernel gather runs on the VPU (per-filter tap sets defeat MXU
+    tiling — the §5.2.4-style trade-off ``core.latency_model`` now prices);
+    like ``bsr_matmul``, ``interpret=None`` auto-detects the backend and
+    ragged M is padded here, never silently densified."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    M, R = x.shape
+    G, L, gp = values.shape
+    bm, Mp = _m_tile(M, bm, x.dtype)
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+    out_dtype = out_dtype or x.dtype
+    N = G * gp
+
+    grid = (Mp // bm, G)
+    in_specs = [
+        pl.BlockSpec((bm, R), lambda i, j, tidx: (i, 0)),
+        pl.BlockSpec((1, L, gp), lambda i, j, tidx: (j, 0, 0)),
+    ]
+    args = [x, values]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, gp), lambda i, j, tidx: (0, j)))
+        args.append(bias.reshape(1, N))
+        kern = functools.partial(_tap_kernel, act=act)
+    else:
+        def kern(t_idx_ref, x_ref, w_ref, o_ref):
+            _tap_kernel(t_idx_ref, x_ref, w_ref, None, o_ref, act=act)
+
+    y = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, gp), lambda i, j, tidx: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
+        interpret=interpret,
+    )(t_idx, *args)
+    return y[:M] if Mp != M else y
+
+
+def tap_gather_conv_packed(x, layout, bias=None, *, bm=128, act="none",
+                           interpret=None, out_dtype=None):
+    """x (M, R) alive band @ TapLayout -> (M, P), original filter order.
+
+    One ``tap_gather_conv`` launch per degree bin (each bin padded only to
+    its own max tap degree), outputs concatenated over bins and gathered
+    back through ``inv_perm`` — the TapLayout mirror of
+    ``bsr_matmul_packed``."""
+    outs = []
+    for vals_b, tidx_b, bias_b in zip(layout.values, layout.t_idx,
+                                      layout.bin_bias(bias)):
+        outs.append(tap_gather_conv(x, vals_b, tidx_b, bias=bias_b, bm=bm,
+                                    act=act, interpret=interpret,
+                                    out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     return layout.unpermute_cols(y)

@@ -20,12 +20,26 @@ whole dead BCS blocks, so pruned taps are skipped, not multiplied by zero.
 Stride/padding are handled in the patch extraction; bias + activation fuse
 into the kernel epilogue exactly as for ``sparse_linear``.
 
-``pack`` is the host-side codegen step: it converts a pruned weight into a
-``core.packed.PackedLayout`` — the single interchange format every sparse
-consumer shares — optionally degree-sorted/binned (``reorder``) so the
-padded column degree L drops toward the mean.  Results are memoized on a
-content digest of (w, mask, block, reorder, n_bins); reordered and
-unreordered packs of the same weights can never collide."""
+``sparse_conv2d_pattern`` is the pattern/connectivity CONV consumer: the
+same im2col patch extraction, restricted to the layout's ``alive`` band,
+then the Pallas tap-gather kernel (``bsr_matmul.tap_gather_conv``) — each
+output filter multiplies ONLY its surviving taps, so 4-of-9 pattern masks
+and connectivity-pruned kernels execute sparsely instead of falling back
+to masked-dense.
+
+``pack`` / ``pack_taps`` are the host-side codegen steps: they convert a
+pruned weight into a ``core.packed.PackedLayout`` (block schemes) or
+``core.packed.TapLayout`` (pattern schemes) — the two interchange formats
+every sparse consumer shares — optionally degree-sorted/binned
+(``reorder``) so the padded column/tap degree L drops toward the mean.
+
+Cache-key contract: results are memoized on a blake2b content digest of
+(layout kind, w bytes, mask bytes, w shape+dtype, block-or-group, reorder,
+n_bins).  Every knob that changes the produced layout is part of the key,
+so reordered and unreordered packs, different bin counts, block shapes, or
+tap-group sizes of the SAME weights can never collide; entries are evicted
+LRU under both a count and a byte bound.  Cached layouts are frozen — the
+same instance is handed to every caller."""
 from __future__ import annotations
 
 import hashlib
@@ -37,7 +51,7 @@ import jax.numpy as jnp
 
 from repro.core import bcs as BCS
 from repro.core.packed import PackedLayout
-from repro.kernels.bsr_matmul import bsr_matmul_packed
+from repro.kernels.bsr_matmul import bsr_matmul_packed, tap_gather_conv_packed
 from repro.kernels import ref
 
 _PACK_CACHE: OrderedDict = OrderedDict()
@@ -52,13 +66,24 @@ def _entry_bytes(layout: PackedLayout) -> int:
     return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in leaves)
 
 
-def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins) -> str:
+def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins,
+            kind="bcs") -> str:
     h = hashlib.blake2b(digest_size=16)
-    h.update(str((w.shape, str(w.dtype), block, bool(reorder),
+    h.update(str((kind, w.shape, str(w.dtype), block, bool(reorder),
                   int(n_bins))).encode())
     h.update(np.ascontiguousarray(w).tobytes())
     h.update(np.ascontiguousarray(mask).tobytes())
     return h.hexdigest()
+
+
+def _cache_put(key, out):
+    """Insert a packed layout, then evict LRU entries past the bounds."""
+    _PACK_CACHE[key] = out
+    total = sum(_entry_bytes(e) for e in _PACK_CACHE.values())
+    while (len(_PACK_CACHE) > _PACK_CACHE_MAX
+           or total > _PACK_CACHE_MAX_BYTES) and len(_PACK_CACHE) > 1:
+        _, evicted = _PACK_CACHE.popitem(last=False)
+        total -= _entry_bytes(evicted)
 
 
 def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4,
@@ -85,16 +110,36 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4,
         out = PackedLayout(values=(values,), k_idx=(k_idx,), nnz=nnz,
                            block=tuple(block), shape=tuple(w.shape))
     if key is not None:
-        _PACK_CACHE[key] = out
-        total = sum(_entry_bytes(e) for e in _PACK_CACHE.values())
-        while (len(_PACK_CACHE) > _PACK_CACHE_MAX
-               or total > _PACK_CACHE_MAX_BYTES) and len(_PACK_CACHE) > 1:
-            _, evicted = _PACK_CACHE.popitem(last=False)
-            total -= _entry_bytes(evicted)
+        _cache_put(key, out)
+    return out
+
+
+def pack_taps(w, mask, *, group=1, reorder=True, n_bins=4,
+              use_cache=True):
+    """Host-side packing of a pattern/connectivity-pruned conv weight into
+    the tap-gather layout.
+
+    Returns a ``core.packed.TapLayout`` (see ``core.bcs.pattern_lower``):
+    per-output-filter tap lists over the im2col band, degree-sorted into
+    ``n_bins`` bins when ``reorder`` is set.  Shares the pack cache (and
+    its cache-key contract — the layout kind is part of the digest, so a
+    TapLayout and a PackedLayout of the same weights never collide)."""
+    w = np.asarray(w)
+    mask = np.asarray(mask)
+    key = (_digest(w, mask, (1, int(group)), reorder, n_bins, kind="taps")
+           if use_cache else None)
+    if key is not None and key in _PACK_CACHE:
+        _PACK_CACHE.move_to_end(key)
+        return _PACK_CACHE[key]
+    out = BCS.pattern_lower(w, mask, group=group, n_bins=n_bins,
+                            reorder=reorder)
+    if key is not None:
+        _cache_put(key, out)
     return out
 
 
 def clear_pack_cache():
+    """Drop every memoized layout (test isolation / memory pressure)."""
     _PACK_CACHE.clear()
 
 
@@ -172,6 +217,34 @@ def sparse_conv2d(x, packed: PackedLayout, *, kh, kw, stride=1,
     return y.reshape(B, Ho, Wo, y.shape[-1])
 
 
+def sparse_conv2d_pattern(x, tap, *, kh, kw, stride=1, padding="SAME",
+                          bias=None, act="none", bm=128, interpret=None):
+    """x (B, H, W, Cin) * tap-lowered conv weight -> (B, Ho, Wo, Cout).
+
+    ``tap`` is the ``core.packed.TapLayout`` of a pattern/connectivity-
+    pruned conv layer (``serve.compile.compile_model`` routes 4-D
+    ``pattern``-scheme masks here).  The conv runs as im2col + the Pallas
+    tap-gather kernel: the patch matrix is first gathered down to
+    ``tap.alive`` — rows (taps / whole input channels) pruned in EVERY
+    filter are never materialized — then each filter group contracts only
+    its own surviving taps (one launch per degree bin), with bias +
+    activation fused in the kernel step.  Bit-parity oracle: the masked
+    dense ``lax.conv`` kept in ``models.convnet``."""
+    B, H, W, C = x.shape
+    assert tap.shape[0] == kh * kw * C, (
+        f"layout K={tap.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    patches = im2col(x, kh, kw, stride, padding)
+    _, Ho, Wo, K = patches.shape
+    band = patches.reshape(B * Ho * Wo, K)
+    if tap.n_alive < K:
+        # nonzero() is sorted, so a full-size alive index is exactly
+        # arange(K): only gather when rows are actually dead everywhere
+        band = jnp.take(band, tap.alive, axis=1)
+    y = tap_gather_conv_packed(band, tap, bias=bias, bm=bm, act=act,
+                               interpret=interpret)
+    return y.reshape(B, Ho, Wo, y.shape[-1])
+
+
 def sparse_expert_linear(x, packed: PackedLayout, bias=None, act="none",
                          bm=128, interpret=None):
     """Batched per-expert sparse GEMM: x (E, M, K) -> (E, M, N).
@@ -181,13 +254,13 @@ def sparse_expert_linear(x, packed: PackedLayout, bias=None, act="none",
     ``serve.compile._pack_stacked`` emits for MoE expert weights.  The
     packed kernel is ``jax.vmap``-ed over that axis, so all experts run as
     one batched launch per bin instead of E Python-level calls."""
-    def fn(xe, le, be=None):
+    def _fn(xe, le, be=None):
         return bsr_matmul_packed(xe, le, bias=be, bm=bm, act=act,
                                  interpret=interpret)
 
     if bias is not None:
-        return jax.vmap(fn)(x, packed, bias)
-    return jax.vmap(lambda xe, le: fn(xe, le))(x, packed)
+        return jax.vmap(_fn)(x, packed, bias)
+    return jax.vmap(lambda xe, le: _fn(xe, le))(x, packed)
 
 
 def flops_saved(packed: PackedLayout) -> float:

@@ -3,14 +3,17 @@ experiments (Fig 5/7, Table 2/4 reproductions run on these + synthetic
 CIFAR-like data).  Weight layout: (out_ch, in_ch, kh, kw) = the paper's
 (P, Q, Kh, Kw), so block-punched / pattern masks apply directly.
 
-Sparse serving: ``serve.compile.compile_model`` installs a
-``core.packed.PackedLayout`` of the im2col-lowered weight next to each
-block-punched conv (``params[name]["packed"]``); ``convnet_apply`` then
-executes that layer through ``kernels.ops.sparse_conv2d`` — one BCS GEMM
-over extracted patches, bias + relu fused in the kernel epilogue — instead
-of the masked-dense ``lax.conv`` (kept below as the parity oracle).
-Depthwise layers are never packed (§5.2.4) and always take the dense
-path."""
+Sparse serving: ``serve.compile.compile_model`` installs a layout next to
+each pruned conv (``params[name]["packed"]``): a ``core.packed.
+PackedLayout`` of the im2col-lowered weight for block-punched layers, or a
+``core.packed.TapLayout`` of per-filter tap lists for pattern/connectivity
+layers.  ``convnet_apply`` dispatches on the layout type — block layouts
+run through ``kernels.ops.sparse_conv2d`` (one BCS GEMM over extracted
+patches), tap layouts through ``kernels.ops.sparse_conv2d_pattern`` (the
+tap-gather kernel) — bias + relu fused in the kernel epilogue either way,
+instead of the masked-dense ``lax.conv`` (kept below as the parity
+oracle).  Depthwise layers are never packed (§5.2.4) and always take the
+dense path."""
 from __future__ import annotations
 
 import jax
@@ -65,8 +68,11 @@ def convnet_apply(params, x, arch=VGG_TINY, masks=None):
         packed = params[name].get("packed")
         if packed is not None and not dw:
             from repro.kernels import ops  # late import: kernels -> core only
-            x = ops.sparse_conv2d(x, packed, kh=kh, kw=kw, stride=stride,
-                                  bias=params[name]["b"], act="relu")
+            from repro.core.packed import TapLayout
+            conv = (ops.sparse_conv2d_pattern
+                    if isinstance(packed, TapLayout) else ops.sparse_conv2d)
+            x = conv(x, packed, kh=kh, kw=kw, stride=stride,
+                     bias=params[name]["b"], act="relu")
             continue
         w = params[name]["w"]
         mk = m.get(name)

@@ -15,8 +15,11 @@ code, adapted to TPU tiles.
 
 Layer kinds are detected structurally (``_layer_kind``): block-punched
 4-D (P, Q, Kh, Kw) conv weights are im2col-lowered before packing
-(``core.bcs.conv_lower``), depthwise convs are skipped with a logged
-reason (§5.2.4), everything else packs as a (possibly stacked) GEMM.
+(``core.bcs.conv_lower``), pattern/connectivity 4-D conv masks are
+tap-lowered into a ``core.packed.TapLayout`` (``core.bcs.pattern_lower``)
+for the Pallas tap-gather kernel — a pattern pick no longer falls back to
+masked-dense — depthwise convs are skipped with a logged reason (§5.2.4),
+and everything else packs as a (possibly stacked) GEMM.
 
 Row reordering for load balance (Fig 4) happens here by default
 (``reorder=True``): block columns are degree-sorted and binned before
@@ -39,31 +42,40 @@ from repro.core import reweighted as RW
 from repro.core.packed import PackedLayout
 from repro.kernels import ops
 
-# schemes whose masks the BCS executor can exploit (whole blocks die):
-# FC schemes pack the weight as-is; block_punched (the paper's CONV scheme)
-# packs the im2col-lowered weight — see _layer_kind below.
+# schemes the sparse executors can exploit: FC block schemes pack the
+# weight as-is; block_punched (the paper's CONV scheme) packs the
+# im2col-lowered weight into whole dead BCS blocks; pattern (incl.
+# connectivity pruning) carries no block structure and tap-lowers into a
+# TapLayout for the tap-gather kernel — see _layer_kind below.
 BLOCK_SCHEMES = ("block", "block_row", "block_col")
 CONV_SCHEMES = ("block_punched",)
-PACKABLE_SCHEMES = BLOCK_SCHEMES + CONV_SCHEMES
+PATTERN_SCHEMES = ("pattern",)
+PACKABLE_SCHEMES = BLOCK_SCHEMES + CONV_SCHEMES + PATTERN_SCHEMES
 
 
 def _layer_kind(w, scheme: str) -> str:
-    """Structural layer-kind detection — what decides the PackedLayout
-    producer, instead of path-name heuristics:
+    """Structural layer-kind detection — what decides the layout producer,
+    instead of path-name heuristics:
 
-      conv      : 4-D (P, Q, Kh, Kw) weight mapped to a CONV scheme
-      depthwise : conv with Q == 1 (never packed, §5.2.4)
-      linear    : trailing (K, N) GEMM weight, any leading stack dims
-                  (scanned layers, MoE experts, or both)
+      conv         : 4-D (P, Q, Kh, Kw) weight mapped to a CONV block
+                     scheme -> im2col BCS producer
+      pattern_conv : 4-D conv weight mapped to the pattern scheme ->
+                     tap-gather producer (per-kernel pattern masks carry no
+                     block structure, so the skippable unit is a tap)
+      depthwise    : conv with Q == 1 (never packed, §5.2.4)
+      linear       : trailing (K, N) GEMM weight, any leading stack dims
+                     (scanned layers, MoE experts, or both)
 
     The mapped scheme disambiguates rank-4 weights: a stacked MoE expert
     weight (L, E, K, N) is also 4-D, but the mapper only ever assigns
-    ``block_punched`` to real conv weights (its groups are kernel
-    positions), so scheme + rank identifies the producer."""
-    if scheme in CONV_SCHEMES:
+    ``block_punched``/``pattern`` to real conv weights (their groups are
+    kernel positions), so scheme + rank identifies the producer."""
+    if scheme in CONV_SCHEMES + PATTERN_SCHEMES:
         if getattr(w, "ndim", 0) != 4:
             return "bad_conv"
-        return "depthwise" if w.shape[1] == 1 else "conv"
+        if w.shape[1] == 1:
+            return "depthwise"
+        return "pattern_conv" if scheme in PATTERN_SCHEMES else "conv"
     return "linear"
 
 
@@ -146,9 +158,11 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
                None derives masks from the zeros already baked into ``w``
                (i.e. params after ``trainer.apply_masks``).
     mapping  : PruneSpec [(path_regex, SchemeChoice)] from the mapper —
-               only paths mapped to a block scheme are packed (FC block
+               only paths mapped to a packable scheme are packed (FC block
                schemes pack the weight as-is; ``block_punched`` conv
-               layers pack the im2col-lowered weight).
+               layers pack the im2col-lowered weight; ``pattern`` conv
+               layers tap-lower into a TapLayout for the tap-gather
+               kernel).
     block_override : force one (bk, bn) packing block for every layer
                (otherwise each layer uses its mapped choice.block).
     keep_dense : keep "w" next to "packed" (dense fallback / debugging);
@@ -204,7 +218,26 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
         elif mask is None or getattr(mask, "ndim", 0) == 0:
             return skip("no mask (layer not pruned)")
         block = tuple(block_override or choice.block)
-        if kind == "conv":
+        if kind == "pattern_conv":
+            # tap producer: pattern/connectivity masks carry no block
+            # structure (every kernel keeps its own tap set), so the layer
+            # lowers to per-filter tap lists over the im2col band and
+            # executes through the tap-gather kernel — the scheme the
+            # mapper picked for accuracy now runs sparsely instead of
+            # silently falling back to masked-dense.
+            tap = ops.pack_taps(w, mask, reorder=reorder, n_bins=n_bins)
+            stats = {
+                "block": (1, tap.group), "shape": tap.shape,
+                "L": tap.L_max, "Kb": tap.shape[0],
+                "L_reordered": round(tap.L_effective, 2),
+                "reorder_gain": round(
+                    tap.L_max / max(tap.L_effective, 1e-9), 2),
+                "density": tap.density,
+                "flops_saved": tap.flops_saved,
+                "layers": 1,
+            }
+            packed = tap
+        elif kind == "conv":
             # im2col producer: lower weight AND mask to the GEMM the conv
             # executes as (kernels.ops.sparse_conv2d), then reuse the one
             # packing pipeline.  The kernel-block choice (bp filters, bq

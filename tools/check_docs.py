@@ -1,0 +1,70 @@
+"""Docs link checker (CI docs job): every relative markdown link in
+README.md and docs/ must point at a file or directory that exists in the
+repo.
+
+Network-free on purpose — external http(s) links are counted but not
+fetched (CI runners and dev sandboxes should not flake on the internet);
+what this catches is the common rot: a renamed module, a moved doc, a
+deleted example still referenced from the README.
+
+Exit status: 0 when every relative link resolves, 1 otherwise (each
+broken link is printed as ``file: target``).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# [text](target) — excluding images' leading ! does not matter for existence
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    """README.md plus every markdown file under docs/."""
+    out = [ROOT / "README.md"]
+    out += sorted((ROOT / "docs").glob("**/*.md"))
+    return [p for p in out if p.exists()]
+
+
+def check_file(path: pathlib.Path):
+    """Returns (broken, n_relative, n_external) for one markdown file."""
+    broken, n_rel, n_ext = [], 0, 0
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            n_ext += 1
+            continue
+        if target.startswith("#"):          # intra-page anchor
+            continue
+        n_rel += 1
+        rel = target.split("#", 1)[0]
+        if not (path.parent / rel).exists():
+            broken.append(f"{path.relative_to(ROOT)}: {target}")
+    return broken, n_rel, n_ext
+
+
+def main() -> int:
+    """Check every doc file; print a summary and broken links."""
+    files = doc_files()
+    if not files:
+        print("no markdown files found to check", file=sys.stderr)
+        return 1
+    broken, n_rel, n_ext = [], 0, 0
+    for path in files:
+        b, r, e = check_file(path)
+        broken += b
+        n_rel += r
+        n_ext += e
+    for line in broken:
+        print(f"BROKEN: {line}", file=sys.stderr)
+    if broken:
+        return 1
+    print(f"docs link check passed: {n_rel} relative link(s) across "
+          f"{len(files)} file(s) resolve ({n_ext} external link(s) not "
+          "fetched)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
