@@ -25,14 +25,49 @@ tap lists, the modeled tap-gather latency next to the modeled dense conv
 (pattern is the accuracy-first scheme — on TPU the tap gather runs at VPU
 efficiency, so the win is skipped work and HBM, not MXU throughput), and
 the kernel's parity error against the masked ``lax.conv`` oracle.
+
+Every conv row also reports the HBM megabytes its GEMM moves on both
+x-operand strategies (``hbm_mat_mb``: patch read + weights + output;
+``hbm_imp_mb``: padded feature-map read + weights + output) so the
+implicit-GEMM speedup is explainable from traffic, not just observed.
+``implicit,...`` rows compare materialized vs implicit end to end at
+VGG/MOBILE-scale shapes: modeled latency (``implicit_speedup``, gated —
+never < 1 since the paths differ only in activation traffic), peak
+working set (``peak_imp_mb``/``peak_mat_mb``, deterministic byte
+accounting, gated lower-is-better — the patch tensor is the gap), and
+interpret-mode wall time (info only).  The ``tap_bins`` row locks the
+n_bins=8 default for connectivity-bearing tap layouts
+(``bin8_speedup`` = 4-bin padding overhead / 8-bin padding overhead).
 Emitted rows land in BENCH_conv_sparse.json under ``run.py --json``."""
+import time
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import bcs as BCS
 from repro.core import regularity as R
-from repro.core.latency_model import conv_as_gemm, matmul_latency
+from repro.core.latency_model import conv_as_gemm, im2col_x_frac, \
+    matmul_latency
 from repro.kernels import ops
+from repro.kernels.bsr_matmul import conv_geometry
+
+_F4 = 4  # fp32 bytes — every conv bench runs fp32
+
+
+def _layout_mb(layout):
+    return ops._entry_bytes(layout) / 1e6
+
+
+def _traffic_mb(B, H, W, Q, P, kh, kw, stride, w_mb):
+    """(patch, padded-input, output, weights+output) megabytes for one
+    conv-as-GEMM: the materialized path reads the patch tensor, the
+    implicit path the padded feature map; weights + output are common."""
+    ph, pw, Ho, Wo = conv_geometry(H, W, kh, kw, stride)
+    M = B * Ho * Wo
+    patch_mb = M * kh * kw * Q * _F4 / 1e6
+    padded_mb = B * (H + ph[0] + ph[1]) * (W + pw[0] + pw[1]) * Q * _F4 / 1e6
+    out_mb = M * P * _F4 / 1e6
+    return patch_mb, padded_mb, out_mb, w_mb + out_mb
 
 
 def _layer_row(P, Q, kh, kw, stride, kernel_block, feat=14, rate=0.6,
@@ -64,25 +99,33 @@ def _layer_row(P, Q, kh, kw, stride, kernel_block, feat=14, rate=0.6,
         x, kernel, (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     err = float(jnp.max(jnp.abs(y - y_ref)))
+    patch_mb, padded_mb, out_mb, common_mb = _traffic_mb(
+        1, feat, feat, Q, P, kh, kw, stride, _layout_mb(reord))
     bp, bq = kernel_block
     return (f"conv,{P}x{Q}x{kh}x{kw},s{stride},blk{bp}x{bq}", us_sparse,
             f"unreordered_us={us_plain:.1f};"
             f"reorder_speedup={us_plain / us_sparse:.2f}x;"
             f"flops_saved_exec={reord.flops_saved:.2f};"
             f"raw_zero_frac={1 - reord.density:.2f};"
-            f"L={plain.L_max}->{reord.L_effective:.2f};max_err={err:.1e}")
+            f"L={plain.L_max}->{reord.L_effective:.2f};"
+            f"hbm_mat_mb={patch_mb + common_mb:.3f};"
+            f"hbm_imp_mb={padded_mb + common_mb:.3f};max_err={err:.1e}")
 
 
-def _pattern_row(P, Q, kh, kw, stride, connectivity, feat=14, seed=0):
+def _pattern_case(P, Q, kh, kw, connectivity, seed=0):
     w = jax.random.normal(jax.random.PRNGKey(seed), (P, Q, kh, kw),
                           jnp.float32) * 0.1
     if (kh, kw) == (3, 3):
         mask = R.pattern_mask(w, connectivity_rate=connectivity)
     else:                      # non-3x3: the scheme's connectivity half
         mask = R.connectivity_mask(w, rate=connectivity)
-    wm = w * mask
+    return w * mask, mask
+
+
+def _pattern_row(P, Q, kh, kw, stride, connectivity, feat=14, seed=0):
+    wm, mask = _pattern_case(P, Q, kh, kw, connectivity, seed)
     plain = ops.pack_taps(wm, mask, reorder=False)
-    tap = ops.pack_taps(wm, mask, reorder=True, n_bins=4)
+    tap = ops.pack_taps(wm, mask, reorder=True)    # default bins (8)
     M, K, N = conv_as_gemm(-(-feat // stride), Q, P, kh, kw)
 
     def modeled_us(layout):
@@ -102,6 +145,10 @@ def _pattern_row(P, Q, kh, kw, stride, connectivity, feat=14, seed=0):
         x, kernel, (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     err = float(jnp.max(jnp.abs(y - y_ref)))
+    patch_mb, padded_mb, out_mb, common_mb = _traffic_mb(
+        1, feat, feat, Q, P, kh, kw, stride, _layout_mb(tap))
+    # the materialized tap path reads the alive band, not the full patch
+    band_mb = patch_mb * tap.n_alive / tap.shape[0]
     return (f"pattern,{P}x{Q}x{kh}x{kw},s{stride},conn{connectivity:.1f}",
             us_tap,
             f"unreordered_us={us_plain:.1f};"
@@ -110,7 +157,100 @@ def _pattern_row(P, Q, kh, kw, stride, connectivity, feat=14, seed=0):
             f"raw_zero_frac={1 - tap.density:.2f};"
             f"L={plain.L_max}->{tap.L_effective:.2f};"
             f"alive_band={tap.n_alive}/{tap.shape[0]};"
+            f"hbm_mat_mb={band_mb + common_mb:.3f};"
+            f"hbm_imp_mb={padded_mb + common_mb:.3f};"
             f"dense_us={us_dense:.1f};max_err={err:.1e}")
+
+
+def _wall_us(fn, iters=2):
+    jax.block_until_ready(fn())                   # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _implicit_row(tag, P, Q, kh, kw, stride, feat, batch, *, pattern,
+                  wall_feat, seed=0):
+    """Materialized vs implicit at a serving-scale shape: modeled latency
+    at the layout's executed cost with each path's activation traffic
+    (``im2col_x_frac``), deterministic peak-working-set accounting (the
+    patch tensor is the whole gap), and interpret-mode wall time measured
+    at ``wall_feat`` (info only — interpret wall is not TPU wall)."""
+    if pattern:
+        wm, mask = _pattern_case(P, Q, kh, kw, 0.5, seed)
+        layout = ops.pack_taps(wm, mask)
+        frac = 1.0 - layout.flops_saved
+        conv = lambda x, imp: ops.sparse_conv2d_pattern(   # noqa: E731
+            x, layout, kh=kh, kw=kw, stride=stride, implicit=imp)
+
+        def modeled(M, K, N, implicit):
+            return matmul_latency(
+                M, K, N, scheme="pattern", compression=1 / max(frac, 1e-9),
+                executed_frac=frac,
+                x_frac=im2col_x_frac(kh * kw, implicit)) * 1e6
+    else:
+        w = jax.random.normal(jax.random.PRNGKey(seed), (P, Q, kh, kw),
+                              jnp.float32) * 0.1
+        kernel_block = (64, 64)
+        mask = R.block_punched_mask(w, kernel_block, rate=0.6)
+        wm = w * mask
+        gemm_block, why = BCS.conv_gemm_block(kernel_block, w.shape)
+        assert gemm_block is not None, why
+        layout = ops.pack(BCS.conv_lower(wm), BCS.conv_lower(mask),
+                          gemm_block, reorder=True, n_bins=4,
+                          conv=(kh, kw, Q))
+        conv = lambda x, imp: ops.sparse_conv2d(           # noqa: E731
+            x, layout, kh=kh, kw=kw, stride=stride, implicit=imp)
+
+        def modeled(M, K, N, implicit):
+            comp = (layout.Kb * layout.Nb) / max(layout.executed_blocks, 1)
+            return matmul_latency(
+                M, K, N, scheme="block_punched", block=gemm_block,
+                compression=comp,
+                x_frac=im2col_x_frac(kh * kw, implicit)) * 1e6
+
+    M, K, N = conv_as_gemm(-(-feat // stride), Q, P, kh, kw, batch=batch)
+    us_mat, us_imp = modeled(M, K, N, False), modeled(M, K, N, True)
+    w_mb = _layout_mb(layout)
+    patch_mb, padded_mb, out_mb, _ = _traffic_mb(
+        batch, feat, feat, Q, P, kh, kw, stride, w_mb)
+    x_mb = batch * feat * feat * Q * _F4 / 1e6
+    peak_mat = x_mb + patch_mb + w_mb + out_mb
+    peak_imp = x_mb + padded_mb + w_mb + out_mb
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, wall_feat, wall_feat, Q), jnp.float32)
+    wall_mat = _wall_us(lambda: conv(x, False))
+    wall_imp = _wall_us(lambda: conv(x, True))
+    err = float(jnp.max(jnp.abs(conv(x, True) - conv(x, False))))
+    return (f"implicit,{tag},{P}x{Q}x{kh}x{kw},s{stride},f{feat}b{batch}",
+            us_imp,
+            f"materialized_us={us_mat:.1f};"
+            f"implicit_speedup={us_mat / us_imp:.2f}x;"
+            f"peak_imp_mb={peak_imp:.2f};peak_mat_mb={peak_mat:.2f};"
+            f"patch_avoided={patch_mb - padded_mb + x_mb:.2f}MB;"
+            f"wall_us_mat={wall_mat:.0f};wall_us_imp={wall_imp:.0f};"
+            f"max_err={err:.1e}")
+
+
+def _bin_row(P=128, Q=64, seed=0):
+    """Lock the raised tap-bin default: on a connectivity-bearing layout,
+    8 bins must keep strictly less padding than 4 (ROADMAP: ~89% vs ~75%
+    of the 1-bin -> ideal gap recovered)."""
+    wm, mask = _pattern_case(P, Q, 3, 3, 0.5, seed)
+    b1 = ops.pack_taps(wm, mask, n_bins=1)
+    b4 = ops.pack_taps(wm, mask, n_bins=4)
+    b8 = ops.pack_taps(wm, mask)                  # default = 8
+    gap = b1.padding_overhead - 1.0
+    rec4 = (b1.padding_overhead - b4.padding_overhead) / gap
+    rec8 = (b1.padding_overhead - b8.padding_overhead) / gap
+    return (f"tap_bins,{P}x{Q}x3x3,conn0.5", 0.0,
+            f"bin8_speedup={b4.padding_overhead / b8.padding_overhead:.3f}x;"
+            f"overhead_1bin={b1.padding_overhead:.3f};"
+            f"overhead_4bin={b4.padding_overhead:.3f};"
+            f"overhead_8bin={b8.padding_overhead:.3f};"
+            f"gap_recovered_4bin={rec4:.2f};gap_recovered_8bin={rec8:.2f}")
 
 
 def bench(fast=True):
@@ -125,4 +265,12 @@ def bench(fast=True):
     rows.append(_pattern_row(128, 64, 3, 3, 1, 0.0))
     rows.append(_pattern_row(128, 64, 3, 3, 1, 0.5))
     rows.append(_pattern_row(128, 64, 5, 5, 2, 0.5))
+    # implicit-GEMM vs materialized at serving-scale shapes: the VGG-scale
+    # 3x3 block-punched layer and the MOBILE-style 5x5 pattern layer
+    rows.append(_implicit_row("VGG", 128, 64, 3, 3, 1, 56, 2,
+                              pattern=False, wall_feat=28 if fast else 56))
+    rows.append(_implicit_row("MOBILE", 128, 128, 5, 5, 1, 28, 2,
+                              pattern=True, wall_feat=14 if fast else 28))
+    # the raised tap-bin default, locked against the padding gap
+    rows.append(_bin_row())
     return rows

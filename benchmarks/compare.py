@@ -14,12 +14,18 @@ Gated metrics (parsed from each row's ``derived`` string):
     ``flops_skipped_eff``) — exact properties of the packed layout; any
     drop means the packing or reordering algorithm got worse.  Baselines
     below 0.05 are skipped (relative noise on ~zero).
+  * memory metrics (``*_mb``: peak working set, HBM bytes moved) — these
+    gate LOWER-is-better: deterministic byte accounting of the executed
+    path, so a fresh value above ``baseline * (1 + threshold)`` means a
+    code change started allocating/moving more (e.g. the implicit conv
+    path re-materializing its patch tensor).
 
-A metric regresses when ``fresh < baseline * (1 - threshold)`` (default
-threshold 10%, wall metrics 50%).  Rows or metrics present in the baseline
-but missing from the fresh run also fail — a silently dropped row is a
-lost metric, not a pass.  New rows/metrics are reported and ignored until
-the baselines are refreshed.
+A higher-better metric regresses when ``fresh < baseline * (1 -
+threshold)`` (default threshold 10%, wall metrics 50%); a ``*_mb`` metric
+when ``fresh > baseline * (1 + threshold)``.  Rows or metrics present in
+the baseline but missing from the fresh run also fail — a silently
+dropped row is a lost metric, not a pass.  New rows/metrics are reported
+and ignored until the baselines are refreshed.
 
 Workflow when a change legitimately shifts the numbers::
 
@@ -50,11 +56,17 @@ SPEEDUP_RE = re.compile(r"^([0-9.]+)x$")
 # wall-clock-derived ratios: gated at --wall-threshold, not --threshold
 WALL_KEYS = ("loop_speedup",)
 WALL_ROW_PREFIXES = ("pack_vectorized",)
+# lower-is-better byte metrics (deterministic accounting, no wall noise)
+MEMORY_SUFFIX = "_mb"
 
 
 def is_wall_metric(key):
     row, _, metric = key.rpartition(":")
     return metric in WALL_KEYS or row.startswith(WALL_ROW_PREFIXES)
+
+
+def is_memory_metric(key):
+    return key.rsplit(":", 1)[-1].endswith(MEMORY_SUFFIX)
 
 
 def metrics_from(payload):
@@ -66,7 +78,7 @@ def metrics_from(payload):
             ratio = SPEEDUP_RE.match(val)
             if "speedup" in key and ratio:
                 out[f"{row['name']}:{key}"] = float(ratio.group(1))
-            elif key in FRACTION_KEYS:
+            elif key in FRACTION_KEYS or key.endswith(MEMORY_SUFFIX):
                 out[f"{row['name']}:{key}"] = float(val)
     return out
 
@@ -90,7 +102,14 @@ def compare_one(name, base_path, fresh_path, threshold, wall_threshold):
         if is_fraction and b < FRACTION_FLOOR:
             continue
         allowed = wall_threshold if is_wall_metric(key) else threshold
-        if f < b * (1 - allowed):
+        if is_memory_metric(key):
+            if f > b * (1 + allowed):
+                failures.append(
+                    f"{name}: {key} grew {b:.2f} -> {f:.2f} MB "
+                    f"({(f / b - 1) * 100:.0f}% > {allowed * 100:.0f}% "
+                    "allowed; memory metrics gate lower-is-better)"
+                )
+        elif f < b * (1 - allowed):
             failures.append(
                 f"{name}: {key} regressed {b:.2f} -> {f:.2f} "
                 f"({(1 - f / b) * 100:.0f}% > {allowed * 100:.0f}% allowed)"

@@ -398,7 +398,7 @@ def pattern_lower(w, mask, *, group=1, n_bins=4, reorder=True):
     inv = np.empty(G, np.int32)
     inv[order] = np.arange(G, dtype=np.int32)
     cnt_sorted = cnt[order]
-    bin_values, bin_tidx = [], []
+    bin_values, bin_tidx, bin_kfull = [], [], []
     for s, e in bounds:
         Lb = max(1, int(cnt_sorted[s:e].max()) if e > s else 1)
         vals = np.zeros((e - s, Lb, group), w.dtype)
@@ -409,12 +409,43 @@ def pattern_lower(w, mask, *, group=1, n_bins=4, reorder=True):
             tidx[gi, :len(rows)] = rows
         bin_values.append(jnp.asarray(vals))
         bin_tidx.append(jnp.asarray(tidx))
+        # the implicit-GEMM aux: each slot's FULL-band row alive[t_idx]
+        # (tap*C + channel), from which the implicit kernel derives its
+        # (dy, dx, c) input offsets — padding slots point at alive[0] with
+        # zero values, so they gather a real pixel and multiply to nothing
+        bin_kfull.append(jnp.asarray(alive[tidx], jnp.int32))
     return TapLayout(values=tuple(bin_values), t_idx=tuple(bin_tidx),
+                     k_full=tuple(bin_kfull),
                      nnz=jnp.asarray(cnt_sorted, jnp.int32),
                      alive=jnp.asarray(alive, jnp.int32),
                      perm=jnp.asarray(order) if reorder else None,
                      inv_perm=jnp.asarray(inv) if reorder else None,
                      group=group, shape=(K, P))
+
+
+def conv_tap_table(kh, kw, c, bk):
+    """Static k-block -> (dy, dx, c0) offset table for implicit-GEMM conv.
+
+    The im2col-lowered weight's row r = (dy*Kw + dx)*C + c reads input
+    channel c at kernel tap (dy, dx) (``conv_lower`` row order).  Because a
+    conv packing block is (bk, bn) = (bq, bp) with bq | Q (``conv_gemm_
+    block``), every K-block of ``bk`` consecutive rows lies inside ONE tap:
+    k-block ``kb`` covers channels [c0, c0+bk) of tap (dy, dx).  This table
+    is what lets ``kernels.bsr_matmul.bsr_conv2d_implicit`` gather its x
+    tile straight from the padded feature map — the patch tensor never
+    exists in HBM.  Returned as a hashable tuple of (dy, dx, c0) triples so
+    it can ride as static aux on ``core.packed.PackedLayout.conv_taps``.
+    """
+    assert c % bk == 0, (
+        f"implicit conv needs the packing block bk={bk} to divide "
+        f"Cin={c} so K-blocks never straddle kernel taps")
+    kb_n = kh * kw * c // bk
+    out = []
+    for kb in range(kb_n):
+        r0 = kb * bk
+        t = r0 // c
+        out.append((t // kw, t % kw, r0 % c))
+    return tuple(out)
 
 
 def conv_gemm_block(kernel_block, conv_shape):

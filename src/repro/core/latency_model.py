@@ -71,9 +71,26 @@ def pattern_executed_frac(connectivity=0.0, taps=4, positions=9) -> float:
     return taps / positions * (1.0 - connectivity)
 
 
+def im2col_x_frac(taps, implicit=True) -> float:
+    """Activation-traffic multiplier on a conv-as-GEMM's x bytes (M*K).
+
+    The memory-traffic term the mappers price the implicit path with: a
+    conv lowered to an im2col GEMM nominally reads M*K activation bytes —
+    a ``taps`` = Kh*Kw blow-up of the feature map.  The implicit-GEMM
+    kernels (``kernels.bsr_matmul.bsr_conv2d_implicit`` /
+    ``tap_gather_conv_implicit``) read the padded feature map once instead
+    (frac 1/taps, the halo ignored as second-order); the MATERIALIZED path
+    additionally writes the patch tensor to HBM and reads it back on top
+    of the original feature-map read (2 + 1/taps).  FLOPs are identical —
+    only DRAM bytes move, which is exactly what decides the conv layers
+    of a memory-bound mobile/real-time deployment."""
+    taps = max(1, int(taps))
+    return 1.0 / taps if implicit else 2.0 + 1.0 / taps
+
+
 def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
                    compression=1.0, target: TPUTarget = V5E,
-                   dtype_bytes=2, executed_frac=None) -> float:
+                   dtype_bytes=2, executed_frac=None, x_frac=None) -> float:
     """One FC/CONV-as-GEMM layer: y(M,N) = x(M,K) @ w(K,N) with the given
     pruning scheme at `compression` (param reduction factor).
 
@@ -81,7 +98,14 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
     MACs the kernel actually executes under its padded layout (pattern
     scheme: measured tap savings from a ``core.packed.TapLayout``) — the
     executed-cost hook the mappers use so a pattern pick is ranked by what
-    the tap-gather kernel runs, not by raw mask density."""
+    the tap-gather kernel runs, not by raw mask density.
+
+    ``x_frac`` scales the activation DRAM bytes (memory-traffic term) for
+    conv-as-GEMM layers: pass ``im2col_x_frac(kh*kw)`` to price the
+    implicit-GEMM path (feature map read once, no patch tensor) or
+    ``im2col_x_frac(kh*kw, implicit=False)`` for the materialized patch
+    write+read.  None (the default) keeps the plain GEMM accounting (and,
+    on the pattern branch, the legacy alive-band estimate)."""
     density = 1.0 / max(compression, 1.0)
     dense_flops = 2.0 * M * K * N
     x_b = M * K * dtype_bytes
@@ -90,7 +114,8 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
 
     if scheme == "none":
         t_c = dense_flops / target.peak_flops
-        t_m = (x_b + y_b + w_dense_b) / target.hbm_bw
+        t_m = (x_b * (1.0 if x_frac is None else x_frac)
+               + y_b + w_dense_b) / target.hbm_bw
         steps = max(1, (M // target.mxu) * (N // target.mxu))
         return max(t_c, t_m) + steps * target.step_overhead
 
@@ -121,7 +146,11 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
         frac = executed_frac if executed_frac is not None else density
         t_c = frac * dense_flops / (target.peak_flops * target.vpu_frac)
         w_b = frac * K * N * (dtype_bytes + 4)
-        t_m = (x_b * min(1.0, 9 * frac) + y_b + w_b) / target.hbm_bw
+        # activation traffic: explicit x_frac (implicit kernel reads the
+        # feature map, materialized pays the patch round-trip); the legacy
+        # default approximates the alive-band read of the gathered path
+        x_eff = x_frac if x_frac is not None else min(1.0, 9 * frac)
+        t_m = (x_b * x_eff + y_b + w_b) / target.hbm_bw
         steps = max(1.0, max(1, M // 512) * N)
         return max(t_c, t_m) + steps * target.step_overhead
 
@@ -134,7 +163,8 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
     t_c = eff_flops / (target.peak_flops * util)
     idx_b = 4 * n_blocks_alive + 4 * (K // bk)
     w_b = density * w_dense_b + idx_b
-    t_m = (x_b + y_b + w_b) / target.hbm_bw
+    t_m = (x_b * (1.0 if x_frac is None else x_frac)
+           + y_b + w_b) / target.hbm_bw
     # grid steps at the autotuned M-tile (512): each M-tile revisits every
     # surviving weight block (kernels/bsr_matmul.py grid structure)
     steps = max(1.0, n_blocks_alive * max(1, M // 512))

@@ -16,8 +16,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import ArchConfig
-from repro.core.latency_model import (TPUTarget, V5E, matmul_latency,
-                                      pattern_executed_frac,
+from repro.core.latency_model import (TPUTarget, V5E, im2col_x_frac,
+                                      matmul_latency, pattern_executed_frac,
                                       structured_baseline, conv_as_gemm)
 from repro.core.regularity import legal_blocks
 from repro.core.reweighted import SchemeChoice
@@ -31,6 +31,10 @@ class LayerDesc:
     K: int
     N: int
     count: int = 1       # layers sharing this desc (scanned stacks)
+    taps: int = 0        # Kh*Kw for conv-as-GEMM layers (0 = plain GEMM):
+                         # prices activation traffic at the implicit-GEMM
+                         # path's feature-map read (im2col_x_frac) instead
+                         # of the full M*K patch bytes
 
 
 def lm_layers(cfg: ArchConfig, tokens: int) -> list[LayerDesc]:
@@ -83,25 +87,28 @@ def conv_layers(specs) -> list[LayerDesc]:
         kind = "dw" if dw else (
             "conv3x3" if (kh, kw) == (3, 3) else
             "conv1x1" if (kh, kw) == (1, 1) else "convkxk")
-        out.append(LayerDesc(name, kind, M, K, N))
+        out.append(LayerDesc(name, kind, M, K, N, taps=0 if dw else kh * kw))
     return out
 
 
 def select_block_size(M, K, N, compression, beta, target: TPUTarget = V5E,
-                      menu=None):
-    """§5.2.2: smallest block within (1+beta) of structured latency."""
+                      menu=None, x_frac=None):
+    """§5.2.2: smallest block within (1+beta) of structured latency.
+    ``x_frac`` forwards the conv activation-traffic multiplier (the
+    implicit-GEMM feature-map read) into the block pricing."""
     base = structured_baseline(M, K, N, compression, target)
     cands = legal_blocks(K, N) if menu is None else \
         [b for b in menu if K % b[0] == 0 and N % b[1] == 0]
     cands = sorted(cands, key=lambda b: b[0] * b[1])
     for b in cands:
         t = matmul_latency(M, K, N, scheme="block", block=b,
-                           compression=compression, target=target)
+                           compression=compression, target=target,
+                           x_frac=x_frac)
         if t <= (1 + beta) * base:
             return b, t, base
     b = cands[-1] if cands else (min(K, 128), min(N, 128))
     t = matmul_latency(M, K, N, scheme="block", block=b,
-                       compression=compression, target=target)
+                       compression=compression, target=target, x_frac=x_frac)
     return b, t, base
 
 
@@ -114,6 +121,10 @@ def map_rules(layers: list[LayerDesc], *, dataset_hard=True, beta=0.2,
             choice = SchemeChoice("none")
             t = t_base = 0.0
         elif ld.kind == "conv3x3":
+            # conv-as-GEMM activation traffic is priced at the implicit
+            # kernels' feature-map read (DRAM bytes, not MACs) — the
+            # serving path never materializes the M*K patch tensor
+            xf = im2col_x_frac(ld.taps or 9)
             if dataset_hard:
                 conn = 1 - 4 / 9 / 1.0
                 choice = SchemeChoice("pattern", connectivity=conn)
@@ -123,17 +134,20 @@ def map_rules(layers: list[LayerDesc], *, dataset_hard=True, beta=0.2,
                 frac = pattern_executed_frac(conn)
                 t = matmul_latency(ld.M, ld.K, ld.N, scheme="pattern",
                                    compression=1 / frac, target=target,
-                                   executed_frac=frac)
+                                   executed_frac=frac, x_frac=xf)
                 t_base = structured_baseline(ld.M, ld.K, ld.N, 1 / frac,
                                              target)
             else:
                 b, t, t_base = select_block_size(ld.M, ld.K, ld.N,
-                                                 compression, beta, target)
+                                                 compression, beta, target,
+                                                 x_frac=xf)
                 choice = SchemeChoice("block_punched", block=b)
         elif ld.kind in ("fc", "conv1x1", "convkxk"):
+            xf = im2col_x_frac(ld.taps) if ld.taps > 1 else None
             b, t, t_base = select_block_size(ld.M, ld.K, ld.N, compression,
-                                             beta, target)
-            t_dense = matmul_latency(ld.M, ld.K, ld.N, target=target)
+                                             beta, target, x_frac=xf)
+            t_dense = matmul_latency(ld.M, ld.K, ld.N, target=target,
+                                     x_frac=xf)
             if t > t_dense:
                 # pruning would SLOW this layer (MXU-unfriendly dims, e.g.
                 # mamba2's 8512-wide in_proj): map no scheme — latency is

@@ -15,7 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.latency_model import (V5E, matmul_latency,
+from repro.core.latency_model import (V5E, im2col_x_frac, matmul_latency,
                                       pattern_executed_frac)
 from repro.core.mapper_rule import LayerDesc
 from repro.core.reweighted import SchemeChoice
@@ -128,10 +128,15 @@ def actions_to_spec(layers, a_s, a_b, rate=None) -> list:
 def mapping_latency(layers, a_s, a_b, compression=8.0, target=V5E) -> float:
     """Modeled total latency of a sampled mapping — the reward's latency
     term.  Pattern picks are priced at the tap-gather kernel's executed-tap
-    fraction (``pattern_executed_frac``), not raw mask density."""
+    fraction (``pattern_executed_frac``), not raw mask density, and
+    conv-as-GEMM layers (``LayerDesc.taps`` > 1) at the implicit-GEMM
+    path's activation traffic (feature map read once — ``im2col_x_frac``),
+    not the never-materialized M*K patch bytes."""
     t = 0.0
     for ld, s, b in zip(layers, np.asarray(a_s), np.asarray(a_b)):
         scheme = SCHEME_MENU[int(s)]
+        taps = getattr(ld, "taps", 0)
+        xf = im2col_x_frac(taps) if taps > 1 else None
         frac = None
         if scheme == "none":
             comp = 1.0
@@ -142,7 +147,7 @@ def mapping_latency(layers, a_s, a_b, compression=8.0, target=V5E) -> float:
             comp = compression
         t += ld.count * matmul_latency(
             ld.M, ld.K, ld.N, scheme=scheme, block=BLOCK_MENU[int(b)],
-            compression=comp, target=target, executed_frac=frac)
+            compression=comp, target=target, executed_frac=frac, x_frac=xf)
     return t
 
 

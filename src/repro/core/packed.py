@@ -62,6 +62,12 @@ class PackedLayout:
     Static aux data (hashable; part of the jit cache key):
       block : (bk, bn)
       shape : (K, N) of one dense weight slice
+      conv_taps : None for plain GEMM layouts; for im2col-lowered conv
+                  layouts, a tuple of (dy, dx, c0) per K-block (built by
+                  ``core.bcs.conv_tap_table`` at pack time) — the static
+                  offset table ``kernels.bsr_matmul.bsr_conv2d_implicit``
+                  uses to gather its x tile straight from the padded
+                  feature map instead of a materialized patch tensor.
 
     Padding slots (column degree below the bin max) carry ``k_idx`` 0 and
     all-zero values, so they multiply to nothing; ``nnz`` records the true
@@ -75,6 +81,7 @@ class PackedLayout:
     inv_perm: object = None
     block: tuple = (128, 128)
     shape: tuple = (0, 0)
+    conv_taps: tuple = None
 
     # -- pytree protocol -----------------------------------------------------
 
@@ -82,15 +89,16 @@ class PackedLayout:
         """Flatten into (array leaves, static aux) for jax pytree traversal."""
         children = (self.values, self.k_idx, self.nnz, self.perm,
                     self.inv_perm)
-        return children, (self.block, self.shape)
+        return children, (self.block, self.shape, self.conv_taps)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
         values, k_idx, nnz, perm, inv_perm = children
-        block, shape = aux
+        block, shape, conv_taps = aux
         return cls(values=values, k_idx=k_idx, nnz=nnz, perm=perm,
-                   inv_perm=inv_perm, block=block, shape=shape)
+                   inv_perm=inv_perm, block=block, shape=shape,
+                   conv_taps=conv_taps)
 
     # -- static geometry (no device sync) ------------------------------------
 
@@ -241,6 +249,13 @@ class TapLayout:
       t_idx    : tuple of per-bin arrays (G_b, L_b) int32 — tap slot ->
                  row of the ALIVE band (position in ``alive``, not the full
                  K-row band); padding slots point at row 0 with zero values
+      k_full   : tuple of per-bin arrays (G_b, L_b) int32 — tap slot ->
+                 row of the FULL im2col band (``alive[t_idx]``, i.e.
+                 tap*C + channel), precomputed at pack time; the implicit
+                 kernel (``tap_gather_conv_implicit``) decomposes it into
+                 (dy, dx, c) input offsets so taps gather straight from the
+                 padded feature map.  None on legacy layouts (reconstructed
+                 on the fly from ``alive``/``t_idx``).
       nnz      : (G,) int32 true tap-degree per group, in LAYOUT order
       alive    : (R,) int32 rows of the full im2col band live for at least
                  one group — the host-side gather that builds the kernel's
@@ -268,22 +283,24 @@ class TapLayout:
     inv_perm: object = None
     group: int = 1
     shape: tuple = (0, 0)
+    k_full: tuple = None
 
     # -- pytree protocol -----------------------------------------------------
 
     def tree_flatten(self):
         """Flatten into (array leaves, static aux) for jax pytree traversal."""
         children = (self.values, self.t_idx, self.nnz, self.alive,
-                    self.perm, self.inv_perm)
+                    self.perm, self.inv_perm, self.k_full)
         return children, (self.group, self.shape)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
-        values, t_idx, nnz, alive, perm, inv_perm = children
+        values, t_idx, nnz, alive, perm, inv_perm, k_full = children
         group, shape = aux
         return cls(values=values, t_idx=t_idx, nnz=nnz, alive=alive,
-                   perm=perm, inv_perm=inv_perm, group=group, shape=shape)
+                   perm=perm, inv_perm=inv_perm, group=group, shape=shape,
+                   k_full=k_full)
 
     # -- static geometry (no device sync) ------------------------------------
 
@@ -382,6 +399,15 @@ class TapLayout:
             out.append(pb[start:start + s].reshape(-1))
             start += s
         return tuple(out)
+
+    def bin_k_full(self):
+        """Per-bin (G_b, L_b) FULL-band row ids (tap*C + channel) for the
+        implicit kernel — the precomputed ``k_full`` when present, else
+        reconstructed as ``alive[t_idx]`` (trace-safe gather) on legacy
+        layouts packed before the aux existed."""
+        if self.k_full is not None:
+            return self.k_full
+        return tuple(jnp.take(self.alive, t, axis=0) for t in self.t_idx)
 
     def to_dense(self):
         """Reconstruct the dense lowered (K, P) weight — the round-trip

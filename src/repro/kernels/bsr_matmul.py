@@ -35,15 +35,29 @@ step per surviving BLOCK, per-kernel pattern masks have no block
 structure, so that grid shape would cost one step per scalar tap; the tap
 kernel instead keeps the alive im2col band VMEM-resident and gathers each
 output filter's surviving taps in one (M tile, filter group) step.
+
+``bsr_conv2d_implicit`` / ``tap_gather_conv_implicit`` are the
+implicit-GEMM conv variants of both: instead of consuming a pre-extracted
+``(B*Ho*Wo, Kh*Kw*C)`` patch matrix (a ~Kh*Kw-fold HBM blow-up of the
+activations), the grid grows a batch dimension, the x BlockSpec index_map
+selects the current image of the PADDED feature map (revisited across the
+block/tap steps, so it is fetched once per image), and each step gathers
+the rows it needs in-kernel from a tap -> (dy, dx, c) offset table riding
+in SMEM — the patch tensor never exists in HBM.  Same fp32 accumulation,
+degree-bin launches, and fused bias/act epilogues as the materialized
+kernels, which stay as the parity oracle.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bcs as BCS
 
 
 def _kernel(k_idx, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act):
@@ -69,8 +83,40 @@ def _kernel(k_idx, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act):
 
 
 def _auto_interpret() -> bool:
-    """Run the kernel body in interpret mode unless we are on real TPU."""
+    """Run the kernel body in interpret mode unless we are on real TPU.
+
+    The ``PALLAS_INTERPRET`` env var overrides the auto-detection in both
+    directions ("1"/"true" forces the interpreter, "0"/"false" forces real
+    Mosaic lowering) so a TPU CI job can pin either mode explicitly."""
+    env = os.environ.get("PALLAS_INTERPRET", "").strip().lower()
+    if env:
+        return env not in ("0", "false", "no")
     return jax.default_backend() != "tpu"
+
+
+def _same_pads(size, k, s):
+    """XLA 'SAME' padding for one spatial dim: output ceil(size/s)."""
+    out = -(-size // s)
+    pad = max((out - 1) * s + k - size, 0)
+    return pad // 2, pad - pad // 2
+
+
+def conv_geometry(H, W, kh, kw, stride=1, padding="SAME"):
+    """Conv output/padding geometry shared by ``kernels.ops.im2col`` and
+    the implicit kernels: ((ph0, ph1), (pw0, pw1), Ho, Wo)."""
+    if padding == "SAME":
+        ph, pw = _same_pads(H, kh, stride), _same_pads(W, kw, stride)
+    elif padding == "VALID":
+        ph = pw = (0, 0)
+    else:
+        raise ValueError(padding)
+    Ho = (H + ph[0] + ph[1] - kh) // stride + 1
+    Wo = (W + pw[0] + pw[1] - kw) // stride + 1
+    if Ho < 1 or Wo < 1:
+        raise ValueError(
+            f"kernel ({kh}, {kw}) does not fit the ({H}, {W}) feature map "
+            f"under {padding} padding (output would be {Ho}x{Wo})")
+    return ph, pw, Ho, Wo
 
 
 def _m_tile(M, bm, dtype):
@@ -259,3 +305,249 @@ def tap_gather_conv_packed(x, layout, bias=None, *, bm=128, act="none",
                                     out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     return layout.unpermute_cols(y)
+
+
+# ---------------------------------------------------------------------------
+# Implicit-GEMM conv kernels: im2col folded into the grid — the patch
+# tensor (B*Ho*Wo, Kh*Kw*C) is never materialized in HBM.
+# ---------------------------------------------------------------------------
+
+def _out_positions(i, bm, geom):
+    """In-kernel output-position decode for M tile ``i``: the (bm, 1)
+    top-left input offsets (row index into the padded, flattened image) of
+    this tile's output positions.  M-pad rows clamp to the last valid
+    position — their gathers read a real pixel and are sliced off after the
+    launch."""
+    _, Wp, Ho, Wo, s = geom
+    m = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    m = jnp.minimum(m, Ho * Wo - 1)
+    return (m // Wo) * (s * Wp) + (m % Wo) * s
+
+
+def _conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act,
+                 geom):
+    """Implicit BCS conv step: the x tile (bm, bk) is gathered from the
+    VMEM-resident padded image — slot (j, l)'s SMEM entry carries this
+    K-block's (dy*Wp + dx, c0) offsets, so the gather lands on input
+    channel slice [c0, c0+bk) at kernel tap (dy, dx) for each of the tile's
+    bm output positions.  Accumulation/epilogue mirror ``_kernel``."""
+    i, j, l = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm, _ = acc_ref.shape
+    bk = w_ref.shape[2]
+    C = x_ref.shape[2]
+    rows = _out_positions(i, bm, geom) + tap_ref[j, l, 0]        # (bm, 1)
+    cols = tap_ref[j, l, 1] + jax.lax.broadcasted_iota(jnp.int32, (bm, bk),
+                                                       1)
+    g = jnp.take(x_ref[...].reshape(-1), rows * C + cols, axis=0)
+    acc_ref[...] += jnp.dot(g, w_ref[0, 0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(l == n_l - 1)
+    def _store():
+        out = acc_ref[...]
+        if b_ref is not None:
+            out = out + b_ref[0].astype(jnp.float32)
+        if act == "silu":
+            out = out * jax.nn.sigmoid(out)
+        elif act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "bm", "act",
+                                             "interpret", "out_dtype"))
+def _conv_implicit_bin(xp, values, taps, bias=None, *, geom, bm=128,
+                       act="none", interpret=None, out_dtype=None):
+    """One degree bin of the implicit BCS conv: xp (B, Hp*Wp, C) padded
+    flattened images, values (Nb, L, bk, bn), taps (Nb, L, 2) int32 per-slot
+    (dy*Wp + dx, c0) offsets (scalar-prefetched).  Grid (B, M/bm, Nb, L):
+    the x BlockSpec pins the whole current image in VMEM (index depends on
+    b only, so it is fetched once per image, not per block step) and each
+    step gathers its (bm, bk) tile in-kernel — no patch tensor, no HBM
+    re-read per block."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    Hp, Wp, Ho, Wo, _ = geom
+    B, _, C = xp.shape
+    Nb, L, bk, bn = values.shape
+    N = Nb * bn
+    bm, Mp = _m_tile(Ho * Wo, bm, xp.dtype)
+    out_dtype = out_dtype or xp.dtype
+
+    grid = (B, Mp // bm, Nb, L)
+    in_specs = [
+        pl.BlockSpec((1, Hp * Wp, C), lambda b, i, j, l, taps: (b, 0, 0)),
+        pl.BlockSpec((1, 1, bk, bn), lambda b, i, j, l, taps: (j, l, 0, 0)),
+    ]
+    args = [xp, values]
+    if bias is not None:
+        in_specs.append(
+            pl.BlockSpec((1, bn), lambda b, i, j, l, taps: (0, j)))
+        args.append(bias.reshape(1, N))
+        kern = functools.partial(_conv_kernel, n_l=L, act=act, geom=geom)
+    else:
+        def kern(tap_ref, x_ref, w_ref, o_ref, acc_ref):
+            _conv_kernel(tap_ref, x_ref, w_ref, None, o_ref, acc_ref,
+                         n_l=L, act=act, geom=geom)
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bm, bn),
+                                   lambda b, i, j, l, taps: (b, i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Mp, N), out_dtype),
+        interpret=interpret,
+    )(taps, *args)
+
+
+def bsr_conv2d_implicit(x, layout, *, kh, kw, stride=1, padding="SAME",
+                        bias=None, bm=128, act="none", interpret=None,
+                        out_dtype=None):
+    """x (B, H, W, C) * im2col-lowered PackedLayout -> (B, Ho, Wo, N),
+    without ever materializing the patch tensor.
+
+    The implicit mirror of ``bsr_matmul_packed`` over extracted patches:
+    one ``_conv_implicit_bin`` launch per degree bin, bias + activation
+    fused per bin, outputs gathered back to original filter order.  HBM
+    holds only the zero-padded feature map (the halo copy, ~activation
+    sized) instead of the Kh*Kw-fold patch blow-up; the kernel derives each
+    K-block's input offsets from the layout's static ``conv_taps`` table
+    (``core.bcs.conv_tap_table``, attached at pack time — derived on the
+    fly for layouts packed without it).  Bit-identical to the materialized
+    path: the gathered tiles equal the im2col rows, and per-column
+    accumulation order is untouched."""
+    B, H, W, C = x.shape
+    assert layout.shape[0] == kh * kw * C, (
+        f"layout K={layout.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    taps = layout.conv_taps or BCS.conv_tap_table(kh, kw, C,
+                                                  layout.block[0])
+    ph, pw, Ho, Wo = conv_geometry(H, W, kh, kw, stride, padding)
+    Hp, Wp = H + ph[0] + ph[1], W + pw[0] + pw[1]
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0))).reshape(B, Hp * Wp, C)
+    off_t = jnp.asarray([dy * Wp + dx for dy, dx, _ in taps], jnp.int32)
+    c0_t = jnp.asarray([c0 for _, _, c0 in taps], jnp.int32)
+    geom = (Hp, Wp, Ho, Wo, stride)
+    outs = []
+    for vals_b, kidx_b, bias_b in zip(layout.values, layout.k_idx,
+                                      layout.bin_bias(bias)):
+        slot = jnp.stack([jnp.take(off_t, kidx_b),
+                          jnp.take(c0_t, kidx_b)], axis=-1)
+        outs.append(_conv_implicit_bin(xp, vals_b, slot, bias=bias_b,
+                                       geom=geom, bm=bm, act=act,
+                                       interpret=interpret,
+                                       out_dtype=out_dtype))
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+    y = layout.unpermute_cols(y)
+    return y[:, :Ho * Wo].reshape(B, Ho, Wo, y.shape[-1])
+
+
+def _tap_conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, *, act, geom):
+    """Implicit tap-gather step: like ``_tap_kernel`` but the (bm, L) tap
+    matrix is gathered straight from the VMEM-resident padded image —
+    group j's SMEM row carries each tap slot's (dy*Wp + dx, c) offsets, so
+    the alive im2col band is never built on the host either."""
+    i, j = pl.program_id(1), pl.program_id(2)
+    bm = o_ref.shape[1]
+    C = x_ref.shape[2]
+    base = _out_positions(i, bm, geom)                           # (bm, 1)
+    flat = (base + tap_ref[j, :, 0][None, :]) * C + tap_ref[j, :, 1][None, :]
+    g = jnp.take(x_ref[...].reshape(-1), flat, axis=0)           # (bm, L)
+    out = jnp.dot(g, w_ref[0], preferred_element_type=jnp.float32)
+    if b_ref is not None:
+        out = out + b_ref[0].astype(jnp.float32)
+    if act == "silu":
+        out = out * jax.nn.sigmoid(out)
+    elif act == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "bm", "act",
+                                             "interpret", "out_dtype"))
+def _tap_implicit_bin(xp, values, taps, bias=None, *, geom, bm=128,
+                      act="none", interpret=None, out_dtype=None):
+    """One degree bin of the implicit tap-gather conv: xp (B, Hp*Wp, C),
+    values (G, L, group), taps (G, L, 2) int32 per-slot (dy*Wp + dx, c)
+    offsets.  Grid (B, M/bm, G), no cross-step accumulator — epilogue fused
+    into the single step, exactly like ``tap_gather_conv``."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    Hp, Wp, Ho, Wo, _ = geom
+    B, _, C = xp.shape
+    G, L, gp = values.shape
+    N = G * gp
+    bm, Mp = _m_tile(Ho * Wo, bm, xp.dtype)
+    out_dtype = out_dtype or xp.dtype
+
+    grid = (B, Mp // bm, G)
+    in_specs = [
+        pl.BlockSpec((1, Hp * Wp, C), lambda b, i, j, taps: (b, 0, 0)),
+        pl.BlockSpec((1, L, gp), lambda b, i, j, taps: (j, 0, 0)),
+    ]
+    args = [xp, values]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, gp), lambda b, i, j, taps: (0, j)))
+        args.append(bias.reshape(1, N))
+        kern = functools.partial(_tap_conv_kernel, act=act, geom=geom)
+    else:
+        def kern(tap_ref, x_ref, w_ref, o_ref):
+            _tap_conv_kernel(tap_ref, x_ref, w_ref, None, o_ref, act=act,
+                             geom=geom)
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bm, gp),
+                                   lambda b, i, j, taps: (b, i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Mp, N), out_dtype),
+        interpret=interpret,
+    )(taps, *args)
+
+
+def tap_gather_conv_implicit(x, layout, *, kh, kw, stride=1, padding="SAME",
+                             bias=None, bm=128, act="none", interpret=None,
+                             out_dtype=None):
+    """x (B, H, W, C) * TapLayout -> (B, Ho, Wo, P) implicit tap-gather:
+    neither the patch tensor NOR the alive band is materialized in HBM.
+
+    The implicit mirror of ``tap_gather_conv_packed``: one launch per
+    degree bin, each filter group gathering its surviving taps straight
+    from the padded feature map via the layout's ``k_full`` full-band row
+    ids (``alive[t_idx]``, precomputed at pack time by
+    ``core.bcs.pattern_lower``; reconstructed on the fly for legacy
+    layouts).  Padding slots point at alive[0] with zero values, so they
+    gather a real pixel and contribute nothing."""
+    B, H, W, C = x.shape
+    assert layout.shape[0] == kh * kw * C, (
+        f"layout K={layout.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    ph, pw, Ho, Wo = conv_geometry(H, W, kh, kw, stride, padding)
+    Hp, Wp = H + ph[0] + ph[1], W + pw[0] + pw[1]
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0))).reshape(B, Hp * Wp, C)
+    geom = (Hp, Wp, Ho, Wo, stride)
+    outs = []
+    for vals_b, kf_b, bias_b in zip(layout.values, layout.bin_k_full(),
+                                    layout.bin_bias(bias)):
+        t = kf_b // C
+        slot = jnp.stack([(t // kw) * Wp + t % kw, kf_b % C],
+                         axis=-1).astype(jnp.int32)
+        outs.append(_tap_implicit_bin(xp, vals_b, slot, bias=bias_b,
+                                      geom=geom, bm=bm, act=act,
+                                      interpret=interpret,
+                                      out_dtype=out_dtype))
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+    y = layout.unpermute_cols(y)
+    return y[:, :Ho * Wo].reshape(B, Ho, Wo, y.shape[-1])

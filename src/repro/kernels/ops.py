@@ -27,6 +27,17 @@ output filter multiplies ONLY its surviving taps, so 4-of-9 pattern masks
 and connectivity-pruned kernels execute sparsely instead of falling back
 to masked-dense.
 
+Both conv consumers take ``implicit=`` (default None = auto): the implicit
+mode skips the patch extraction entirely and runs the implicit-GEMM
+kernels (``bsr_conv2d_implicit`` / ``tap_gather_conv_implicit``), which
+gather input rows inside the kernel — the ``B*Ho*Wo*Kh*Kw*C`` patch tensor
+never exists in HBM.  Auto-selection is by patch-tensor size: implicit
+when the patch would be a real blow-up (kh*kw > 1) at least
+``_IMPLICIT_MIN_PATCH_BYTES`` big (and, for the BCS path, the packing
+block never straddles kernel taps, i.e. bk | Cin).  The materialized path
+stays the parity oracle — the two are bit-identical for the BCS path and
+fp32-close for taps.
+
 ``pack`` / ``pack_taps`` are the host-side codegen steps: they convert a
 pruned weight into a ``core.packed.PackedLayout`` (block schemes) or
 ``core.packed.TapLayout`` (pattern schemes) — the two interchange formats
@@ -42,6 +53,7 @@ LRU under both a count and a byte bound.  Cached layouts are frozen — the
 same instance is handed to every caller."""
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 from collections import OrderedDict
 
@@ -51,8 +63,20 @@ import jax.numpy as jnp
 
 from repro.core import bcs as BCS
 from repro.core.packed import PackedLayout
-from repro.kernels.bsr_matmul import bsr_matmul_packed, tap_gather_conv_packed
+from repro.kernels.bsr_matmul import (bsr_conv2d_implicit, bsr_matmul_packed,
+                                      conv_geometry, tap_gather_conv_implicit,
+                                      tap_gather_conv_packed)
 from repro.kernels import ref
+
+# auto-selection floor for the implicit-GEMM conv mode: below this the
+# patch tensor is too small for its HBM blow-up to matter and the
+# materialized path's plain strided slices win on launch simplicity
+_IMPLICIT_MIN_PATCH_BYTES = 1 << 20
+# auto-selection ceiling: the implicit kernels pin one whole padded image
+# in VMEM (x BlockSpec (1, Hp*Wp, C)), so auto never picks them when that
+# block would not comfortably fit the ~16 MiB of a v5e core — explicit
+# implicit=True can still force it (e.g. in interpret mode)
+_IMPLICIT_MAX_IMAGE_BYTES = 8 << 20
 
 _PACK_CACHE: OrderedDict = OrderedDict()
 _PACK_CACHE_MAX = 256
@@ -67,10 +91,10 @@ def _entry_bytes(layout: PackedLayout) -> int:
 
 
 def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins,
-            kind="bcs") -> str:
+            kind="bcs", conv=None) -> str:
     h = hashlib.blake2b(digest_size=16)
     h.update(str((kind, w.shape, str(w.dtype), block, bool(reorder),
-                  int(n_bins))).encode())
+                  int(n_bins), conv)).encode())
     h.update(np.ascontiguousarray(w).tobytes())
     h.update(np.ascontiguousarray(mask).tobytes())
     return h.hexdigest()
@@ -86,7 +110,7 @@ def _cache_put(key, out):
         total -= _entry_bytes(evicted)
 
 
-def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4,
+def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
          use_cache=True) -> PackedLayout:
     """Host-side packing of a pruned weight into the kernel layout.
 
@@ -94,11 +118,15 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4,
     degree-sorted and split into ``n_bins`` bins (see
     ``core.bcs.pack_csc_reordered``); without it the layout is a single bin
     in original column order, bit-identical to the historical uniform CSC
-    arrays.
+    arrays.  ``conv=(kh, kw, cin)`` marks an im2col-lowered conv weight:
+    the static K-block -> (dy, dx, c0) offset table
+    (``core.bcs.conv_tap_table``) is attached as ``conv_taps`` aux so the
+    implicit-GEMM kernel can gather from the feature map directly; the
+    geometry is part of the cache digest.
     """
     w = np.asarray(w)
     mask = np.asarray(mask)
-    key = (_digest(w, mask, tuple(block), reorder, n_bins)
+    key = (_digest(w, mask, tuple(block), reorder, n_bins, conv=conv)
            if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
@@ -109,21 +137,30 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4,
         values, k_idx, nnz, _ = BCS.pack_csc(w, mask, block)
         out = PackedLayout(values=(values,), k_idx=(k_idx,), nnz=nnz,
                            block=tuple(block), shape=tuple(w.shape))
+    if conv is not None:
+        kh, kw, cin = conv
+        out = dataclasses.replace(
+            out, conv_taps=BCS.conv_tap_table(kh, kw, cin, block[0]))
     if key is not None:
         _cache_put(key, out)
     return out
 
 
-def pack_taps(w, mask, *, group=1, reorder=True, n_bins=4,
+def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
               use_cache=True):
     """Host-side packing of a pattern/connectivity-pruned conv weight into
     the tap-gather layout.
 
     Returns a ``core.packed.TapLayout`` (see ``core.bcs.pattern_lower``):
     per-output-filter tap lists over the im2col band, degree-sorted into
-    ``n_bins`` bins when ``reorder`` is set.  Shares the pack cache (and
-    its cache-key contract — the layout kind is part of the digest, so a
-    TapLayout and a PackedLayout of the same weights never collide)."""
+    ``n_bins`` bins when ``reorder`` is set.  The default is 8 bins — on
+    connectivity-bearing tap layouts the per-filter degrees spread widely,
+    and the ROADMAP measurement shows 8 equal-size bins recover ~89% of
+    the 1-bin -> ideal padding gap where 4 recover ~75% (pure pattern
+    layouts have uniform degrees, so extra bins cost nothing).  Shares the
+    pack cache (and its cache-key contract — the layout kind is part of
+    the digest, so a TapLayout and a PackedLayout of the same weights
+    never collide)."""
     w = np.asarray(w)
     mask = np.asarray(mask)
     key = (_digest(w, mask, (1, int(group)), reorder, n_bins, kind="taps")
@@ -164,13 +201,6 @@ def sparse_linear(x, packed: PackedLayout | None = None, w=None, mask=None,
     return y.reshape(*lead, y.shape[-1])
 
 
-def _same_pads(size, k, s):
-    """XLA 'SAME' padding for one spatial dim: output ceil(size/s)."""
-    out = -(-size // s)
-    pad = max((out - 1) * s + k - size, 0)
-    return pad // 2, pad - pad // 2
-
-
 def im2col(x, kh, kw, stride=1, padding="SAME"):
     """x (B, H, W, C) -> patches (B, Ho, Wo, kh*kw*C).
 
@@ -178,16 +208,11 @@ def im2col(x, kh, kw, stride=1, padding="SAME"):
     reads input channel c at kernel tap (i, j) — the exact row order of
     ``core.bcs.conv_lower``, so ``patches.reshape(-1, kh*kw*C) @ lowered_w``
     is the convolution.  The taps are a tiny unrolled loop (<= kh*kw slices)
-    over one padded copy; XLA fuses the strided slices."""
+    over one padded copy; XLA fuses the strided slices.  This is the
+    MATERIALIZED path — it allocates the full ``B*Ho*Wo*kh*kw*C`` patch
+    tensor; the implicit kernels fold this gather into their grid instead."""
     B, H, W, C = x.shape
-    if padding == "SAME":
-        ph, pw = _same_pads(H, kh, stride), _same_pads(W, kw, stride)
-    elif padding == "VALID":
-        ph = pw = (0, 0)
-    else:
-        raise ValueError(padding)
-    Ho = (H + ph[0] + ph[1] - kh) // stride + 1
-    Wo = (W + pw[0] + pw[1] - kw) // stride + 1
+    ph, pw, Ho, Wo = conv_geometry(H, W, kh, kw, stride, padding)
     xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
     taps = [xp[:, i:i + stride * (Ho - 1) + 1:stride,
                j:j + stride * (Wo - 1) + 1:stride, :]
@@ -195,21 +220,65 @@ def im2col(x, kh, kw, stride=1, padding="SAME"):
     return jnp.concatenate(taps, axis=-1) if len(taps) > 1 else taps[0]
 
 
+def patch_bytes(x, kh, kw, stride=1, padding="SAME"):
+    """HBM bytes the MATERIALIZED im2col path allocates for its patch
+    tensor — what the implicit mode avoids (and what auto-selection and
+    the benches' peak-memory accounting are based on)."""
+    B, H, W, C = x.shape
+    _, _, Ho, Wo = conv_geometry(H, W, kh, kw, stride, padding)
+    return B * Ho * Wo * kh * kw * C * x.dtype.itemsize
+
+
+def _pick_implicit(implicit, x, kh, kw, stride, padding, bk=None):
+    """Resolve the ``implicit=`` tri-state: None auto-selects by
+    patch-tensor size — implicit when the patch is a real blow-up
+    (kh*kw > 1) of at least ``_IMPLICIT_MIN_PATCH_BYTES``, AND the padded
+    image block the kernel pins in VMEM stays under
+    ``_IMPLICIT_MAX_IMAGE_BYTES``.  The BCS path additionally needs its
+    packing block inside one tap (bk | Cin); an explicit
+    ``implicit=True`` asserts that instead of silently falling back."""
+    B, H, W, C = x.shape
+    if implicit is None:
+        if bk is not None and C % bk:
+            return False
+        ph, pw, _, _ = conv_geometry(H, W, kh, kw, stride, padding)
+        image_bytes = ((H + ph[0] + ph[1]) * (W + pw[0] + pw[1]) * C
+                       * x.dtype.itemsize)
+        return (kh * kw > 1
+                and image_bytes <= _IMPLICIT_MAX_IMAGE_BYTES
+                and patch_bytes(x, kh, kw, stride, padding)
+                >= _IMPLICIT_MIN_PATCH_BYTES)
+    if implicit and bk is not None:
+        assert C % bk == 0, (
+            f"implicit conv needs bk={bk} | Cin={C} (K-blocks must not "
+            f"straddle kernel taps)")
+    return bool(implicit)
+
+
 def sparse_conv2d(x, packed: PackedLayout, *, kh, kw, stride=1,
                   padding="SAME", bias=None, act="none", bm=128,
-                  interpret=None):
+                  interpret=None, implicit=None):
     """x (B, H, W, Cin) * packed conv weight -> (B, Ho, Wo, Cout).
 
     ``packed`` is the PackedLayout of the im2col-lowered (Kh*Kw*Q, P) conv
     weight (``serve.compile.compile_model`` on a block-punched conv layer).
-    The conv runs as ONE sparse GEMM over the extracted patches: pruned
-    kernel-position blocks are never read nor multiplied, and bias +
-    activation fuse into the kernel epilogue.  Depthwise convs are never
-    packed (compile_model skips them with a logged reason), so this path
-    only sees full convolutions."""
+    The conv runs as ONE sparse GEMM: pruned kernel-position blocks are
+    never read nor multiplied, and bias + activation fuse into the kernel
+    epilogue.  ``implicit`` picks the x-operand strategy (None = auto by
+    patch size, see ``_pick_implicit``): the materialized path extracts
+    the full im2col patch tensor first; the implicit path
+    (``bsr_conv2d_implicit``) gathers input rows inside the kernel and
+    never allocates it — bit-identical outputs either way.  Depthwise
+    convs are never packed (compile_model skips them with a logged
+    reason), so this path only sees full convolutions."""
     B, H, W, C = x.shape
     assert packed.shape[0] == kh * kw * C, (
         f"layout K={packed.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    if _pick_implicit(implicit, x, kh, kw, stride, padding,
+                      bk=packed.block[0]):
+        return bsr_conv2d_implicit(x, packed, kh=kh, kw=kw, stride=stride,
+                                   padding=padding, bias=bias, bm=bm,
+                                   act=act, interpret=interpret)
     patches = im2col(x, kh, kw, stride, padding)
     _, Ho, Wo, K = patches.shape
     y = bsr_matmul_packed(patches.reshape(B * Ho * Wo, K), packed,
@@ -218,21 +287,29 @@ def sparse_conv2d(x, packed: PackedLayout, *, kh, kw, stride=1,
 
 
 def sparse_conv2d_pattern(x, tap, *, kh, kw, stride=1, padding="SAME",
-                          bias=None, act="none", bm=128, interpret=None):
+                          bias=None, act="none", bm=128, interpret=None,
+                          implicit=None):
     """x (B, H, W, Cin) * tap-lowered conv weight -> (B, Ho, Wo, Cout).
 
     ``tap`` is the ``core.packed.TapLayout`` of a pattern/connectivity-
     pruned conv layer (``serve.compile.compile_model`` routes 4-D
-    ``pattern``-scheme masks here).  The conv runs as im2col + the Pallas
-    tap-gather kernel: the patch matrix is first gathered down to
-    ``tap.alive`` — rows (taps / whole input channels) pruned in EVERY
-    filter are never materialized — then each filter group contracts only
-    its own surviving taps (one launch per degree bin), with bias +
-    activation fused in the kernel step.  Bit-parity oracle: the masked
-    dense ``lax.conv`` kept in ``models.convnet``."""
+    ``pattern``-scheme masks here).  Materialized mode: im2col + the
+    Pallas tap-gather kernel — the patch matrix is first gathered down to
+    ``tap.alive`` (rows pruned in EVERY filter are never materialized),
+    then each filter group contracts only its own surviving taps (one
+    launch per degree bin), bias + activation fused in the kernel step.
+    Implicit mode (``implicit=True`` or auto by patch size): the
+    tap-gather runs straight off the padded feature map
+    (``tap_gather_conv_implicit``) — neither the patch tensor nor the
+    alive band is ever allocated.  Bit-parity oracle: the masked dense
+    ``lax.conv`` kept in ``models.convnet``."""
     B, H, W, C = x.shape
     assert tap.shape[0] == kh * kw * C, (
         f"layout K={tap.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    if _pick_implicit(implicit, x, kh, kw, stride, padding):
+        return tap_gather_conv_implicit(x, tap, kh=kh, kw=kw, stride=stride,
+                                        padding=padding, bias=bias, bm=bm,
+                                        act=act, interpret=interpret)
     patches = im2col(x, kh, kw, stride, padding)
     _, Ho, Wo, K = patches.shape
     band = patches.reshape(B * Ho * Wo, K)

@@ -61,8 +61,12 @@ def convnet_init(key, arch=VGG_TINY, in_ch=3, n_classes=10,
     return params
 
 
-def convnet_apply(params, x, arch=VGG_TINY, masks=None):
-    """x: (B, H, W, Cin) -> logits (B, n_classes)."""
+def convnet_apply(params, x, arch=VGG_TINY, masks=None, implicit=None):
+    """x: (B, H, W, Cin) -> logits (B, n_classes).
+
+    ``implicit`` routes packed conv layers through the implicit-GEMM
+    kernels (None = per-layer auto-selection by patch-tensor size, True /
+    False force one mode — see ``kernels.ops.sparse_conv2d``)."""
     m = masks or {}
     for (name, out, kh, kw, stride, dw) in arch:
         packed = params[name].get("packed")
@@ -72,7 +76,7 @@ def convnet_apply(params, x, arch=VGG_TINY, masks=None):
             conv = (ops.sparse_conv2d_pattern
                     if isinstance(packed, TapLayout) else ops.sparse_conv2d)
             x = conv(x, packed, kh=kh, kw=kw, stride=stride,
-                     bias=params[name]["b"], act="relu")
+                     bias=params[name]["b"], act="relu", implicit=implicit)
             continue
         w = params[name]["w"]
         mk = m.get(name)

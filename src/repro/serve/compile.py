@@ -34,6 +34,8 @@ per layer.  Packing itself is vectorized + content-cached (see
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -147,7 +149,7 @@ def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4):
 
 
 def compile_model(params, masks=None, mapping=(), *, block_override=None,
-                  keep_dense=True, min_saving=0.0, reorder=True, n_bins=4,
+                  keep_dense=True, min_saving=0.0, reorder=True, n_bins=None,
                   exclude=("router", "embed", "head")):
     """Pack every block-pruned linear/conv layer of ``params`` for sparse
     execution.  Returns (exec_params, report).
@@ -174,7 +176,10 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
     reorder  : degree-sort + bin block columns before padding (paper Fig 4
                row reordering) so L drops toward the mean degree; outputs
                stay bit-identical (see ``core.bcs.pack_csc_reordered``).
-    n_bins   : number of degree bins when reordering.
+    n_bins   : number of degree bins when reordering.  None (the default)
+               uses each producer's own default: 4 for block layouts, 8
+               for tap layouts (connectivity-bearing tap degrees spread
+               wider — see ``kernels.ops.pack_taps``).
     exclude  : path substrings never packed (router/embeddings per §5.2.4).
                MoE expert projections (gate/up/down) ARE packed — they
                dispatch through ``kernels.ops.sparse_expert_linear``.
@@ -185,6 +190,10 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
     reason, so the report doubles as the compile log.
     """
     report = []
+    # per-producer bin defaults (None = use each producer's own): block
+    # layouts 4, tap layouts 8 — see kernels.ops.pack_taps
+    gemm_bins = 4 if n_bins is None else n_bins
+    tap_bins = 8 if n_bins is None else n_bins
 
     def walk(p, m, path):
         if not isinstance(p, dict):
@@ -225,7 +234,8 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
             # executes through the tap-gather kernel — the scheme the
             # mapper picked for accuracy now runs sparsely instead of
             # silently falling back to masked-dense.
-            tap = ops.pack_taps(w, mask, reorder=reorder, n_bins=n_bins)
+            tap = ops.pack_taps(w, mask, reorder=reorder, n_bins=tap_bins)
+            P, Q, Kh, Kw = w.shape
             stats = {
                 "block": (1, tap.group), "shape": tap.shape,
                 "L": tap.L_max, "Kb": tap.shape[0],
@@ -235,6 +245,10 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
                 "density": tap.density,
                 "flops_saved": tap.flops_saved,
                 "layers": 1,
+                # implicit-GEMM accounting: patch bytes the materialized
+                # path would allocate PER OUTPUT POSITION (total = B*Ho*Wo
+                # of these), which the implicit tap kernel never touches
+                "patch_b_per_pos": Kh * Kw * Q * w.dtype.itemsize,
             }
             packed = tap
         elif kind == "conv":
@@ -245,16 +259,23 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
             gemm_block, why = BCS.conv_gemm_block(block, w.shape)
             if gemm_block is None:
                 return skip(why)
+            P, Q, Kh, Kw = w.shape
             wl = BCS.conv_lower(w)
             ml = BCS.conv_lower(np.broadcast_to(np.asarray(mask), w.shape))
             packed, stats = _pack_stacked(wl, ml, gemm_block,
-                                          reorder=reorder, n_bins=n_bins)
+                                          reorder=reorder, n_bins=gemm_bins)
+            # attach the static tap-offset table so the implicit-GEMM
+            # kernel can gather from the feature map without a patch tensor
+            packed = dataclasses.replace(
+                packed,
+                conv_taps=BCS.conv_tap_table(Kh, Kw, Q, gemm_block[0]))
+            stats["patch_b_per_pos"] = Kh * Kw * Q * w.dtype.itemsize
         else:
             K, N = w.shape[-2:]
             if K % block[0] or N % block[1]:
                 return skip(f"block {block} does not divide ({K}, {N})")
             packed, stats = _pack_stacked(w, mask, block, reorder=reorder,
-                                          n_bins=n_bins)
+                                          n_bins=gemm_bins)
         if stats["flops_saved"] <= min_saving:
             return skip(f"no effective saving (L={stats['L']} of "
                         f"Kb={stats['Kb']} column blocks survive)")
@@ -268,18 +289,23 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
 
 
 def compiled_summary(report) -> str:
-    """One-line-per-layer compile log, including the load-balance lever:
-    pre-reorder L -> post-reorder effective L and the gain."""
+    """One-line-per-layer compile log, including the load-balance lever
+    (pre-reorder L -> post-reorder effective L and the gain) and, for conv
+    layers, the im2col patch bytes per output position the implicit-GEMM
+    path avoids allocating (total avoided = B*Ho*Wo of these)."""
     lines = []
     for r in report:
         if r["packed"]:
-            lines.append(
+            line = (
                 f"  pack {r['path']:<28s} [{r.get('kind', 'linear')}] "
                 f"block={r['block']} "
                 f"density={r['density']:.2f} "
                 f"L={r['L']}->{r['L_reordered']}/{r['Kb']} "
                 f"(reorder_gain={r['reorder_gain']:.2f}x) "
                 f"flops_saved={r['flops_saved']:.2f}")
+            if "patch_b_per_pos" in r:
+                line += f" implicit_avoids={r['patch_b_per_pos']}B/pos"
+            lines.append(line)
         else:
             lines.append(f"  skip {r['path']:<28s} ({r['reason']})")
     return "\n".join(lines)

@@ -1,7 +1,10 @@
 """CONV layers as PackedLayout producers/consumers: im2col lowering
 round-trips, packed-vs-masked-dense parity on both tiny conv archs
 (including the 5x5 and stride-2 layers), reorder bit-identity through
-``sparse_conv2d``, and the depthwise / indivisible skip regressions."""
+``sparse_conv2d``, implicit-GEMM parity (the patch tensor never
+materialized — asserted by poisoning ``ops.im2col``), im2col edge cases
+(VALID / non-square / kernel-larger-than-feature-map) on both paths, and
+the depthwise / indivisible skip regressions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,11 +29,15 @@ def conv_case(P, Q, kh, kw, rate=0.5, block=(8, 8), seed=0):
     return w * mask, mask
 
 
-def dense_conv(wm, x, stride):
+def dense_conv(wm, x, stride, padding="SAME"):
     kernel = wm.transpose(2, 3, 1, 0)            # (kh,kw,Q,P)
     return jax.lax.conv_general_dilated(
-        x, kernel, (stride, stride), "SAME",
+        x, kernel, (stride, stride), padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def packed_conv_layout(wm, mask, block=(8, 8), **kw):
+    return ops.pack(BCS.conv_lower(wm), BCS.conv_lower(mask), block, **kw)
 
 
 # -- lowering: im2col GEMM == lax.conv, punched masks -> dead blocks ---------
@@ -86,6 +93,136 @@ def test_sparse_conv2d_reorder_bit_identity(n_bins):
                            act="relu")
     np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
     assert reord.L_effective <= plain.L_max
+
+
+# -- implicit-GEMM path: im2col folded into the kernel -----------------------
+
+@pytest.mark.parametrize("P,Q,kh,kw,stride", [
+    (32, 16, 3, 3, 1),
+    (64, 32, 5, 5, 2),      # non-3x3 kernel AND stride 2
+    (32, 16, 3, 3, 2),
+])
+def test_implicit_conv_bit_identical_to_materialized(P, Q, kh, kw, stride):
+    """The implicit kernel gathers exactly the im2col rows, so its output
+    is BIT-identical to the materialized path (and fp32-close to the
+    masked ``lax.conv`` oracle)."""
+    wm, mask = conv_case(P, Q, kh, kw)
+    packed = packed_conv_layout(wm, mask, reorder=True, n_bins=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 12, Q), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (P,), jnp.float32)
+    y_imp = ops.sparse_conv2d(x, packed, kh=kh, kw=kw, stride=stride,
+                              bias=b, act="relu", implicit=True)
+    y_mat = ops.sparse_conv2d(x, packed, kh=kh, kw=kw, stride=stride,
+                              bias=b, act="relu", implicit=False)
+    np.testing.assert_array_equal(np.asarray(y_imp), np.asarray(y_mat))
+    y_ref = jax.nn.relu(dense_conv(wm, x, stride) + b)
+    np.testing.assert_allclose(np.asarray(y_imp), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("implicit", [False, True])
+@pytest.mark.parametrize("H,W,kh,kw,stride,padding", [
+    (10, 10, 3, 3, 1, "VALID"),      # VALID padding
+    (9, 13, 3, 3, 2, "SAME"),        # non-square input, stride 2
+    (11, 7, 5, 5, 1, "VALID"),       # VALID + non-square
+    (4, 4, 5, 5, 1, "SAME"),         # kernel larger than the feature map
+])
+def test_im2col_edge_cases_both_paths(H, W, kh, kw, stride, padding,
+                                      implicit):
+    """im2col edge cases hold on BOTH x-operand strategies, against the
+    ``lax.conv_general_dilated`` oracle."""
+    P, Q = 16, 8
+    wm, mask = conv_case(P, Q, kh, kw)
+    packed = packed_conv_layout(wm, mask, reorder=True, n_bins=2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, H, W, Q), jnp.float32)
+    y = ops.sparse_conv2d(x, packed, kh=kh, kw=kw, stride=stride,
+                          padding=padding, implicit=implicit)
+    y_ref = dense_conv(wm, x, stride, padding)
+    assert y.shape == y_ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_valid_padding_kernel_too_large_raises():
+    """VALID padding with a kernel that does not fit must fail loudly on
+    both paths, not emit an empty output."""
+    wm, mask = conv_case(16, 8, 5, 5)
+    packed = packed_conv_layout(wm, mask)
+    x = jnp.zeros((1, 4, 4, 8), jnp.float32)
+    for implicit in (False, True):
+        with pytest.raises(ValueError, match="does not fit"):
+            ops.sparse_conv2d(x, packed, kh=5, kw=5, padding="VALID",
+                              implicit=implicit)
+
+
+def test_implicit_never_materializes_patches(monkeypatch):
+    """The acceptance property of the implicit mode: the B*Ho*Wo*Kh*Kw*C
+    patch tensor is never built — poisoning ``ops.im2col`` must not
+    affect the implicit path, while the materialized path dies on it."""
+    wm, mask = conv_case(32, 16, 3, 3)
+    packed = packed_conv_layout(wm, mask)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, 8, 16), jnp.float32)
+    y_before = ops.sparse_conv2d(x, packed, kh=3, kw=3, implicit=False)
+
+    def boom(*a, **kw):
+        raise AssertionError("patch tensor materialized")
+
+    monkeypatch.setattr(ops, "im2col", boom)
+    y_imp = ops.sparse_conv2d(x, packed, kh=3, kw=3, implicit=True)
+    np.testing.assert_array_equal(np.asarray(y_imp), np.asarray(y_before))
+    with pytest.raises(AssertionError, match="materialized"):
+        ops.sparse_conv2d(x, packed, kh=3, kw=3, implicit=False)
+
+
+def test_implicit_auto_selection_by_patch_size():
+    """implicit=None picks by patch-tensor size: tiny patches and 1x1
+    convs stay materialized; a patch above the byte floor (or a block
+    straddling taps) flips the choice."""
+    x_small = jnp.zeros((1, 8, 8, 16), jnp.float32)
+    x_big = jnp.zeros((8, 64, 64, 64), jnp.float32)     # ~75 MiB of patches
+    assert not ops._pick_implicit(None, x_small, 3, 3, 1, "SAME", bk=8)
+    assert ops._pick_implicit(None, x_big, 3, 3, 1, "SAME", bk=8)
+    # 1x1: the "patch" IS the input — nothing to avoid
+    assert not ops._pick_implicit(None, x_big, 1, 1, 1, "SAME", bk=8)
+    # a padded image past the VMEM ceiling never auto-selects implicit
+    # (the kernel pins the whole image in VMEM); explicit True still can
+    x_huge = jnp.zeros((1, 600, 600, 128), jnp.float32)   # ~185 MiB image
+    assert not ops._pick_implicit(None, x_huge, 3, 3, 1, "SAME", bk=8)
+    assert ops._pick_implicit(True, x_huge, 3, 3, 1, "SAME", bk=8)
+    # a K-block straddling taps cannot run implicit: auto falls back ...
+    assert not ops._pick_implicit(None, x_big, 3, 3, 1, "SAME", bk=48)
+    # ... and forcing it is a loud error, not silent densification
+    with pytest.raises(AssertionError, match="straddle"):
+        ops._pick_implicit(True, x_big, 3, 3, 1, "SAME", bk=48)
+
+
+def test_conv_tap_table_matches_lowering_order():
+    """conv_tap_table(kb) = (dy, dx, c0) of the first row of K-block kb
+    under the ``conv_lower`` (tap-major, channel-minor) row order."""
+    kh, kw, c, bk = 2, 3, 8, 4
+    taps = BCS.conv_tap_table(kh, kw, c, bk)
+    assert len(taps) == kh * kw * c // bk
+    for kb, (dy, dx, c0) in enumerate(taps):
+        r0 = kb * bk
+        assert r0 == (dy * kw + dx) * c + c0
+        assert c0 + bk <= c                      # never straddles a tap
+    with pytest.raises(AssertionError, match="straddle"):
+        BCS.conv_tap_table(3, 3, 8, 6)           # 6 does not divide 8
+
+
+def test_compile_attaches_conv_taps():
+    """compile_model's conv producer carries the static tap-offset aux so
+    serving auto-selects implicit without re-deriving geometry, and the
+    report carries the per-position patch bytes the implicit path avoids."""
+    _, exec_params, report = _compiled_convnet(C.VGG_TINY)
+    for r in report:
+        if r["packed"]:
+            name = r["path"].split("/")[0]
+            layout = exec_params[name]["packed"]
+            assert layout.conv_taps is not None
+            assert len(layout.conv_taps) == layout.Kb
+            assert r["patch_b_per_pos"] > 0
+    assert "implicit_avoids=" in compiled_summary(report)
 
 
 # -- compile_model: whole-convnet packed forward == masked-dense oracle ------

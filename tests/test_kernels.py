@@ -105,3 +105,18 @@ def test_ops_pack_and_run():
     y_ref = ref.masked_matmul_ref(x, w, m)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-3, atol=1e-3)
+
+
+def test_pallas_interpret_env_override(monkeypatch):
+    """PALLAS_INTERPRET pins the kernel execution mode in both directions
+    (the TPU CI hook); unset falls back to backend auto-detection."""
+    from repro.kernels import bsr_matmul as BM
+
+    monkeypatch.setenv("PALLAS_INTERPRET", "1")
+    assert BM._auto_interpret() is True
+    monkeypatch.setenv("PALLAS_INTERPRET", "false")
+    assert BM._auto_interpret() is False
+    monkeypatch.setenv("PALLAS_INTERPRET", "")
+    assert BM._auto_interpret() == (jax.default_backend() != "tpu")
+    monkeypatch.delenv("PALLAS_INTERPRET")
+    assert BM._auto_interpret() == (jax.default_backend() != "tpu")

@@ -119,6 +119,63 @@ def test_sparse_conv2d_pattern_reorder_bit_identity(n_bins):
     assert reord.L_effective <= plain.L_max
 
 
+@pytest.mark.parametrize("P,Q,kh,kw,stride,conn", [
+    (32, 16, 3, 3, 1, 0.0),      # pure 4-of-9 patterns
+    (32, 16, 3, 3, 2, 0.5),      # patterns + connectivity, stride 2
+    (64, 32, 5, 5, 2, 0.5),      # non-3x3: connectivity-only, stride 2
+])
+def test_implicit_tap_gather_parity(P, Q, kh, kw, stride, conn):
+    """Implicit tap-gather (straight off the padded feature map — no
+    patch tensor, no alive band) matches the materialized tap path within
+    fp32 tolerance and the masked ``lax.conv`` oracle."""
+    wm, mask = pattern_case(P, Q, kh, kw, connectivity=conn)
+    tap = ops.pack_taps(wm, mask)
+    assert tap.k_full is not None                 # pack-time implicit aux
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 11, 9, Q), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(7), (P,), jnp.float32)
+    y_imp = ops.sparse_conv2d_pattern(x, tap, kh=kh, kw=kw, stride=stride,
+                                      bias=b, act="relu", implicit=True)
+    y_mat = ops.sparse_conv2d_pattern(x, tap, kh=kh, kw=kw, stride=stride,
+                                      bias=b, act="relu", implicit=False)
+    np.testing.assert_allclose(np.asarray(y_imp), np.asarray(y_mat),
+                               rtol=1e-5, atol=1e-5)
+    y_ref = jax.nn.relu(dense_conv(wm, x, stride) + b)
+    np.testing.assert_allclose(np.asarray(y_imp), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_implicit_tap_gather_legacy_layout_without_k_full():
+    """Layouts packed before the ``k_full`` aux existed still run
+    implicit: ``bin_k_full`` reconstructs ``alive[t_idx]`` on the fly."""
+    import dataclasses
+
+    wm, mask = pattern_case(32, 16, connectivity=0.5)
+    tap = ops.pack_taps(wm, mask, use_cache=False)
+    legacy = dataclasses.replace(tap, k_full=None)
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 10, 10, 16),
+                          jnp.float32)
+    y = ops.sparse_conv2d_pattern(x, tap, kh=3, kw=3, implicit=True)
+    y_legacy = ops.sparse_conv2d_pattern(x, legacy, kh=3, kw=3,
+                                         implicit=True)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_legacy))
+
+
+def test_pack_taps_default_bins_shrink_connectivity_padding():
+    """The raised default (8 bins) must price connectivity-bearing tap
+    layouts at strictly less padding than the old 4-bin default — the
+    ROADMAP measurement this PR locks in."""
+    wm, mask = pattern_case(128, 64, connectivity=0.5, seed=9)
+    b4 = ops.pack_taps(wm, mask, n_bins=4)
+    b8 = ops.pack_taps(wm, mask)                  # default
+    assert b8.n_bins == 8
+    assert b8.padding_overhead < b4.padding_overhead
+    # bit-identical outputs regardless of binning
+    x = jax.random.normal(jax.random.PRNGKey(10), (1, 8, 8, 64), jnp.float32)
+    y4 = ops.sparse_conv2d_pattern(x, b4, kh=3, kw=3)
+    y8 = ops.sparse_conv2d_pattern(x, b8, kh=3, kw=3)
+    np.testing.assert_array_equal(np.asarray(y4), np.asarray(y8))
+
+
 def test_pack_taps_cache_key_separation():
     """A TapLayout and a PackedLayout of the same bytes never collide in
     the pack cache, and different tap knobs get distinct entries."""
