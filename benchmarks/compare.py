@@ -54,8 +54,8 @@ FRACTION_KEYS = (
 FRACTION_FLOOR = 0.05
 SPEEDUP_RE = re.compile(r"^([0-9.]+)x$")
 # wall-clock-derived ratios: gated at --wall-threshold, not --threshold
-WALL_KEYS = ("loop_speedup",)
-WALL_ROW_PREFIXES = ("pack_vectorized",)
+WALL_KEYS = ("loop_speedup", "artifact_warm_speedup")
+WALL_ROW_PREFIXES = ("pack_vectorized", "coldstart")
 # lower-is-better byte metrics (deterministic accounting, no wall noise)
 MEMORY_SUFFIX = "_mb"
 
@@ -83,13 +83,38 @@ def metrics_from(payload):
     return out
 
 
+def load_metrics(path):
+    """Parse one BENCH json into gated metrics; (metrics, error_line).
+
+    Any way the file can be bad — unreadable, invalid JSON, rows missing
+    the ``name``/``derived`` keys — comes back as a one-line error string
+    instead of a traceback, so a corrupted or hand-edited baseline fails
+    the gate with an actionable message rather than a stack dump.
+    """
+    try:
+        return metrics_from(json.loads(path.read_text())), None
+    except OSError as e:
+        return None, f"{path.name} unreadable ({e.strerror or e})"
+    except (json.JSONDecodeError, KeyError, TypeError, AttributeError) as e:
+        return None, f"{path.name} corrupt ({type(e).__name__}: {e})"
+
+
 def compare_one(name, base_path, fresh_path, threshold, wall_threshold):
     """Returns (failures, notes) for one benchmark file pair."""
     failures, notes = [], []
     if not fresh_path.exists():
-        return [f"{name}: fresh {fresh_path} missing (bench not run?)"], []
-    base = metrics_from(json.loads(base_path.read_text()))
-    fresh = metrics_from(json.loads(fresh_path.read_text()))
+        msg = (
+            f"{name}: fresh {fresh_path} missing — run its suite "
+            "(benchmarks.run --json), or if the bench was removed/renamed "
+            "drop the stale baseline via --update-baselines"
+        )
+        return [msg], []
+    base, err = load_metrics(base_path)
+    if err:
+        return [f"{name}: baseline {err}; re-promote with --update-baselines"], []
+    fresh, err = load_metrics(fresh_path)
+    if err:
+        return [f"{name}: fresh {err}; re-run benchmarks.run --json"], []
     for key, b in sorted(base.items()):
         if key not in fresh:
             failures.append(
@@ -173,6 +198,13 @@ def main(argv=None):
         )
         failures += fail
         notes += note
+    baseline_names = {p.name for p in baselines}
+    for path in sorted(args.fresh_dir.glob("BENCH_*.json")):
+        if path.name not in baseline_names:
+            notes.append(
+                f"{path.stem}: fresh file has no committed baseline "
+                "(not gated); promote with --update-baselines"
+            )
     for line in notes:
         print(f"note: {line}")
     if failures:

@@ -1,0 +1,376 @@
+"""Structural validation of the packed interchange layouts.
+
+Every invariant the sparse executors rely on is checked here, host-side,
+before a ``core.packed.PackedLayout``/``TapLayout`` is allowed anywhere
+near a kernel launch.  The normal pack path (``kernels.ops.pack`` /
+``pack_taps``) produces layouts that satisfy all of them by construction —
+this module exists for layouts that arrive from OUTSIDE the process: the
+AOT artifact store (``serve.artifacts``) and checkpoint restores, where a
+corrupted, truncated, or stale file could otherwise be consumed silently
+and mis-execute (an out-of-range ``k_idx`` gathers the wrong weight block;
+a broken ``inv_perm`` scrambles output columns).  A bad layout must raise
+a structured ``LayoutError`` so the loader can log the reason and fall
+back to a fresh pack — never serve wrong outputs.
+
+Taxonomy (one subclass per failure class, ``code`` is the stable tag):
+
+  ``LayoutStructureError``    bin tuples inconsistent, leaf shape/dtype or
+                              stack-dim mismatches, missing leaves
+  ``LayoutGeometryError``     block does not divide shape, bin sizes do
+                              not tile the column axis, bad group size
+  ``LayoutIndexError``        ``k_idx``/``t_idx``/``alive`` out of range
+  ``LayoutCountError``        ``nnz`` exceeds its bin's padded degree (or
+                              the physical maximum)
+  ``LayoutPermutationError``  ``perm``/``inv_perm`` not mutually inverse
+                              permutations (or only one present)
+  ``LayoutAuxError``          ``conv_taps``/``k_full`` aux inconsistent
+                              with the layout geometry
+
+``validate_layout`` checks one layout; ``validate_tree`` walks an
+exec-param tree and checks every ``"packed"`` entry.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.packed import PackedLayout, TapLayout
+
+
+class LayoutError(ValueError):
+    """Base of the layout-invariant taxonomy.
+
+    Carries the failure class (``code``), the offending ``field``, the
+    degree ``bin`` when the failure is per-bin, and the layer ``path``
+    when validated out of a tree — everything a loader needs to log a
+    structured fallback reason.
+    """
+
+    code = "invalid"
+
+    def __init__(self, detail, *, field=None, bin=None, path=None):
+        self.detail = detail
+        self.field = field
+        self.bin = bin
+        self.path = path
+        where = field or "?"
+        if bin is not None:
+            where += f"[bin {bin}]"
+        prefix = f"{path}: " if path else ""
+        super().__init__(f"{prefix}[{self.code}] {where}: {detail}")
+
+
+class LayoutStructureError(LayoutError):
+    """Bin tuples / leaf shapes / stack dims are inconsistent."""
+
+    code = "structure"
+
+
+class LayoutGeometryError(LayoutError):
+    """Block or group does not tile the declared dense shape."""
+
+    code = "geometry"
+
+
+class LayoutIndexError(LayoutError):
+    """An index leaf points outside its addressable range."""
+
+    code = "index_range"
+
+
+class LayoutCountError(LayoutError):
+    """``nnz`` exceeds its bin's padded degree or the physical max."""
+
+    code = "count"
+
+
+class LayoutPermutationError(LayoutError):
+    """``perm``/``inv_perm`` are not mutually inverse permutations."""
+
+    code = "permutation"
+
+
+class LayoutAuxError(LayoutError):
+    """Static aux (``conv_taps``/``k_full``) disagrees with geometry."""
+
+    code = "aux"
+
+
+def _as_host(x):
+    """Leaf -> numpy without copying when already host-side."""
+    return np.asarray(x)
+
+
+def _check_perm_pair(perm, inv_perm, n, path):
+    """perm/inv_perm: both absent, or mutually inverse permutations of
+    ``range(n)`` on the trailing axis (leading stack dims allowed)."""
+    if perm is None and inv_perm is None:
+        return
+    if perm is None or inv_perm is None:
+        missing = "perm" if perm is None else "inv_perm"
+        raise LayoutPermutationError(
+            f"{missing} is None while its partner is present",
+            field=missing, path=path)
+    p = _as_host(perm)
+    ip = _as_host(inv_perm)
+    for name, a in (("perm", p), ("inv_perm", ip)):
+        if a.shape[-1] != n:
+            raise LayoutStructureError(
+                f"trailing axis {a.shape[-1]} != {n} columns",
+                field=name, path=path)
+        if not np.issubdtype(a.dtype, np.integer):
+            raise LayoutStructureError(
+                f"dtype {a.dtype} is not integral", field=name, path=path)
+    p2 = p.reshape(-1, n)
+    ip2 = ip.reshape(-1, n)
+    if p2.shape != ip2.shape:
+        raise LayoutStructureError(
+            f"perm stack dims {p.shape[:-1]} != inv_perm {ip.shape[:-1]}",
+            field="inv_perm", path=path)
+    ar = np.arange(n)
+    if not (np.all(np.sort(p2, axis=1) == ar)
+            and np.all(np.sort(ip2, axis=1) == ar)):
+        raise LayoutPermutationError(
+            f"not a permutation of range({n})", field="perm", path=path)
+    if not np.all(np.take_along_axis(ip2, p2, axis=1) == ar):
+        raise LayoutPermutationError(
+            "inv_perm[perm] != identity (perm and inv_perm are not "
+            "inverses)", field="inv_perm", path=path)
+
+
+def _check_nnz(nnz, bin_bounds, bin_degrees, n_cols, hard_max, path):
+    """nnz: int leaf, trailing axis ``n_cols`` in LAYOUT order, every true
+    degree within [0, hard_max] and <= its own bin's padded degree."""
+    a = _as_host(nnz)
+    if not np.issubdtype(a.dtype, np.integer):
+        raise LayoutStructureError(
+            f"dtype {a.dtype} is not integral", field="nnz", path=path)
+    if a.shape[-1] != n_cols:
+        raise LayoutStructureError(
+            f"trailing axis {a.shape[-1]} != {n_cols} columns",
+            field="nnz", path=path)
+    flat = a.reshape(-1, n_cols)
+    if flat.size and int(flat.min()) < 0:
+        raise LayoutCountError("negative degree", field="nnz", path=path)
+    if flat.size and int(flat.max()) > hard_max:
+        raise LayoutCountError(
+            f"degree {int(flat.max())} exceeds physical max {hard_max}",
+            field="nnz", path=path)
+    for b, ((s, e), Lb) in enumerate(zip(bin_bounds, bin_degrees)):
+        seg = flat[:, s:e]
+        if seg.size and int(seg.max()) > Lb:
+            raise LayoutCountError(
+                f"true degree {int(seg.max())} exceeds the bin's padded "
+                f"degree L={Lb} (bins swapped or padded arrays "
+                "truncated?)", field="nnz", bin=b, path=path)
+
+
+def _bounds_of(sizes):
+    out, start = [], 0
+    for s in sizes:
+        out.append((start, start + s))
+        start += s
+    return out
+
+
+def _validate_packed(layout: PackedLayout, path):
+    bk, bn = layout.block
+    K, N = layout.shape
+    if bk <= 0 or bn <= 0 or K <= 0 or N <= 0:
+        raise LayoutGeometryError(
+            f"non-positive geometry block={layout.block} "
+            f"shape={layout.shape}", field="block", path=path)
+    if K % bk or N % bn:
+        raise LayoutGeometryError(
+            f"block {layout.block} does not divide shape {layout.shape}",
+            field="block", path=path)
+    Kb, Nb = K // bk, N // bn
+    if not layout.values or len(layout.values) != len(layout.k_idx):
+        raise LayoutStructureError(
+            f"{len(layout.values)} value bin(s) vs "
+            f"{len(layout.k_idx)} k_idx bin(s)", field="values", path=path)
+    lead = np.shape(layout.values[0])[:-4]
+    for b, (v, k) in enumerate(zip(layout.values, layout.k_idx)):
+        vs, ks = np.shape(v), np.shape(k)
+        if len(vs) < 4 or vs[-2:] != (bk, bn):
+            raise LayoutStructureError(
+                f"values shape {vs} does not end in block {(bk, bn)}",
+                field="values", bin=b, path=path)
+        if vs[:-4] != lead:
+            raise LayoutStructureError(
+                f"stack dims {vs[:-4]} != bin-0 stack dims {lead}",
+                field="values", bin=b, path=path)
+        if ks != vs[:-2]:
+            raise LayoutStructureError(
+                f"k_idx shape {ks} != values slot shape {vs[:-2]}",
+                field="k_idx", bin=b, path=path)
+        ka = _as_host(k)
+        if not np.issubdtype(ka.dtype, np.integer):
+            raise LayoutStructureError(
+                f"dtype {ka.dtype} is not integral", field="k_idx", bin=b,
+                path=path)
+        if ka.size and (int(ka.min()) < 0 or int(ka.max()) >= Kb):
+            raise LayoutIndexError(
+                f"k_idx range [{int(ka.min())}, {int(ka.max())}] outside "
+                f"[0, Kb={Kb})", field="k_idx", bin=b, path=path)
+    if sum(layout.bin_sizes) != Nb:
+        raise LayoutGeometryError(
+            f"bin sizes {layout.bin_sizes} sum to "
+            f"{sum(layout.bin_sizes)}, not Nb={Nb}", field="values",
+            path=path)
+    _check_nnz(layout.nnz, _bounds_of(layout.bin_sizes),
+               layout.bin_degrees, Nb, Kb, path)
+    _check_perm_pair(layout.perm, layout.inv_perm, Nb, path)
+    if layout.conv_taps is not None:
+        _check_conv_taps(layout.conv_taps, Kb, bk, path)
+
+
+def _check_conv_taps(conv_taps, Kb, bk, path):
+    """conv_taps must be exactly the ``core.bcs.conv_tap_table`` of SOME
+    (kh, kw, C) geometry with Kb blocks of bk rows — reconstruct the
+    implied geometry and compare table-for-table."""
+    from repro.core import bcs as BCS
+
+    if len(conv_taps) != Kb:
+        raise LayoutAuxError(
+            f"{len(conv_taps)} tap entries for Kb={Kb} K-blocks",
+            field="conv_taps", path=path)
+    try:
+        triples = [(int(dy), int(dx), int(c0)) for dy, dx, c0 in conv_taps]
+    except (TypeError, ValueError) as e:
+        raise LayoutAuxError(f"entries are not (dy, dx, c0) triples: {e}",
+                             field="conv_taps", path=path) from e
+    # channel count implied by how many K-blocks share tap (0, 0)
+    c_blocks = sum(1 for dy, dx, _ in triples if (dy, dx) == (0, 0))
+    kh = max(dy for dy, _, _ in triples) + 1
+    kw = max(dx for _, dx, _ in triples) + 1
+    C = c_blocks * bk
+    if C == 0 or Kb * bk != kh * kw * C:
+        raise LayoutAuxError(
+            f"implied geometry (kh={kh}, kw={kw}, C={C}) does not tile "
+            f"K={Kb * bk}", field="conv_taps", path=path)
+    expect = BCS.conv_tap_table(kh, kw, C, bk)
+    if tuple(triples) != expect:
+        raise LayoutAuxError(
+            f"table is not conv_tap_table(kh={kh}, kw={kw}, C={C}, "
+            f"bk={bk})", field="conv_taps", path=path)
+
+
+def _validate_tap(layout: TapLayout, path):
+    K, P = layout.shape
+    group = layout.group
+    if group <= 0 or K <= 0 or P <= 0:
+        raise LayoutGeometryError(
+            f"non-positive geometry group={group} shape={layout.shape}",
+            field="group", path=path)
+    if P % group:
+        raise LayoutGeometryError(
+            f"group {group} does not divide P={P}", field="group",
+            path=path)
+    G = P // group
+    if not layout.values or len(layout.values) != len(layout.t_idx):
+        raise LayoutStructureError(
+            f"{len(layout.values)} value bin(s) vs "
+            f"{len(layout.t_idx)} t_idx bin(s)", field="values", path=path)
+    if layout.k_full is not None and len(layout.k_full) != len(layout.values):
+        raise LayoutStructureError(
+            f"{len(layout.k_full)} k_full bin(s) vs "
+            f"{len(layout.values)} value bin(s)", field="k_full", path=path)
+    alive = _as_host(layout.alive)
+    if alive.ndim != 1 or alive.size == 0:
+        raise LayoutStructureError(
+            f"alive must be a non-empty 1-D index, got shape "
+            f"{alive.shape}", field="alive", path=path)
+    if not np.issubdtype(alive.dtype, np.integer):
+        raise LayoutStructureError(
+            f"dtype {alive.dtype} is not integral", field="alive",
+            path=path)
+    if int(alive.min()) < 0 or int(alive.max()) >= K:
+        raise LayoutIndexError(
+            f"alive range [{int(alive.min())}, {int(alive.max())}] "
+            f"outside [0, K={K})", field="alive", path=path)
+    if alive.size > 1 and not np.all(np.diff(alive) > 0):
+        raise LayoutIndexError(
+            "alive rows are not strictly increasing (band gather order "
+            "broken)", field="alive", path=path)
+    R = alive.size
+    for b, (v, t) in enumerate(zip(layout.values, layout.t_idx)):
+        vs, ts = np.shape(v), np.shape(t)
+        if len(vs) != 3 or vs[-1] != group:
+            raise LayoutStructureError(
+                f"values shape {vs} is not (G_b, L_b, group={group})",
+                field="values", bin=b, path=path)
+        if ts != vs[:-1]:
+            raise LayoutStructureError(
+                f"t_idx shape {ts} != values slot shape {vs[:-1]}",
+                field="t_idx", bin=b, path=path)
+        ta = _as_host(t)
+        if not np.issubdtype(ta.dtype, np.integer):
+            raise LayoutStructureError(
+                f"dtype {ta.dtype} is not integral", field="t_idx", bin=b,
+                path=path)
+        if ta.size and (int(ta.min()) < 0 or int(ta.max()) >= R):
+            raise LayoutIndexError(
+                f"t_idx range [{int(ta.min())}, {int(ta.max())}] outside "
+                f"the alive band [0, {R})", field="t_idx", bin=b, path=path)
+        if layout.k_full is not None:
+            kf = _as_host(layout.k_full[b])
+            if kf.shape != ta.shape:
+                raise LayoutStructureError(
+                    f"k_full shape {kf.shape} != t_idx shape {ta.shape}",
+                    field="k_full", bin=b, path=path)
+            if not np.array_equal(kf, alive[ta]):
+                raise LayoutAuxError(
+                    "k_full != alive[t_idx] (precomputed full-band rows "
+                    "disagree with the alive gather)", field="k_full",
+                    bin=b, path=path)
+    if sum(layout.bin_sizes) != G:
+        raise LayoutGeometryError(
+            f"bin sizes {layout.bin_sizes} sum to "
+            f"{sum(layout.bin_sizes)}, not G={G}", field="values",
+            path=path)
+    _check_nnz(layout.nnz, _bounds_of(layout.bin_sizes),
+               layout.bin_degrees, G, R, path)
+    _check_perm_pair(layout.perm, layout.inv_perm, G, path)
+
+
+def validate_layout(layout, *, path=None):
+    """Check every structural invariant of one layout; raise the matching
+    ``LayoutError`` subclass on the first violation.
+
+    ``path`` tags errors with the layer the layout belongs to (purely for
+    the log/fallback message).  Returns the layout so calls can chain.
+    """
+    if isinstance(layout, PackedLayout):
+        _validate_packed(layout, path)
+    elif isinstance(layout, TapLayout):
+        _validate_tap(layout, path)
+    else:
+        raise LayoutStructureError(
+            f"not a PackedLayout/TapLayout: {type(layout).__name__}",
+            field="layout", path=path)
+    return layout
+
+
+def validate_tree(exec_params) -> int:
+    """Validate every ``"packed"`` entry of an exec-param tree.
+
+    Returns the number of layouts checked; raises the first violation's
+    ``LayoutError`` (tagged with the layer path).
+    """
+    count = 0
+
+    def _walk(node, path):
+        nonlocal count
+        if not isinstance(node, dict):
+            return
+        packed = node.get("packed")
+        if packed is not None and not isinstance(packed, dict):
+            validate_layout(packed, path=f"{path}/packed" if path
+                            else "packed")
+            count += 1
+        for k, v in node.items():
+            if k != "packed":
+                _walk(v, f"{path}/{k}" if path else k)
+
+    _walk(exec_params, "")
+    return count

@@ -4,9 +4,21 @@ Design (DESIGN.md §5): step-stamped directories, per-host shard files,
 manifest-last + atomic rename => a partially written checkpoint is never
 picked up; restore scans for the newest COMPLETE step.  Restore re-shards
 onto whatever mesh the restoring job has (elastic restarts: the array data
-is mesh-agnostic; shardings are re-applied via device_put)."""
+is mesh-agnostic; shardings are re-applied via device_put).
+
+Integrity: the manifest carries a sha256 checksum + byte size per shard
+file (``file_checksum`` is shared with the AOT artifact store in
+``serve.artifacts``), and restore verifies them before deserializing —
+bit rot or truncation raises a structured ``CheckpointError`` naming the
+offending file instead of silently feeding garbage into ``np.load``.
+Restoring into a tree whose structure, shapes, or dtype kinds differ from
+what was saved also raises a ``CheckpointError`` naming the first
+offending param path, instead of a raw ``KeyError`` (missing key) or a
+shape mismatch deep inside ``tree_unflatten``.
+"""
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pathlib
@@ -15,6 +27,30 @@ import numpy as np
 import jax
 
 from repro.models import module as M
+
+
+class CheckpointError(RuntimeError):
+    """Structured restore failure: carries the checkpoint ``path`` and the
+    failure-class ``code`` (``missing_key`` / ``unexpected_key`` /
+    ``checksum`` / ``shape`` / ``dtype`` / ``missing_file``)."""
+
+    def __init__(self, detail, *, code="invalid", path=None):
+        self.code = code
+        self.path = str(path) if path is not None else None
+        where = f" [{self.path}]" if self.path else ""
+        super().__init__(f"[{code}]{where} {detail}")
+
+
+def file_checksum(path, algo: str = "sha256", chunk: int = 1 << 20) -> str:
+    """Streaming content hash of one file — shared by the checkpoint
+    manifest and the AOT artifact store (``serve.artifacts``)."""
+    h = hashlib.new(algo)
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                return h.hexdigest()
+            h.update(block)
 
 
 def _to_numpy(v):
@@ -36,11 +72,16 @@ def save(ckpt_dir, step: int, tree, host_id: int = 0, n_hosts: int = 1,
     tmp = ckpt_dir / f".tmp_step_{step:08d}_{host_id}"
     tmp.mkdir(parents=True, exist_ok=True)
     arrays, _ = _flatten(tree)
-    np.savez(tmp / f"shard_{host_id}.npz", **arrays)
+    shard_name = f"shard_{host_id}.npz"
+    np.savez(tmp / shard_name, **arrays)
     # host 0 writes the manifest LAST; atomic rename publishes the step
     if host_id == 0:
+        shard_path = tmp / shard_name
         manifest = {"step": step, "n_hosts": n_hosts,
-                    "keys": sorted(arrays.keys()), "meta": meta or {}}
+                    "keys": sorted(arrays.keys()), "meta": meta or {},
+                    "checksums": {shard_name: {
+                        "sha256": file_checksum(shard_path),
+                        "bytes": shard_path.stat().st_size}}}
         (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
         if final.exists():
             return final
@@ -60,18 +101,90 @@ def latest_step(ckpt_dir) -> int | None:
     return max(steps) if steps else None
 
 
+def _verify_shard(d, shard_name):
+    """Checksum + key-set verification against the step's manifest; every
+    failure is a structured ``CheckpointError`` naming the file."""
+    shard_path = d / shard_name
+    if not shard_path.exists():
+        raise CheckpointError(f"shard file {shard_name} is missing",
+                              code="missing_file", path=d)
+    manifest_path = d / "MANIFEST.json"
+    if not manifest_path.exists():     # torn step: latest_step skips these
+        raise CheckpointError("manifest is missing (torn checkpoint?)",
+                              code="missing_file", path=d)
+    manifest = json.loads(manifest_path.read_text())
+    rec = manifest.get("checksums", {}).get(shard_name)
+    if rec is not None:                # pre-checksum checkpoints: skip
+        size = shard_path.stat().st_size
+        if size != rec["bytes"]:
+            raise CheckpointError(
+                f"shard {shard_name} is {size} bytes, manifest says "
+                f"{rec['bytes']} (truncated write?)", code="checksum",
+                path=shard_path)
+        digest = file_checksum(shard_path)
+        if digest != rec["sha256"]:
+            raise CheckpointError(
+                f"shard {shard_name} sha256 {digest[:12]}... != manifest "
+                f"{rec['sha256'][:12]}... (bit corruption?)",
+                code="checksum", path=shard_path)
+    return manifest
+
+
+def _check_leaf(path, like, arr, d):
+    """Shape/dtype-kind compatibility of one stored array against the
+    restore target — a wrong-tree restore fails HERE with the param path,
+    not as a shape error deep inside ``tree_unflatten``."""
+    like_shape = getattr(like, "shape", None)
+    if like_shape is not None and tuple(arr.shape) != tuple(like_shape):
+        raise CheckpointError(
+            f"param {path!r}: checkpoint shape {tuple(arr.shape)} != "
+            f"restore target shape {tuple(like_shape)}", code="shape",
+            path=d)
+    like_dtype = getattr(like, "dtype", None)
+    if like_dtype is not None:
+        kind_of = (lambda dt: "f" if jax.numpy.issubdtype(dt,
+                   jax.numpy.floating) else np.dtype(dt).kind)
+        if kind_of(arr.dtype) != kind_of(like_dtype):
+            raise CheckpointError(
+                f"param {path!r}: checkpoint dtype {arr.dtype} is not "
+                f"restorable into target dtype {like_dtype} (different "
+                "dtype kind — wrong tree?)", code="dtype", path=d)
+
+
 def restore(ckpt_dir, tree_like, step: int | None = None,
             shardings=None, host_id: int = 0):
     """Restore into the structure of ``tree_like``; re-shard with
-    ``shardings`` (same structure) when given — the elastic-restart path."""
+    ``shardings`` (same structure) when given — the elastic-restart path.
+
+    Raises ``CheckpointError`` (naming the offending path) when the shard
+    fails its manifest checksum, when a param of ``tree_like`` is missing
+    from the checkpoint, when the checkpoint carries params ``tree_like``
+    does not expect, or when a param's shape/dtype kind is incompatible.
+    """
     ckpt_dir = pathlib.Path(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             return None, None
     d = ckpt_dir / f"step_{step:08d}"
+    _verify_shard(d, f"shard_{host_id}.npz")
     data = np.load(d / f"shard_{host_id}.npz")
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    want = [M.path_str(p) for p, _ in flat]
+    missing = sorted(set(want) - set(data.files))
+    if missing:
+        more = f" (+{len(missing) - 1} more)" if len(missing) > 1 else ""
+        raise CheckpointError(
+            f"param {missing[0]!r}{more} expected by the restore target "
+            "is missing from the checkpoint — wrong tree?",
+            code="missing_key", path=d)
+    extra = sorted(set(data.files) - set(want))
+    if extra:
+        more = f" (+{len(extra) - 1} more)" if len(extra) > 1 else ""
+        raise CheckpointError(
+            f"checkpoint carries param {extra[0]!r}{more} the restore "
+            "target does not expect — wrong tree?",
+            code="unexpected_key", path=d)
     leaves = []
     if shardings is not None:
         flat_s = [s for _, s in
@@ -80,6 +193,7 @@ def restore(ckpt_dir, tree_like, step: int | None = None,
         flat_s = [None] * len(flat)
     for (p, like), sh in zip(flat, flat_s):
         arr = data[M.path_str(p)]
+        _check_leaf(M.path_str(p), like, arr, d)
         arr = arr.astype(like.dtype) if hasattr(like, "dtype") else arr
         leaves.append(jax.device_put(arr, sh) if sh is not None
                       else jax.numpy.asarray(arr))

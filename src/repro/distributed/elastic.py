@@ -4,6 +4,12 @@
   pick the largest power-of-two (data, model) split that preserves the
   requested model-parallel degree — the framework restarts onto the
   shrunken mesh and `checkpoint.restore(..., shardings=new)` re-shards.
+* ``replica_restore``: the replica cold-start path — newest complete
+  checkpoint + the AOT artifact store (``serve.artifacts``), so a replica
+  spun up under load serves already-packed layouts in milliseconds
+  instead of repaying the §4.3 compile; any stale/corrupt artifact is
+  detected (digest, checksums, layout validation) and degrades to a
+  fresh pack through the same ``compile_model`` front door.
 * Straggler mitigation is structural: the data pipeline is a pure function
   of (seed, step, shard) (repro.data.pipeline), so a backup host can
   recompute any shard with zero coordination; `backup_step_threshold`
@@ -30,6 +36,33 @@ def choose_mesh_shape(n_devices: int, model_parallel: int = 16,
     while dp * 2 <= rest:
         dp *= 2
     return (dp, mp), ("data", "model")
+
+
+def replica_restore(ckpt_dir, tree_like, *, mapping=(), masks=None,
+                    artifact_dir=None, step=None, shardings=None,
+                    **compile_kw):
+    """Elastic replica start: restore the newest complete checkpoint, then
+    load-or-compile the packed execution params through the SAME artifact
+    front door as ``launch.serve --artifacts``.
+
+    ``masks=None`` derives masks from the zeros already baked into the
+    restored weights (checkpoints hold post-``apply_masks`` params), so a
+    replica needs nothing beyond the checkpoint + the artifact store.
+    Returns ``(exec_params, report, step)`` — ``(None, None, None)`` when
+    no checkpoint exists yet.  A missing/stale/corrupt artifact costs a
+    repack (logged, structured reason); it can never mis-execute.
+    """
+    from repro.distributed import checkpoint as CKPT
+    from repro.serve.compile import compile_model
+
+    params, step = CKPT.restore(ckpt_dir, tree_like, step=step,
+                                shardings=shardings)
+    if params is None:
+        return None, None, None
+    exec_params, report = compile_model(params, masks, mapping,
+                                        artifact_dir=artifact_dir,
+                                        **compile_kw)
+    return exec_params, report, step
 
 
 def rebuild_mesh(model_parallel=16, want_pods=1):

@@ -49,12 +49,16 @@ Cache-key contract: results are memoized on a blake2b content digest of
 n_bins).  Every knob that changes the produced layout is part of the key,
 so reordered and unreordered packs, different bin counts, block shapes, or
 tap-group sizes of the SAME weights can never collide; entries are evicted
-LRU under both a count and a byte bound.  Cached layouts are frozen — the
-same instance is handed to every caller."""
+LRU under both a count and a byte bound (configurable via
+``configure_pack_cache`` / REPRO_PACK_CACHE_MAX{,_BYTES}, every eviction
+logged, occupancy + hit/miss counters in ``pack_cache_stats``).  Cached
+layouts are frozen — the same instance is handed to every caller."""
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import logging
+import os
 from collections import OrderedDict
 
 import numpy as np
@@ -78,16 +82,64 @@ _IMPLICIT_MIN_PATCH_BYTES = 1 << 20
 # implicit=True can still force it (e.g. in interpret mode)
 _IMPLICIT_MAX_IMAGE_BYTES = 8 << 20
 
+_log = logging.getLogger("repro.kernels.ops")
+
 _PACK_CACHE: OrderedDict = OrderedDict()
-_PACK_CACHE_MAX = 256
-# byte bound (values + k_idx + nnz), evicted LRU: a count-only bound would
-# happily pin GBs of packed multi-MB projections for the process lifetime
-_PACK_CACHE_MAX_BYTES = 256 << 20
+# entry cap and byte bound (values + k_idx + nnz), evicted LRU: a
+# count-only bound would happily pin GBs of packed multi-MB projections
+# for the process lifetime, and an unbounded cache in a long-lived serving
+# process sweeping many layouts grows without bound.  Configurable via
+# ``configure_pack_cache`` or the REPRO_PACK_CACHE_MAX{,_BYTES} env vars;
+# every eviction is logged.
+_PACK_CACHE_MAX = int(os.environ.get("REPRO_PACK_CACHE_MAX", "256"))
+_PACK_CACHE_MAX_BYTES = int(
+    os.environ.get("REPRO_PACK_CACHE_MAX_BYTES", str(256 << 20)))
+_PACK_CACHE_BYTES = 0
+_PACK_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _entry_bytes(layout: PackedLayout) -> int:
     leaves = jax.tree_util.tree_leaves(layout)
     return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in leaves)
+
+
+def configure_pack_cache(max_entries=None, max_bytes=None) -> dict:
+    """Set the pack-cache bounds (None keeps the current value), evicting
+    down immediately if the new bounds are tighter.  Returns the active
+    config merged with ``pack_cache_stats()``."""
+    global _PACK_CACHE_MAX, _PACK_CACHE_MAX_BYTES
+    if max_entries is not None:
+        _PACK_CACHE_MAX = max(1, int(max_entries))
+    if max_bytes is not None:
+        _PACK_CACHE_MAX_BYTES = max(1, int(max_bytes))
+    _evict_to_bounds()
+    return {"max_entries": _PACK_CACHE_MAX,
+            "max_bytes": _PACK_CACHE_MAX_BYTES, **pack_cache_stats()}
+
+
+def pack_cache_stats() -> dict:
+    """Current occupancy + lifetime hit/miss/eviction counters."""
+    return {"entries": len(_PACK_CACHE), "bytes": _PACK_CACHE_BYTES,
+            **_PACK_CACHE_STATS}
+
+
+def _evict_to_bounds():
+    """Evict LRU entries past the bounds, logging each (a serving process
+    that evicts constantly needs a bigger cache — the log is the signal)."""
+    global _PACK_CACHE_BYTES
+    while (len(_PACK_CACHE) > _PACK_CACHE_MAX
+           or _PACK_CACHE_BYTES > _PACK_CACHE_MAX_BYTES) \
+            and len(_PACK_CACHE) > 1:
+        key, evicted = _PACK_CACHE.popitem(last=False)
+        eb = _entry_bytes(evicted)
+        _PACK_CACHE_BYTES -= eb
+        _PACK_CACHE_STATS["evictions"] += 1
+        _log.info(
+            "pack cache evict %s... (%.1f KiB) -> %d entr%s / %.1f MiB "
+            "held (caps: %d entries / %.0f MiB)", key[:12], eb / 1024,
+            len(_PACK_CACHE), "y" if len(_PACK_CACHE) == 1 else "ies",
+            _PACK_CACHE_BYTES / 2**20, _PACK_CACHE_MAX,
+            _PACK_CACHE_MAX_BYTES / 2**20)
 
 
 def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins,
@@ -102,12 +154,11 @@ def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins,
 
 def _cache_put(key, out):
     """Insert a packed layout, then evict LRU entries past the bounds."""
+    global _PACK_CACHE_BYTES
     _PACK_CACHE[key] = out
-    total = sum(_entry_bytes(e) for e in _PACK_CACHE.values())
-    while (len(_PACK_CACHE) > _PACK_CACHE_MAX
-           or total > _PACK_CACHE_MAX_BYTES) and len(_PACK_CACHE) > 1:
-        _, evicted = _PACK_CACHE.popitem(last=False)
-        total -= _entry_bytes(evicted)
+    _PACK_CACHE_BYTES += _entry_bytes(out)
+    _PACK_CACHE_STATS["misses"] += 1
+    _evict_to_bounds()
 
 
 def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
@@ -130,6 +181,7 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
            if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
+        _PACK_CACHE_STATS["hits"] += 1
         return _PACK_CACHE[key]
     if reorder:
         out = BCS.pack_csc_reordered(w, mask, block, n_bins=n_bins)
@@ -167,6 +219,7 @@ def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
            if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
+        _PACK_CACHE_STATS["hits"] += 1
         return _PACK_CACHE[key]
     out = BCS.pattern_lower(w, mask, group=group, n_bins=n_bins,
                             reorder=reorder)
@@ -177,7 +230,9 @@ def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
 
 def clear_pack_cache():
     """Drop every memoized layout (test isolation / memory pressure)."""
+    global _PACK_CACHE_BYTES
     _PACK_CACHE.clear()
+    _PACK_CACHE_BYTES = 0
 
 
 def sparse_linear(x, packed: PackedLayout | None = None, w=None, mask=None,

@@ -8,6 +8,7 @@ map schemes -> one-shot masks -> compile_model (BCS packing) -> generate.
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
@@ -39,8 +40,17 @@ def main(argv=None):
                     help="block-prune, compile to BCS, serve on the "
                          "Pallas sparse kernel")
     ap.add_argument("--prune-rate", type=float, default=0.6)
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="AOT artifact store: load the packed layouts "
+                         "from DIR when the model digest matches "
+                         "(checksum-verified + validated), else pack "
+                         "fresh and publish — kills the cold start on "
+                         "replica restart")
     args = ap.parse_args(argv)
 
+    if args.artifacts:
+        # surface the store's structured warm-start / fallback reasons
+        logging.basicConfig(level=logging.INFO)
     cfg = configs.get(args.arch, smoke=args.smoke)
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     b = synthetic_batch(0, 0, args.batch, args.prompt_len, cfg.vocab,
@@ -53,8 +63,12 @@ def main(argv=None):
         params = apply_masks(params, masks)
         t0 = time.time()
         params, report = compile_model(params, masks, SPARSE_SPEC,
-                                       keep_dense=False)
-        print(f"compile_model in {time.time() - t0:.2f}s:")
+                                       keep_dense=False,
+                                       artifact_dir=args.artifacts)
+        dt_compile = time.time() - t0
+        print(f"compile_model in {dt_compile:.2f}s"
+              + (f" (artifact store: {args.artifacts})"
+                 if args.artifacts else "") + ":")
         print(compiled_summary(report))
 
     t0 = time.time()

@@ -1,0 +1,429 @@
+"""Crash-safe AOT store for compiled (packed) model artifacts.
+
+``BENCH_e2e_sparse`` puts cold packing at ~0.4-1.5 s per model vs ~6-9 ms
+content-cached — fatal for elastic serving where replicas spin up under
+load.  This module persists the §4.3 compile result (every
+``core.packed.PackedLayout``/``TapLayout`` plus the compile report) so a
+replica loads weights *already packed*:
+
+    serve.compile.compile_model(..., artifact_dir=...)   # the front door
+    launch.serve --artifacts DIR                         # CLI
+    distributed.elastic.replica_restore(...)             # replica restart
+
+On-disk format — content-addressed, one directory per model digest::
+
+    <artifact_dir>/<digest>/arrays.npz      every layout leaf, path-keyed
+    <artifact_dir>/<digest>/MANIFEST.json   format version, pack key,
+                                            per-file sha256 + byte sizes,
+                                            per-layer layout specs, the
+                                            compile report
+
+The digest (``model_digest``) extends the ``kernels.ops.pack`` content-
+digest contract to the whole model: weights, masks, mapping, and every
+compile knob that changes the produced layouts.  Writers stage into a
+``.tmp_*`` sibling and publish with one atomic ``os.replace`` AFTER the
+manifest (checksums included) hits disk — the same manifest-last
+discipline as ``distributed.checkpoint``, whose ``file_checksum`` this
+module shares — so a crashed writer leaves an ignored husk, never a
+half-written artifact.
+
+Load is paranoid by construction: digest match -> per-file checksum ->
+spec/shape check -> full ``core.validate`` layout validation.  EVERY
+failure (missing artifact, stale digest, version skew, checksum mismatch,
+truncation, corrupt payload, layout-invariant violation) raises a
+structured ``ArtifactError``/``LayoutError``; ``load_grafted`` logs the
+reason and returns None so the caller falls back to a fresh pack — a bad
+artifact can cost a repack, never a wrong output.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import logging
+import os
+import pathlib
+import shutil
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed import PackedLayout, TapLayout
+from repro.core.validate import LayoutError, validate_layout
+from repro.distributed.checkpoint import file_checksum
+from repro.models.module import path_str
+
+log = logging.getLogger("repro.serve.artifacts")
+
+FORMAT_VERSION = 1
+MANIFEST_FILE = "MANIFEST.json"
+ARRAYS_FILE = "arrays.npz"
+
+
+class ArtifactError(RuntimeError):
+    """Base of the artifact-failure taxonomy; ``code`` is the stable tag
+    the fallback log carries."""
+
+    code = "artifact"
+
+    def __init__(self, detail, *, path=None):
+        self.detail = detail
+        self.path = str(path) if path is not None else None
+        where = f" [{self.path}]" if self.path else ""
+        super().__init__(f"[{self.code}]{where} {detail}")
+
+
+class ArtifactMissing(ArtifactError):
+    """No artifact published for this digest (cold start, or every
+    existing artifact is stale)."""
+
+    code = "missing"
+
+
+class ArtifactDigestMismatch(ArtifactError):
+    """Manifest pack key disagrees with the requested digest — a stale or
+    relocated artifact."""
+
+    code = "digest_mismatch"
+
+
+class ArtifactVersionSkew(ArtifactError):
+    """Artifact written under a different format version."""
+
+    code = "version_skew"
+
+
+class ArtifactChecksumError(ArtifactError):
+    """A payload file fails its manifest checksum or byte size (bit
+    corruption / truncation)."""
+
+    code = "checksum"
+
+
+class ArtifactCorrupt(ArtifactError):
+    """The artifact is structurally unreadable: manifest/leaves missing,
+    bad JSON, or leaf shapes disagreeing with the manifest spec."""
+
+    code = "corrupt"
+
+
+# ---------------------------------------------------------------------------
+# Model digest — the cache key an artifact is addressed by
+# ---------------------------------------------------------------------------
+
+def _hash_tree(h, tree, tag):
+    h.update(f"<{tag}>".encode())
+    if tree is None:
+        h.update(b"none")
+        return
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        a = np.asarray(leaf)
+        h.update(path_str(p).encode())
+        h.update(str((a.shape, str(a.dtype))).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+
+
+def model_digest(params, masks, mapping, *, block_override=None,
+                 min_saving=0.0, reorder=True, n_bins=None,
+                 exclude=("router", "embed", "head")) -> str:
+    """Content digest of everything that determines the compile result:
+    the weights, the masks, the scheme mapping, and every ``compile_model``
+    knob that changes the produced layouts (``keep_dense`` is applied at
+    graft time, so it stays out of the key).  Extends the per-layer
+    ``kernels.ops.pack`` cache-key contract to the whole model — two
+    compiles share an artifact iff they would produce identical layouts."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr(("repro-artifact", FORMAT_VERSION,
+                   [(pat, repr(choice)) for pat, choice in mapping],
+                   block_override, float(min_saving), bool(reorder),
+                   n_bins, tuple(exclude))).encode())
+    _hash_tree(h, params, "params")
+    _hash_tree(h, masks, "masks")
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Layout (de)serialization
+# ---------------------------------------------------------------------------
+
+def _to_numpy(v):
+    a = np.asarray(v)
+    if a.dtype.name == "bfloat16":      # numpy can't savez ml_dtypes
+        a = a.astype(np.float32)        # lossless widening; load recasts
+    return a
+
+
+def _layout_leaves(layout):
+    """(name, leaf-or-None) pairs in a fixed, reconstructible order."""
+    if isinstance(layout, PackedLayout):
+        for b in range(layout.n_bins):
+            yield f"values.{b}", layout.values[b]
+            yield f"k_idx.{b}", layout.k_idx[b]
+        yield "nnz", layout.nnz
+        yield "perm", layout.perm
+        yield "inv_perm", layout.inv_perm
+    else:
+        for b in range(layout.n_bins):
+            yield f"values.{b}", layout.values[b]
+            yield f"t_idx.{b}", layout.t_idx[b]
+            if layout.k_full is not None:
+                yield f"k_full.{b}", layout.k_full[b]
+        yield "nnz", layout.nnz
+        yield "alive", layout.alive
+        yield "perm", layout.perm
+        yield "inv_perm", layout.inv_perm
+
+
+def _layout_spec(layout):
+    """JSON-serializable static description: aux data + per-leaf
+    dtype/shape (the true dtype, so bf16 survives the f32 widening)."""
+    leaves = {name: {"dtype": jnp.asarray(leaf).dtype.name,
+                     "shape": list(np.shape(leaf))}
+              for name, leaf in _layout_leaves(layout) if leaf is not None}
+    if isinstance(layout, PackedLayout):
+        return {"layout": "packed", "n_bins": layout.n_bins,
+                "block": list(layout.block), "shape": list(layout.shape),
+                "conv_taps": ([list(t) for t in layout.conv_taps]
+                              if layout.conv_taps is not None else None),
+                "leaves": leaves}
+    return {"layout": "tap", "n_bins": layout.n_bins,
+            "group": layout.group, "shape": list(layout.shape),
+            "leaves": leaves}
+
+
+def _layout_from_spec(lpath, spec, data):
+    """Rebuild one layout from its manifest spec + the arrays bundle;
+    raises ``ArtifactCorrupt`` on any missing or spec-divergent leaf."""
+    leaves = spec["leaves"]
+
+    def _get(name, required=True):
+        rec = leaves.get(name)
+        if rec is None:
+            if required:
+                raise ArtifactCorrupt(
+                    f"layer {lpath!r}: required leaf {name!r} absent from "
+                    "the manifest spec")
+            return None
+        key = f"{lpath}::{name}"
+        if key not in data:
+            raise ArtifactCorrupt(
+                f"layer {lpath!r}: leaf {name!r} missing from "
+                f"{ARRAYS_FILE}")
+        a = data[key]
+        if list(a.shape) != list(rec["shape"]):
+            raise ArtifactCorrupt(
+                f"layer {lpath!r}: leaf {name!r} shape {tuple(a.shape)} "
+                f"!= manifest {tuple(rec['shape'])}")
+        out = jnp.asarray(a)
+        if out.dtype.name != rec["dtype"]:
+            out = out.astype(rec["dtype"])
+        return out
+
+    n_bins = int(spec["n_bins"])
+    if spec["layout"] == "packed":
+        return PackedLayout(
+            values=tuple(_get(f"values.{b}") for b in range(n_bins)),
+            k_idx=tuple(_get(f"k_idx.{b}") for b in range(n_bins)),
+            nnz=_get("nnz"),
+            perm=_get("perm", required=False),
+            inv_perm=_get("inv_perm", required=False),
+            block=tuple(spec["block"]), shape=tuple(spec["shape"]),
+            conv_taps=(tuple(tuple(t) for t in spec["conv_taps"])
+                       if spec.get("conv_taps") is not None else None))
+    if spec["layout"] == "tap":
+        has_kfull = "k_full.0" in leaves
+        return TapLayout(
+            values=tuple(_get(f"values.{b}") for b in range(n_bins)),
+            t_idx=tuple(_get(f"t_idx.{b}") for b in range(n_bins)),
+            k_full=(tuple(_get(f"k_full.{b}") for b in range(n_bins))
+                    if has_kfull else None),
+            nnz=_get("nnz"), alive=_get("alive"),
+            perm=_get("perm", required=False),
+            inv_perm=_get("inv_perm", required=False),
+            group=int(spec["group"]), shape=tuple(spec["shape"]))
+    raise ArtifactCorrupt(
+        f"layer {lpath!r}: unknown layout kind {spec['layout']!r}")
+
+
+# ---------------------------------------------------------------------------
+# Save / load
+# ---------------------------------------------------------------------------
+
+def _resolve(tree, lpath):
+    node = tree
+    for part in lpath.split("/") if lpath else ():
+        node = node[part]
+    return node
+
+
+def _packed_layers(exec_params, report):
+    """{layer node path: layout} for every packed row of the report."""
+    out = {}
+    for row in report:
+        if not row.get("packed"):
+            continue
+        wpath = row["path"]
+        lpath = wpath[:-2] if wpath.endswith("/w") else ""
+        out[lpath] = _resolve(exec_params, lpath)["packed"]
+    return out
+
+
+def save_artifact(artifact_dir, key, exec_params, report, *,
+                  meta=None, validate=True):
+    """Publish the compile result under ``<artifact_dir>/<key>``.
+
+    Stages into a ``.tmp_*`` sibling, writes the arrays bundle, then the
+    manifest (format version, pack key, per-file sha256 + sizes, layer
+    specs, report), then publishes with one atomic ``os.replace`` — a
+    crash at any point leaves either the previous state or a ``.tmp_*``
+    husk loaders never read.  Content-addressed: if this digest is
+    already published (or a concurrent writer wins the rename race) the
+    existing artifact is kept.  Returns the final path.
+    """
+    artifact_dir = pathlib.Path(artifact_dir)
+    final = artifact_dir / key
+    if final.exists():
+        return final
+    layers = _packed_layers(exec_params, report)
+    if validate:
+        for lpath, layout in layers.items():
+            validate_layout(layout, path=lpath)
+    arrays, specs = {}, {}
+    for lpath, layout in layers.items():
+        specs[lpath] = _layout_spec(layout)
+        for name, leaf in _layout_leaves(layout):
+            if leaf is not None:
+                arrays[f"{lpath}::{name}"] = _to_numpy(leaf)
+    tmp = artifact_dir / f".tmp_{key}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    np.savez(tmp / ARRAYS_FILE, **arrays)
+    arrays_path = tmp / ARRAYS_FILE
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "pack_key": key,
+        "files": {ARRAYS_FILE: {"sha256": file_checksum(arrays_path),
+                                "bytes": arrays_path.stat().st_size}},
+        "layers": specs,
+        "report": report,
+        "meta": meta or {},
+    }
+    (tmp / MANIFEST_FILE).write_text(json.dumps(manifest, indent=1))
+    try:
+        os.replace(tmp, final)
+    except OSError:                    # lost a concurrent-writer race
+        shutil.rmtree(tmp, ignore_errors=True)
+    log.info("published artifact %s (%d layer(s), %.2f MiB)", final,
+             len(layers), sum(a.nbytes for a in arrays.values()) / 2**20)
+    return final
+
+
+def load_artifact(artifact_dir, key):
+    """Load + verify the artifact for ``key``.
+
+    Verification order: digest directory exists -> manifest readable ->
+    format version -> manifest pack key matches -> per-file byte size and
+    sha256 -> per-leaf presence/shape against the spec -> full layout
+    validation (``core.validate``).  Raises the matching
+    ``ArtifactError`` subclass (or ``LayoutError``) at the first failure;
+    returns ``(layers, report)`` where ``layers`` maps layer node paths
+    to validated layouts.
+    """
+    artifact_dir = pathlib.Path(artifact_dir)
+    d = artifact_dir / key
+    if not d.is_dir():
+        stale = [p.name for p in artifact_dir.glob("*")
+                 if p.is_dir() and not p.name.startswith(".tmp")] \
+            if artifact_dir.is_dir() else []
+        hint = (f" ({len(stale)} artifact(s) with other digests present "
+                "— stale after a weight/mapping change?)") if stale else ""
+        raise ArtifactMissing(f"no artifact for digest {key}{hint}", path=d)
+    man_path = d / MANIFEST_FILE
+    if not man_path.exists():
+        raise ArtifactCorrupt("manifest missing (torn write?)", path=d)
+    try:
+        manifest = json.loads(man_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise ArtifactCorrupt(f"unreadable manifest: {e}",
+                              path=man_path) from e
+    ver = manifest.get("format_version")
+    if ver != FORMAT_VERSION:
+        raise ArtifactVersionSkew(
+            f"artifact format_version {ver!r} != supported "
+            f"{FORMAT_VERSION}", path=man_path)
+    if manifest.get("pack_key") != key:
+        raise ArtifactDigestMismatch(
+            f"manifest pack_key {manifest.get('pack_key')!r} != requested "
+            f"digest {key!r}", path=man_path)
+    for fname, rec in manifest.get("files", {}).items():
+        fp = d / fname
+        if not fp.exists():
+            raise ArtifactChecksumError(f"payload file {fname} missing",
+                                        path=fp)
+        size = fp.stat().st_size
+        if size != rec.get("bytes"):
+            raise ArtifactChecksumError(
+                f"{fname} is {size} bytes, manifest says "
+                f"{rec.get('bytes')} (truncated write?)", path=fp)
+        digest = file_checksum(fp)
+        if digest != rec.get("sha256"):
+            raise ArtifactChecksumError(
+                f"{fname} sha256 {digest[:12]}... != manifest "
+                f"{str(rec.get('sha256'))[:12]}... (bit corruption?)",
+                path=fp)
+    try:
+        data = np.load(d / ARRAYS_FILE)
+    except Exception as e:  # zipfile/pickle errors vary by corruption
+        raise ArtifactCorrupt(f"unreadable arrays bundle: {e}",
+                              path=d / ARRAYS_FILE) from e
+    try:
+        layer_specs = manifest["layers"]
+        report = manifest["report"]
+    except KeyError as e:
+        raise ArtifactCorrupt(f"manifest missing section {e}",
+                              path=man_path) from e
+    layers = {}
+    for lpath, spec in layer_specs.items():
+        layout = _layout_from_spec(lpath, spec, data)
+        validate_layout(layout, path=lpath)     # LayoutError propagates
+        layers[lpath] = layout
+    for row in report:                 # JSON turned tuples into lists
+        for k in ("block", "shape"):
+            if isinstance(row.get(k), list):
+                row[k] = tuple(row[k])
+    return layers, report
+
+
+def _copy_dicts(tree):
+    """Copy the dict skeleton (leaves shared) so grafting never mutates
+    the caller's param tree."""
+    return {k: _copy_dicts(v) if isinstance(v, dict) else v
+            for k, v in tree.items()}
+
+
+def load_grafted(artifact_dir, key, params, *, keep_dense=True):
+    """The warm-start front door behind ``compile_model(artifact_dir=)``.
+
+    Returns ``(exec_params, report)`` with the stored layouts grafted
+    onto ``params`` (dense ``w`` dropped when ``keep_dense`` is False —
+    the same semantics as a fresh compile), or ``None`` after logging the
+    structured fallback reason — the caller then packs fresh.  No failure
+    mode escapes: corruption can cost a repack, never a wrong output.
+    """
+    try:
+        layers, report = load_artifact(artifact_dir, key)
+        exec_params = _copy_dicts(params)
+        for lpath, layout in layers.items():
+            node = _resolve(exec_params, lpath)
+            node["packed"] = layout
+            if not keep_dense:
+                node.pop("w", None)
+    except (ArtifactError, LayoutError, KeyError, TypeError) as e:
+        code = getattr(e, "code", type(e).__name__)
+        level = log.info if isinstance(e, ArtifactMissing) else log.warning
+        level("artifact fallback -> fresh pack [%s]: %s", code, e)
+        return None
+    log.info("warm start: %d packed layer(s) from %s", len(layers),
+             pathlib.Path(artifact_dir) / key)
+    return exec_params, report

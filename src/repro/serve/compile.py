@@ -150,7 +150,7 @@ def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4):
 
 def compile_model(params, masks=None, mapping=(), *, block_override=None,
                   keep_dense=True, min_saving=0.0, reorder=True, n_bins=None,
-                  exclude=("router", "embed", "head")):
+                  exclude=("router", "embed", "head"), artifact_dir=None):
     """Pack every block-pruned linear/conv layer of ``params`` for sparse
     execution.  Returns (exec_params, report).
 
@@ -183,12 +183,33 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
     exclude  : path substrings never packed (router/embeddings per §5.2.4).
                MoE expert projections (gate/up/down) ARE packed — they
                dispatch through ``kernels.ops.sparse_expert_linear``.
+    artifact_dir : AOT artifact store (``serve.artifacts``).  When set,
+               the model digest (weights + masks + mapping + compile
+               knobs) is looked up first: digest match -> checksum verify
+               -> layout validation -> warm start with the stored layouts
+               grafted on (no packing at all).  Digest mismatch, checksum
+               failure, version skew, or invariant violation logs its
+               structured reason and falls back to THIS fresh pack, whose
+               result is then published crash-safely (tmp + atomic
+               rename) for the next start.
 
     Every packed node's report entry carries the effective density, the
     pre-reorder padded column degree L, the post-reorder ``L_reordered``
     with its gain, and the skipped-FLOP fraction; skipped nodes carry the
     reason, so the report doubles as the compile log.
     """
+    artifact_key = None
+    if artifact_dir is not None:
+        from repro.serve import artifacts as ART
+        artifact_key = ART.model_digest(
+            params, masks, mapping, block_override=block_override,
+            min_saving=min_saving, reorder=reorder, n_bins=n_bins,
+            exclude=exclude)
+        warm = ART.load_grafted(artifact_dir, artifact_key, params,
+                                keep_dense=keep_dense)
+        if warm is not None:
+            return warm
+
     report = []
     # per-producer bin defaults (None = use each producer's own): block
     # layouts 4, tap layouts 8 — see kernels.ops.pack_taps
@@ -285,7 +306,18 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
         report.append({"path": wpath, "packed": True, "kind": kind, **stats})
         return out
 
-    return walk(params, masks, ""), report
+    exec_params = walk(params, masks, "")
+    if artifact_key is not None:
+        # publish for the next (replica) start; best-effort — an
+        # unwritable store must never fail the compile itself
+        try:
+            ART.save_artifact(artifact_dir, artifact_key, exec_params,
+                              report)
+        except OSError as e:
+            import logging
+            logging.getLogger("repro.serve.artifacts").warning(
+                "could not publish artifact to %s: %s", artifact_dir, e)
+    return exec_params, report
 
 
 def compiled_summary(report) -> str:

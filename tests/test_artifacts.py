@@ -1,0 +1,291 @@
+"""Fault injection against the AOT artifact store (serve.artifacts).
+
+Every corruption class an on-disk artifact can suffer — bit flips,
+truncation, stale digests, format-version skew, tampered manifests,
+invariant-violating layouts, crashed half-written publishes — must be
+DETECTED (structured ``ArtifactError``/``LayoutError``) and must degrade
+to a fresh pack whose execution tree is bit-identical to a cold compile.
+The warm path itself must also be bit-identical.  A corrupted artifact
+may cost a repack; it may never mis-execute."""
+import json
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import regularity as R
+from repro.core import reweighted as RW
+from repro.core import validate as V
+from repro.kernels import ops
+from repro.serve import artifacts as ART
+from repro.serve.compile import compile_model
+from repro.train.trainer import apply_masks
+
+SPEC = [(r"ffn/(gate|up)/w", RW.SchemeChoice("block", (16, 16))),
+        (r"conv/w", RW.SchemeChoice("pattern", connectivity=0.5))]
+
+
+def small_model(seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = {
+        "blk": {"ffn": {
+            "gate": {"w": jax.random.normal(key, (64, 96), jnp.float32)},
+            "up": {"w": jax.random.normal(jax.random.fold_in(key, 1),
+                                          (64, 96), jnp.float32)}}},
+        "conv": {"w": jax.random.normal(jax.random.fold_in(key, 2),
+                                        (16, 8, 3, 3), jnp.float32)},
+        "head": {"w": jax.random.normal(jax.random.fold_in(key, 3),
+                                        (64, 32), jnp.float32)},
+    }
+    masks = RW.random_block_masks(params, [SPEC[0]], (16, 16),
+                                  keep_prob=0.4)
+    masks["conv"] = {"w": R.pattern_mask(params["conv"]["w"],
+                                         connectivity_rate=0.5)}
+    return apply_masks(params, masks), masks
+
+
+def assert_trees_identical(a, b):
+    la, sa = jax.tree_util.tree_flatten(a)
+    lb, sb = jax.tree_util.tree_flatten(b)
+    assert sa == sb
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture
+def store(tmp_path):
+    """A populated artifact store + (pm, masks, key, cold exec tree)."""
+    ops.clear_pack_cache()
+    pm, masks = small_model()
+    cold, report = compile_model(pm, masks, SPEC, artifact_dir=tmp_path)
+    key = ART.model_digest(pm, masks, SPEC)
+    assert (tmp_path / key / ART.MANIFEST_FILE).exists()
+    return tmp_path, pm, masks, key, cold
+
+
+def warm_compile(tmp_path, pm, masks):
+    ops.clear_pack_cache()
+    return compile_model(pm, masks, SPEC, artifact_dir=tmp_path)
+
+
+# -- happy path --------------------------------------------------------------
+
+def test_warm_load_bit_identical_to_cold(store):
+    tmp_path, pm, masks, key, cold = store
+    misses_before = ops.pack_cache_stats()["misses"]
+    warm, _ = warm_compile(tmp_path, pm, masks)
+    assert_trees_identical(cold, warm)
+    # and the load really came from disk: no new packs happened
+    assert ops.pack_cache_stats()["misses"] == misses_before
+
+
+def test_load_artifact_validates_layouts(store):
+    tmp_path, _, _, key, cold = store
+    layers, report = ART.load_artifact(tmp_path, key)
+    assert layers and all(
+        V.validate_layout(lo) is lo for lo in layers.values())
+    assert any(r["packed"] for r in report)
+
+
+def test_digest_covers_weights_and_options(store):
+    tmp_path, pm, masks, key, _ = store
+    bumped = jax.tree_util.tree_map(lambda x: x, pm)
+    bumped["head"]["w"] = pm["head"]["w"] + 1.0
+    assert ART.model_digest(bumped, masks, SPEC) != key
+    assert ART.model_digest(pm, masks, SPEC, n_bins=2) != key
+    assert ART.model_digest(pm, masks, SPEC) == key     # deterministic
+
+
+# -- corruption classes ------------------------------------------------------
+
+def flip_bit(path, offset=100):
+    raw = bytearray(path.read_bytes())
+    raw[offset] ^= 0x40
+    path.write_bytes(bytes(raw))
+
+
+def test_bitflip_in_arrays_detected_and_falls_back(store, caplog):
+    tmp_path, pm, masks, key, cold = store
+    flip_bit(tmp_path / key / ART.ARRAYS_FILE)
+    with pytest.raises(ART.ArtifactChecksumError):
+        ART.load_artifact(tmp_path, key)
+    with caplog.at_level(logging.WARNING, "repro.serve.artifacts"):
+        repacked, _ = warm_compile(tmp_path, pm, masks)
+    assert "fresh pack" in caplog.text and "checksum" in caplog.text
+    assert_trees_identical(cold, repacked)
+
+
+def test_truncated_arrays_detected(store):
+    tmp_path, pm, masks, key, cold = store
+    f = tmp_path / key / ART.ARRAYS_FILE
+    f.write_bytes(f.read_bytes()[:64])
+    with pytest.raises(ART.ArtifactChecksumError):
+        ART.load_artifact(tmp_path, key)
+    repacked, _ = warm_compile(tmp_path, pm, masks)
+    assert_trees_identical(cold, repacked)
+
+
+def test_stale_digest_changed_weights_is_a_miss(store, caplog):
+    """Weights changed since publish -> different digest -> clean miss +
+    fresh pack; the stale artifact is simply not selected."""
+    tmp_path, pm, masks, key, _ = store
+    pm2 = jax.tree_util.tree_map(lambda x: x, pm)
+    pm2["head"]["w"] = pm["head"]["w"] * 2.0
+    with caplog.at_level(logging.INFO, "repro.serve.artifacts"):
+        ops.clear_pack_cache()
+        fresh, _ = compile_model(pm2, masks, SPEC, artifact_dir=tmp_path)
+    assert "[missing]" in caplog.text
+    ops.clear_pack_cache()
+    cold2, _ = compile_model(pm2, masks, SPEC)
+    assert_trees_identical(fresh, cold2)
+
+
+def test_tampered_pack_key_is_digest_mismatch(store):
+    tmp_path, pm, masks, key, cold = store
+    mpath = tmp_path / key / ART.MANIFEST_FILE
+    man = json.loads(mpath.read_text())
+    man["pack_key"] = "0" * len(key)
+    mpath.write_text(json.dumps(man))
+    with pytest.raises(ART.ArtifactDigestMismatch):
+        ART.load_artifact(tmp_path, key)
+    repacked, _ = warm_compile(tmp_path, pm, masks)
+    assert_trees_identical(cold, repacked)
+
+
+def test_version_skew_detected(store):
+    tmp_path, pm, masks, key, cold = store
+    mpath = tmp_path / key / ART.MANIFEST_FILE
+    man = json.loads(mpath.read_text())
+    man["format_version"] = ART.FORMAT_VERSION + 1
+    mpath.write_text(json.dumps(man))
+    with pytest.raises(ART.ArtifactVersionSkew):
+        ART.load_artifact(tmp_path, key)
+    repacked, _ = warm_compile(tmp_path, pm, masks)
+    assert_trees_identical(cold, repacked)
+
+
+def test_unreadable_manifest_is_corrupt(store):
+    tmp_path, pm, masks, key, cold = store
+    (tmp_path / key / ART.MANIFEST_FILE).write_text("{not json")
+    with pytest.raises(ART.ArtifactCorrupt):
+        ART.load_artifact(tmp_path, key)
+    repacked, _ = warm_compile(tmp_path, pm, masks)
+    assert_trees_identical(cold, repacked)
+
+
+def test_missing_manifest_is_corrupt(store):
+    tmp_path, _, _, key, _ = store
+    (tmp_path / key / ART.MANIFEST_FILE).unlink()
+    with pytest.raises(ART.ArtifactCorrupt):
+        ART.load_artifact(tmp_path, key)
+
+
+def test_invariant_violation_with_valid_checksums(store):
+    """The nastiest case: rewrite arrays.npz with an out-of-range k_idx
+    AND recompute the manifest checksums, so only layout validation can
+    catch it.  Must raise LayoutError on load and repack identically."""
+    tmp_path, pm, masks, key, cold = store
+    adir = tmp_path / key
+    data = dict(np.load(adir / ART.ARRAYS_FILE))
+    kname = next(k for k in data if "::k_idx." in k)
+    arr = data[kname].copy()
+    arr.flat[0] = 10_000                  # far outside any Kb
+    data[kname] = arr
+    np.savez(adir / ART.ARRAYS_FILE, **data)
+    mpath = adir / ART.MANIFEST_FILE
+    man = json.loads(mpath.read_text())
+    apath = adir / ART.ARRAYS_FILE
+    man["files"][ART.ARRAYS_FILE] = {
+        "sha256": ART.file_checksum(apath),
+        "bytes": apath.stat().st_size,
+    }
+    mpath.write_text(json.dumps(man))
+    with pytest.raises(V.LayoutError):
+        ART.load_artifact(tmp_path, key)
+    repacked, _ = warm_compile(tmp_path, pm, masks)
+    assert_trees_identical(cold, repacked)
+
+
+def test_crashed_writer_husk_is_ignored(store):
+    """A dead writer's .tmp_* staging dir must not shadow the artifact or
+    break the next publish."""
+    tmp_path, pm, masks, key, cold = store
+    husk = tmp_path / f".tmp_{key}_dead"
+    husk.mkdir()
+    (husk / ART.ARRAYS_FILE).write_bytes(b"partial")
+    warm, _ = warm_compile(tmp_path, pm, masks)
+    assert_trees_identical(cold, warm)
+
+
+def test_concurrent_publish_race_keeps_existing(store):
+    """save_artifact into an already-published digest is a no-op."""
+    tmp_path, pm, masks, key, cold = store
+    before = (tmp_path / key / ART.MANIFEST_FILE).read_bytes()
+    layers, report = ART.load_artifact(tmp_path, key)
+    ART.save_artifact(tmp_path, key, cold, report)
+    assert (tmp_path / key / ART.MANIFEST_FILE).read_bytes() == before
+
+
+def test_save_refuses_invalid_layout(store, tmp_path_factory):
+    """Publish-side validation: a corrupted in-memory layout never makes
+    it to disk."""
+    import dataclasses
+    tmp_path, pm, masks, key, cold = store
+    layers, report = ART.load_artifact(tmp_path, key)
+    lpath, layout = next(iter(layers.items()))
+    k = np.array(layout.k_idx[0]).copy()
+    k.flat[0] = -3
+    bad = dataclasses.replace(
+        layout, k_idx=(k,) + layout.k_idx[1:])
+    broken = jax.tree_util.tree_map(lambda x: x, cold)
+    node = broken
+    for part in lpath.split("/"):
+        node = node[part]
+    node["packed"] = bad
+    out = tmp_path_factory.mktemp("resave")
+    with pytest.raises(V.LayoutError):
+        ART.save_artifact(out, key, broken, report)
+    assert not (out / key).exists()
+
+
+def test_bf16_roundtrip_exact(tmp_path):
+    """bf16 layouts widen to f32 on disk and recast on load — lossless."""
+    ops.clear_pack_cache()
+    pm, masks = small_model(seed=3)
+    pm = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16)
+        if x.dtype == jnp.float32 else x, pm)
+    cold, _ = compile_model(pm, masks, SPEC, artifact_dir=tmp_path)
+    ops.clear_pack_cache()
+    warm, _ = compile_model(pm, masks, SPEC, artifact_dir=tmp_path)
+    assert_trees_identical(cold, warm)
+    layers, _ = ART.load_artifact(
+        tmp_path, ART.model_digest(pm, masks, SPEC))
+    assert layers and all(
+        jnp.asarray(lo.values[0]).dtype == jnp.bfloat16
+        for lo in layers.values())
+
+
+# -- pack cache bound (satellite b) ------------------------------------------
+
+def test_pack_cache_eviction_is_bounded_and_logged(caplog):
+    ops.clear_pack_cache()
+    old = ops.configure_pack_cache()        # snapshot caps BEFORE tightening
+    ops.configure_pack_cache(max_entries=2)
+    try:
+        with caplog.at_level(logging.INFO, "repro.kernels.ops"):
+            for seed in range(3):
+                w = np.asarray(jax.random.normal(
+                    jax.random.PRNGKey(seed), (32, 32), jnp.float32))
+                mask = np.ones((32, 32), np.float32)
+                ops.pack(w, mask, (16, 16))
+        stats = ops.pack_cache_stats()
+        assert stats["entries"] == 2
+        assert stats["evictions"] == 1
+        assert "pack cache evict" in caplog.text
+    finally:
+        ops.configure_pack_cache(max_entries=old["max_entries"],
+                                 max_bytes=old["max_bytes"])
+        ops.clear_pack_cache()

@@ -1,0 +1,130 @@
+"""The benchmark-regression gate itself (benchmarks.compare): regressions
+fail, noise-tolerant wall metrics get the loose threshold, and every way a
+baseline/fresh file can be missing or corrupt produces a ONE-LINE failure
+pointing at ``--update-baselines`` — never a traceback."""
+import json
+
+import pytest
+
+from benchmarks import compare as C
+
+
+def payload(rows):
+    return {"bench": "bench_x", "rows": [
+        {"name": n, "us_per_call": 1.0, "derived": d} for n, d in rows]}
+
+
+def write(path, obj):
+    path.write_text(json.dumps(obj) if not isinstance(obj, str) else obj)
+
+
+@pytest.fixture
+def gate(tmp_path, monkeypatch):
+    """Isolated baseline dir + fresh dir; returns a main() runner."""
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    monkeypatch.setattr(C, "BASELINE_DIR", base)
+
+    def run():
+        return C.main(["--fresh-dir", str(fresh)])
+    return base, fresh, run
+
+
+GOOD = payload([("row_a", "modeled_speedup=4.00x;flops_saved=0.60"),
+                ("coldstart,x", "artifact_warm_speedup=50.00x")])
+
+
+def test_identical_files_pass(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", GOOD)
+    write(fresh / "BENCH_x.json", GOOD)
+    assert run() == 0
+    assert "gate passed" in capsys.readouterr().out
+
+
+def test_regression_fails(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", GOOD)
+    write(fresh / "BENCH_x.json",
+          payload([("row_a", "modeled_speedup=2.00x;flops_saved=0.60"),
+                   ("coldstart,x", "artifact_warm_speedup=50.00x")]))
+    assert run() == 1
+    assert "regressed" in capsys.readouterr().err
+
+
+def test_warm_speedup_rides_loose_wall_threshold(gate):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", GOOD)
+    # 50x -> 30x: a 40% swing, above --threshold but under --wall-threshold
+    write(fresh / "BENCH_x.json",
+          payload([("row_a", "modeled_speedup=4.00x;flops_saved=0.60"),
+                   ("coldstart,x", "artifact_warm_speedup=30.00x")]))
+    assert run() == 0
+
+
+def test_missing_fresh_file_points_at_update_baselines(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_renamed_away.json", GOOD)
+    assert run() == 1
+    err = capsys.readouterr().err
+    assert err.count("FAIL:") == 1
+    assert "missing" in err and "--update-baselines" in err
+
+
+def test_corrupt_baseline_is_one_line_not_traceback(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", "{definitely not json")
+    write(fresh / "BENCH_x.json", GOOD)
+    assert run() == 1
+    err = capsys.readouterr().err
+    assert err.count("FAIL:") == 1
+    assert "corrupt" in err and "--update-baselines" in err
+
+
+def test_baseline_rows_missing_derived_key(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", {"rows": [{"name": "row_a"}]})
+    write(fresh / "BENCH_x.json", GOOD)
+    assert run() == 1
+    assert "corrupt" in capsys.readouterr().err
+
+
+def test_corrupt_fresh_file_fails_cleanly(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", GOOD)
+    write(fresh / "BENCH_x.json", "[1, 2")
+    assert run() == 1
+    err = capsys.readouterr().err
+    assert "fresh" in err and "corrupt" in err
+
+
+def test_vanished_metric_fails(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", GOOD)
+    write(fresh / "BENCH_x.json",
+          payload([("row_a", "modeled_speedup=4.00x"),
+                   ("coldstart,x", "artifact_warm_speedup=50.00x")]))
+    assert run() == 1
+    assert "vanished" in capsys.readouterr().err
+
+
+def test_fresh_without_baseline_is_a_note_not_a_failure(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", GOOD)
+    write(fresh / "BENCH_x.json", GOOD)
+    write(fresh / "BENCH_new_suite.json", GOOD)
+    assert run() == 0
+    out = capsys.readouterr().out
+    assert "no committed baseline" in out and "BENCH_new_suite" in out
+
+
+def test_memory_metric_gates_lower_is_better(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json", payload([("row_a", "peak_mb=10.00")]))
+    write(fresh / "BENCH_x.json", payload([("row_a", "peak_mb=14.00")]))
+    assert run() == 1
+    assert "grew" in capsys.readouterr().err
+    write(fresh / "BENCH_x.json", payload([("row_a", "peak_mb=8.00")]))
+    assert run() == 0                       # shrinking is never a failure

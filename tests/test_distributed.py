@@ -1,5 +1,7 @@
-"""Distribution layer tests: checkpoint/restart, elastic meshes, gradient
-compression, sharding spec coverage — all CPU-runnable."""
+"""Distribution layer tests: checkpoint/restart (incl. corruption and
+wrong-tree restores -> structured CheckpointError), elastic meshes +
+replica warm restarts through the artifact store, gradient compression,
+sharding spec coverage — all CPU-runnable."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -9,7 +11,8 @@ from jax.sharding import PartitionSpec as P
 from repro import configs
 from repro.distributed import checkpoint as CKPT
 from repro.distributed import sharding as SH
-from repro.distributed.elastic import choose_mesh_shape, StragglerMonitor
+from repro.distributed.elastic import (choose_mesh_shape, replica_restore,
+                                       StragglerMonitor)
 from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as T
 
@@ -47,6 +50,83 @@ class TestCheckpoint:
         assert restored is None and step is None
 
 
+class TestCheckpointFaults:
+    """Every way a restore can go wrong raises a CheckpointError that
+    names the offending file/param — never a raw KeyError or a shape
+    blow-up deep inside tree_unflatten."""
+
+    TREE = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+
+    def _saved(self, tmp_path):
+        CKPT.save(tmp_path, 3, self.TREE)
+        return tmp_path / "step_00000003"
+
+    def test_restore_into_bigger_tree_names_missing_param(self, tmp_path):
+        self._saved(tmp_path)
+        bigger = {**self.TREE, "extra": {"w": jnp.zeros((2, 2)),
+                                         "v": jnp.zeros(3)}}
+        with pytest.raises(CKPT.CheckpointError) as ei:
+            CKPT.restore(tmp_path, bigger)
+        assert ei.value.code == "missing_key"
+        assert "extra/v" in str(ei.value) and "+1 more" in str(ei.value)
+
+    def test_restore_into_smaller_tree_names_unexpected_param(
+            self, tmp_path):
+        self._saved(tmp_path)
+        with pytest.raises(CKPT.CheckpointError) as ei:
+            CKPT.restore(tmp_path, {"a": self.TREE["a"]})
+        assert ei.value.code == "unexpected_key"
+        assert "b/c" in str(ei.value)
+
+    def test_restore_wrong_shape_names_param(self, tmp_path):
+        self._saved(tmp_path)
+        wrong = {"a": jnp.zeros((3, 2)), "b": {"c": self.TREE["b"]["c"]}}
+        with pytest.raises(CKPT.CheckpointError) as ei:
+            CKPT.restore(tmp_path, wrong)
+        assert ei.value.code == "shape" and "'a'" in str(ei.value)
+
+    def test_restore_wrong_dtype_kind_names_param(self, tmp_path):
+        self._saved(tmp_path)
+        wrong = {"a": self.TREE["a"], "b": {"c": jnp.ones((4,))}}
+        with pytest.raises(CKPT.CheckpointError) as ei:
+            CKPT.restore(tmp_path, wrong)
+        assert ei.value.code == "dtype" and "b/c" in str(ei.value)
+
+    def test_bitflip_in_shard_fails_checksum(self, tmp_path):
+        d = self._saved(tmp_path)
+        shard = d / "shard_0.npz"
+        raw = bytearray(shard.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        shard.write_bytes(bytes(raw))
+        with pytest.raises(CKPT.CheckpointError) as ei:
+            CKPT.restore(tmp_path, self.TREE)
+        assert ei.value.code == "checksum"
+
+    def test_truncated_shard_fails_size_check(self, tmp_path):
+        d = self._saved(tmp_path)
+        shard = d / "shard_0.npz"
+        shard.write_bytes(shard.read_bytes()[:-16])
+        with pytest.raises(CKPT.CheckpointError) as ei:
+            CKPT.restore(tmp_path, self.TREE)
+        assert ei.value.code == "checksum" and "truncated" in str(ei.value)
+
+    def test_missing_shard_file(self, tmp_path):
+        d = self._saved(tmp_path)
+        (d / "shard_0.npz").unlink()
+        with pytest.raises(CKPT.CheckpointError) as ei:
+            CKPT.restore(tmp_path, self.TREE)
+        assert ei.value.code == "missing_file"
+
+    def test_bf16_roundtrip_recasts(self, tmp_path):
+        tree = {"w": jnp.linspace(-2, 2, 8).astype(jnp.bfloat16)}
+        CKPT.save(tmp_path, 1, tree)
+        restored, _ = CKPT.restore(tmp_path, tree)
+        assert restored["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                      np.asarray(tree["w"], np.float32))
+
+
 class TestElastic:
     def test_shrink_keeps_model_parallel(self):
         shape, axes = choose_mesh_shape(512, model_parallel=16, want_pods=2)
@@ -63,6 +143,47 @@ class TestElastic:
         for _ in range(10):
             assert not m.observe(1.0)
         assert m.observe(10.0)
+
+    def test_replica_restore_warm_starts_from_artifacts(self, tmp_path):
+        """Replica restart: checkpoint restore + artifact warm start give
+        the same exec tree as a fresh cold compile, with zero packing on
+        the second (restarted) replica."""
+        from repro.core import reweighted as RW
+        from repro.kernels import ops
+        from repro.train.trainer import apply_masks
+
+        spec = [(r"ffn/(gate|up)/w", RW.SchemeChoice("block", (16, 16)))]
+        params = {"blk": {"ffn": {
+            "gate": {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                            (64, 96), jnp.float32)},
+            "up": {"w": jax.random.normal(jax.random.PRNGKey(1),
+                                          (64, 96), jnp.float32)}}}}
+        masks = RW.random_block_masks(params, spec, (16, 16),
+                                      keep_prob=0.4)
+        pm = apply_masks(params, masks)
+        ckpt, store = tmp_path / "ckpt", tmp_path / "art"
+        CKPT.save(ckpt, 12, pm)
+
+        ops.clear_pack_cache()
+        exec1, rep1, step1 = replica_restore(ckpt, pm, mapping=spec,
+                                             artifact_dir=store)
+        assert step1 == 12 and any(r["packed"] for r in rep1)
+        # restarted replica: same call, artifact now published
+        ops.clear_pack_cache()
+        misses = ops.pack_cache_stats()["misses"]
+        exec2, rep2, step2 = replica_restore(ckpt, pm, mapping=spec,
+                                             artifact_dir=store)
+        assert step2 == 12
+        assert ops.pack_cache_stats()["misses"] == misses  # no repack
+        l1 = jax.tree_util.tree_leaves(exec1)
+        l2 = jax.tree_util.tree_leaves(exec2)
+        assert len(l1) == len(l2)
+        for x, y in zip(l1, l2):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_replica_restore_empty_dir(self, tmp_path):
+        assert replica_restore(tmp_path / "none", {"a": jnp.zeros(1)}) == \
+            (None, None, None)
 
 
 class TestGradCompression:

@@ -1,0 +1,246 @@
+"""Layout-invariant validation (core.validate): every corruption class of a
+``PackedLayout``/``TapLayout`` raises the matching ``LayoutError`` subclass,
+and freshly packed layouts pass clean.  These are the invariants the AOT
+artifact loader relies on to refuse a corrupted file instead of serving
+wrong outputs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bcs as BCS
+from repro.core import regularity as R
+from repro.core import validate as V
+from repro.kernels import ops
+
+
+def packed_case(reorder=True, n_bins=4, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = np.asarray(jax.random.normal(k1, (128, 256), jnp.float32))
+    keep = np.asarray(jax.random.uniform(k2, (8, 16))) > 0.6
+    mask = np.repeat(np.repeat(keep, 16, 0), 16, 1).astype(np.float32)
+    return ops.pack(w * mask, mask, (16, 16), reorder=reorder,
+                    n_bins=n_bins, use_cache=False)
+
+
+def conv_packed_case(seed=0):
+    kh, kw, cin, cout = 3, 3, 16, 64
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = np.asarray(jax.random.normal(k1, (kh * kw * cin, cout), jnp.float32))
+    keep = np.asarray(jax.random.uniform(k2, (kh * kw * cin // 8,
+                                              cout // 8))) > 0.5
+    mask = np.repeat(np.repeat(keep, 8, 0), 8, 1).astype(np.float32)
+    return ops.pack(w * mask, mask, (8, 8), reorder=True, n_bins=2,
+                    conv=(kh, kw, cin), use_cache=False)
+
+
+def tap_case(connectivity=0.5, n_bins=4, seed=0):
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                     (16, 8, 3, 3), jnp.float32))
+    mask = np.asarray(R.pattern_mask(w, connectivity_rate=connectivity))
+    return ops.pack_taps(w * mask, mask, n_bins=n_bins, use_cache=False)
+
+
+def replace_leaf(layout, field, b, new):
+    """dataclasses.replace with bin ``b`` of tuple-of-arrays ``field``
+    swapped for ``new`` (None b replaces the whole field)."""
+    if b is None:
+        return dataclasses.replace(layout, **{field: new})
+    old = getattr(layout, field)
+    return dataclasses.replace(
+        layout, **{field: old[:b] + (new,) + old[b + 1:]})
+
+
+# -- clean layouts pass ------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda: packed_case(reorder=True),
+    lambda: packed_case(reorder=False, n_bins=1),
+    conv_packed_case,
+    tap_case,
+    lambda: tap_case(connectivity=0.0, n_bins=1),
+])
+def test_fresh_layouts_validate_clean(make):
+    layout = make()
+    assert V.validate_layout(layout, path="t") is layout
+
+
+def test_validate_rejects_non_layout():
+    with pytest.raises(V.LayoutStructureError):
+        V.validate_layout({"values": ()}, path="t")
+
+
+# -- PackedLayout violations -------------------------------------------------
+
+def test_packed_block_must_divide_shape():
+    bad = dataclasses.replace(packed_case(), shape=(120, 256))
+    with pytest.raises(V.LayoutGeometryError):
+        V.validate_layout(bad)
+
+
+def test_packed_bin_sizes_must_tile_columns():
+    layout = packed_case()
+    v0 = np.asarray(layout.values[0])
+    bad = replace_leaf(layout, "values", 0, v0[:-1])   # drop a column
+    bad = replace_leaf(bad, "k_idx", 0, np.asarray(bad.k_idx[0])[:-1])
+    with pytest.raises(V.LayoutGeometryError):
+        V.validate_layout(bad)
+
+
+def test_packed_k_idx_out_of_range():
+    layout = packed_case()
+    k = np.array(layout.k_idx[0]).copy()
+    k.flat[0] = layout.Kb                              # one past the end
+    with pytest.raises(V.LayoutIndexError) as ei:
+        V.validate_layout(replace_leaf(layout, "k_idx", 0, k), path="lyr")
+    assert ei.value.code == "index_range" and ei.value.path == "lyr"
+
+
+def test_packed_negative_k_idx():
+    layout = packed_case()
+    k = np.array(layout.k_idx[0]).copy()
+    k.flat[0] = -1
+    with pytest.raises(V.LayoutIndexError):
+        V.validate_layout(replace_leaf(layout, "k_idx", 0, k))
+
+
+def test_packed_nnz_exceeds_bin_degree():
+    layout = packed_case()
+    n = np.array(layout.nnz).copy()
+    n[0] = layout.bin_degrees[0] + 1
+    with pytest.raises(V.LayoutCountError):
+        V.validate_layout(dataclasses.replace(layout, nnz=n))
+
+
+def test_packed_nnz_negative():
+    layout = packed_case()
+    n = np.array(layout.nnz).copy()
+    n[0] = -1
+    with pytest.raises(V.LayoutCountError):
+        V.validate_layout(dataclasses.replace(layout, nnz=n))
+
+
+def test_packed_perm_not_inverse():
+    layout = packed_case()
+    assert layout.perm is not None
+    ip = np.array(layout.inv_perm).copy()
+    ip[[0, 1]] = ip[[1, 0]]                            # break the inverse
+    with pytest.raises(V.LayoutPermutationError):
+        V.validate_layout(dataclasses.replace(layout, inv_perm=ip))
+
+
+def test_packed_perm_not_a_permutation():
+    layout = packed_case()
+    p = np.array(layout.perm).copy()
+    p[0] = p[1]                                        # duplicate entry
+    with pytest.raises(V.LayoutPermutationError):
+        V.validate_layout(dataclasses.replace(layout, perm=p))
+
+
+def test_packed_lone_perm_is_an_error():
+    layout = packed_case()
+    with pytest.raises(V.LayoutPermutationError):
+        V.validate_layout(dataclasses.replace(layout, inv_perm=None))
+
+
+def test_packed_values_k_idx_shape_mismatch():
+    layout = packed_case()
+    k = np.array(layout.k_idx[0])[..., :-1]            # truncate a slot
+    with pytest.raises(V.LayoutStructureError):
+        V.validate_layout(replace_leaf(layout, "k_idx", 0, k))
+
+
+def test_conv_taps_must_match_geometry():
+    layout = conv_packed_case()
+    taps = list(layout.conv_taps)
+    taps[0], taps[1] = taps[1], taps[0]                # swap two taps
+    bad = dataclasses.replace(layout, conv_taps=tuple(taps))
+    with pytest.raises(V.LayoutAuxError):
+        V.validate_layout(bad)
+
+
+def test_conv_taps_wrong_arity():
+    layout = conv_packed_case()
+    bad = dataclasses.replace(layout,
+                              conv_taps=layout.conv_taps[:-1])
+    with pytest.raises(V.LayoutAuxError):
+        V.validate_layout(bad)
+
+
+# -- TapLayout violations ----------------------------------------------------
+
+def test_tap_t_idx_out_of_range():
+    tap = tap_case()
+    t = np.array(tap.t_idx[0]).copy()
+    t.flat[0] = len(np.asarray(tap.alive))             # past the alive band
+    with pytest.raises(V.LayoutIndexError):
+        V.validate_layout(replace_leaf(tap, "t_idx", 0, t))
+
+
+def test_tap_alive_out_of_range():
+    tap = tap_case()
+    alive = np.array(tap.alive).copy()
+    alive[-1] = tap.shape[0]                           # K itself
+    with pytest.raises(V.LayoutIndexError):
+        V.validate_layout(dataclasses.replace(tap, alive=alive))
+
+
+def test_tap_alive_must_be_sorted():
+    tap = tap_case()
+    alive = np.array(tap.alive).copy()
+    if alive.size < 2:
+        pytest.skip("degenerate alive band")
+    alive[[0, 1]] = alive[[1, 0]]
+    with pytest.raises(V.LayoutIndexError):
+        V.validate_layout(dataclasses.replace(tap, alive=alive))
+
+
+def test_tap_k_full_must_match_alive_gather():
+    tap = tap_case()
+    assert tap.k_full is not None
+    kf = np.array(tap.k_full[0]).copy()
+    kf.flat[0] = (kf.flat[0] + 1) % tap.shape[0]
+    with pytest.raises(V.LayoutAuxError):
+        V.validate_layout(replace_leaf(tap, "k_full", 0, kf))
+
+
+def test_tap_nnz_exceeds_bin_degree():
+    tap = tap_case()
+    n = np.array(tap.nnz).copy()
+    n[0] = tap.bin_degrees[0] + 1
+    with pytest.raises(V.LayoutCountError):
+        V.validate_layout(dataclasses.replace(tap, nnz=n))
+
+
+def test_tap_group_must_divide():
+    tap = tap_case()
+    with pytest.raises(V.LayoutGeometryError):
+        V.validate_layout(dataclasses.replace(tap, group=3))
+
+
+# -- tree walk ---------------------------------------------------------------
+
+def test_validate_tree_counts_and_tags_path():
+    tree = {"blk": {"ffn": {"packed": packed_case()},
+                    "conv": {"packed": tap_case(), "b": np.zeros(3)}},
+            "head": {"w": np.zeros((4, 4))}}
+    assert V.validate_tree(tree) == 2
+    k = np.array(tree["blk"]["ffn"]["packed"].k_idx[0]).copy()
+    k.flat[0] = -5
+    tree["blk"]["ffn"]["packed"] = replace_leaf(
+        tree["blk"]["ffn"]["packed"], "k_idx", 0, k)
+    with pytest.raises(V.LayoutIndexError) as ei:
+        V.validate_tree(tree)
+    assert "blk/ffn/packed" in str(ei.value)
+
+
+def test_roundtrip_after_validation_is_lossless():
+    """Validation itself must not perturb the layout (pure check)."""
+    layout = packed_case()
+    before = np.asarray(BCS.layout_to_dense(layout)) \
+        if hasattr(BCS, "layout_to_dense") else layout.to_dense()
+    V.validate_layout(layout)
+    after = layout.to_dense()
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
