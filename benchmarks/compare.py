@@ -19,6 +19,15 @@ Gated metrics (parsed from each row's ``derived`` string):
     path, so a fresh value above ``baseline * (1 + threshold)`` means a
     code change started allocating/moving more (e.g. the implicit conv
     path re-materializing its patch tensor).
+  * serving throughput (``*tok_per_s``) — higher-is-better wall-clock
+    tokens/s from the continuous-batching engine; gated at the loose
+    ``--wall-threshold`` like the other wall ratios (``batch_speedup``,
+    the B=8/B=1 decode scaling, is wall-derived too and gates the same
+    way).
+  * batch occupancy (``mean_occupancy``) — the scheduler's mean busy-slot
+    fraction over a *simulated* (virtual-step) workload: fully
+    deterministic, so it gates at the strict threshold; a drop means the
+    scheduler started stranding slots.
 
 A higher-better metric regresses when ``fresh < baseline * (1 -
 threshold)`` (default threshold 10%, wall metrics 50%); a ``*_mb`` metric
@@ -50,19 +59,23 @@ FRACTION_KEYS = (
     "flops_skipped_eff",
     "mean_flops_saved",
     "mean_flops_saved_exec",
+    "mean_occupancy",
 )
 FRACTION_FLOOR = 0.05
 SPEEDUP_RE = re.compile(r"^([0-9.]+)x$")
 # wall-clock-derived ratios: gated at --wall-threshold, not --threshold
-WALL_KEYS = ("loop_speedup", "artifact_warm_speedup")
+WALL_KEYS = ("loop_speedup", "artifact_warm_speedup", "batch_speedup")
 WALL_ROW_PREFIXES = ("pack_vectorized", "coldstart")
 # lower-is-better byte metrics (deterministic accounting, no wall noise)
 MEMORY_SUFFIX = "_mb"
+# higher-is-better wall-clock throughput (serving engine tokens/s)
+THROUGHPUT_SUFFIX = "tok_per_s"
 
 
 def is_wall_metric(key):
     row, _, metric = key.rpartition(":")
-    return metric in WALL_KEYS or row.startswith(WALL_ROW_PREFIXES)
+    return (metric in WALL_KEYS or metric.endswith(THROUGHPUT_SUFFIX)
+            or row.startswith(WALL_ROW_PREFIXES))
 
 
 def is_memory_metric(key):
@@ -78,7 +91,8 @@ def metrics_from(payload):
             ratio = SPEEDUP_RE.match(val)
             if "speedup" in key and ratio:
                 out[f"{row['name']}:{key}"] = float(ratio.group(1))
-            elif key in FRACTION_KEYS or key.endswith(MEMORY_SUFFIX):
+            elif (key in FRACTION_KEYS or key.endswith(MEMORY_SUFFIX)
+                    or key.endswith(THROUGHPUT_SUFFIX)):
                 out[f"{row['name']}:{key}"] = float(val)
     return out
 

@@ -13,6 +13,7 @@ BENCHES = [
     "bench_latency_model",    # Fig 9/10 (latency model sweeps)
     "bench_kernel",           # §4.3 BCS kernel skipping + packing speed
     "bench_e2e_sparse",       # whole-model prefill+decode via compile_model
+    "bench_serving",          # continuous-batching engine: tok/s + occupancy
     "bench_coldstart",        # AOT artifact store: cold pack vs warm load
     "bench_moe_sparse",       # batched sparse MoE expert GEMMs vs dense
     "bench_conv_sparse",      # conv via im2col PackedLayout (Fig 5 sweep)

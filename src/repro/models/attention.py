@@ -126,14 +126,27 @@ def attend_cached(q, k_cache, v_cache, q_pos, k_pos, window=0):
     """Single-token decode over an S-sharded KV cache — direct softmax; GSPMD
     emits the cross-shard max/sum all-reduces for the sharded Sk dim.
 
-    q: (B, 1, KV, G, hd); caches: (B, Sk, KV, hd)."""
+    q: (B, 1, KV, G, hd); caches: (B, Sk, KV, hd).  Positions come either
+    batch-shared (``q_pos (Q,)``, ``k_pos (Sk,)`` — the single-sequence
+    ``generate`` path) or per-slot ragged (``q_pos (B, Q)``, ``k_pos
+    (B, Sk)`` — the continuous-batching engine, where every slot holds a
+    different history length; never-written entries carry
+    ``serve.kvcache.INVALID_POS`` so they fail the causal mask).  The
+    masked-softmax math is identical elementwise, so a ragged batch stays
+    bit-identical per slot to the shared-position B=1 decode."""
     hd = q.shape[-1]
     s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32) * hd ** -0.5,
                    k_cache.astype(jnp.float32))
-    mask = k_pos[None, :] <= q_pos[:, None]
-    if window > 0:
-        mask &= k_pos[None, :] > q_pos[:, None] - window
-    s = jnp.where(mask, s, NEG_INF)
+    if k_pos.ndim == 1:
+        mask = k_pos[None, :] <= q_pos[:, None]                  # (Q, Sk)
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+    else:
+        mask = k_pos[:, None, :] <= q_pos[:, :, None]            # (B, Q, Sk)
+        if window > 0:
+            mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -205,6 +218,48 @@ def mha_decode(params, x, cache, pos, n_heads, n_kv, head_dim, *,
 
     out = attend_cached(_grouped(q, n_kv), k_cache, v_cache, pos[:, 0:1][0],
                         k_pos, window=window)
+    out = out.reshape(B, 1, n_heads * head_dim)
+    y = _proj(params, "wo", out, m)
+    return y, {"k": k_cache, "v": v_cache, "pos": k_pos}
+
+
+def mha_decode_ragged(params, x, cache, pos, cap, n_heads, n_kv, head_dim, *,
+                      window=0, rope_theta=10000.0, masks=None, dist=None):
+    """One-token decode across RAGGED slot histories (continuous batching).
+
+    Unlike ``mha_decode`` — which assumes every batch row sits at the same
+    position — each slot ``b`` carries its own position ``pos[b]`` and its
+    own ring capacity ``cap[b]`` (the request's effective prefill length,
+    see ``serve.kvcache``).  cache: ``k/v (B, S, KV, hd)`` slot arrays and
+    a per-entry position map ``pos (B, S)``; the new token writes ring
+    index ``pos[b] % cap[b]`` of row ``b`` — the same fixed-shape
+    drop-oldest rule ``mha_decode`` applies, so each slot's outputs are
+    bit-identical to a B=1 ``mha_decode`` sequence over the same request.
+    Entries beyond a slot's capacity keep ``INVALID_POS`` and never pass
+    the causal mask.  Returns (out, cache).
+    """
+    m = masks or {}
+    B, _, _ = x.shape
+    q = _proj(params, "wq", x, m).reshape(B, 1, n_heads, head_dim)
+    k = _proj(params, "wk", x, m).reshape(B, 1, n_kv, head_dim)
+    v = _proj(params, "wv", x, m).reshape(B, 1, n_kv, head_dim)
+    q = L.apply_rotary(q, pos, rope_theta)
+    k = L.apply_rotary(k, pos, rope_theta)
+
+    slots = (pos[:, 0] % jnp.maximum(cap, 1)).astype(jnp.int32)     # (B,)
+    upd = jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice(c, n, (s, 0, 0)))
+    k_cache = upd(cache["k"], k.astype(cache["k"].dtype), slots)
+    v_cache = upd(cache["v"], v.astype(cache["v"].dtype), slots)
+    k_pos = jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice(c, n, (s,)))(
+        cache["pos"], pos[:, :1], slots)
+    if dist is not None:
+        k_cache = dist.shard_cache(k_cache)
+        v_cache = dist.shard_cache(v_cache)
+
+    out = attend_cached(_grouped(q, n_kv), k_cache, v_cache, pos, k_pos,
+                        window=window)
     out = out.reshape(B, 1, n_heads * head_dim)
     y = _proj(params, "wo", out, m)
     return y, {"k": k_cache, "v": v_cache, "pos": k_pos}

@@ -431,6 +431,83 @@ def decode_step(params, cfg: ArchConfig, token, cache, pos, *, dist=None):
     return logits, cache
 
 
+def decode_step_ragged(params, cfg: ArchConfig, token, cache, pos, cap, *,
+                       dist=None):
+    """Continuous-batching decode step: ONE forward over every cache slot.
+
+    token (B, 1) int32 per-slot current tokens; pos (B, 1) int32 per-slot
+    positions; cap (B,) int32 per-slot ring capacities (free slots run as
+    pos=0/cap=1 padding work whose outputs the engine discards).  cache is
+    the ``serve.kvcache`` slot cache.  Returns (logits (B, 1, V), cache).
+
+    Per slot the math is bit-identical to ``decode_step`` at B=1: the
+    ragged attention masks by per-entry positions, every other op is
+    row-wise, and MoE dispatches with ``group=1`` so batch occupancy can
+    never change a token's expert-capacity outcome (at B=1 the group
+    clamp makes ``group`` irrelevant, so this matches ``generate``
+    exactly).  One compiled executable serves the engine's whole lifetime
+    — admission/eviction only rewrite cache rows, never shapes.
+    """
+    fam = cfg.family
+    x = L.embed(params["embed"], token)
+    if dist is not None:
+        x = dist.shard_activations(x)
+
+    def attn_dec(lp, hn, c):
+        return A.mha_decode_ragged(lp["attn"], hn, c, pos, cap, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd,
+                                   window=cfg.sliding_window,
+                                   rope_theta=cfg.rope_theta, dist=dist)
+
+    if fam in ("dense", "moe"):
+        def body(h, xs):
+            lp, c = xs
+            att, c = attn_dec(lp, L.rmsnorm(lp["ln1"], h), c)
+            h = h + att
+            hn = L.rmsnorm(lp["ln2"], h)
+            if fam == "moe":
+                f, _ = moe(lp["moe"], hn, top_k=cfg.top_k, group=1,
+                           dist=dist)
+            else:
+                f = L.ffn(lp["ffn"], hn)
+            return h + f, c
+        x, kv = maybe_scan(body, x, (params["layers"], cache["kv"]),
+                           cfg.unroll_layers)
+        cache = {"kv": kv}
+    elif fam == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            out, st = S.ssm_decode(lp["ssm"], L.rmsnorm(lp["ln1"], h), st,
+                                   dist=dist)
+            return h + out, st
+        x, st = maybe_scan(body, x, (params["layers"], cache["ssm"]),
+                           cfg.unroll_layers)
+        cache = {"ssm": st}
+    elif fam == "hybrid":
+        def body(h, xs):
+            lp, c, st = xs
+            hn = L.rmsnorm(lp["ln1"], h)
+            att, c = attn_dec(lp, hn, c)
+            sm, st = S.ssm_decode(lp["ssm"], hn, st, dist=dist)
+            h = h + (att + sm) * 0.5
+            h = h + L.ffn(lp["ffn"], L.rmsnorm(lp["ln2"], h))
+            return h, (c, st)
+        x, (kv, st) = maybe_scan(
+            body, x, (params["layers"], cache["kv"], cache["ssm"]),
+            cfg.unroll_layers)
+        cache = {"kv": kv, "ssm": st}
+    else:
+        raise NotImplementedError(
+            f"family {fam!r} is not served by the continuous-batching "
+            "engine (dense/moe/ssm/hybrid only)")
+
+    x = L.rmsnorm(params["norm_f"], x)
+    logits = L.unembed(params["head"], x)
+    if dist is not None:
+        logits = dist.shard_logits(logits)
+    return logits, cache
+
+
 # ---------------------------------------------------------------------------
 # Fused decode loop (scan over decode_step — no per-token Python round-trip)
 # ---------------------------------------------------------------------------

@@ -1,18 +1,25 @@
-"""Serving: prefill (forward pass that also emits the per-layer caches) and
-the batched decode loop.  ``decode_step`` itself lives in models/transformer
-(it is what the decode_* dry-run shapes lower)."""
+"""Serving: prefill (forward pass that also emits the per-layer caches),
+the single-sequence fused decode loop (``generate`` — the bit-identity
+oracle), and the continuous-batching ``ServingEngine`` that decodes many
+live requests through ONE batched step per token so every packed kernel
+launch amortizes the streamed weights over the whole batch.
+``decode_step`` itself lives in models/transformer (it is what the
+decode_* dry-run shapes lower)."""
 from __future__ import annotations
 
 from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.models import ssm as S
 from repro.models import transformer as T
+from repro.serve import kvcache as KV
+from repro.serve.scheduler import Request, Scheduler
 
 tmap = jax.tree_util.tree_map
 
@@ -181,6 +188,160 @@ def generate(params, cfg: ArchConfig, tokens, n_new, frontend=None,
     toks, _ = loop(params, tok, cache, start,
                    key if key is not None else jax.random.PRNGKey(0))
     return toks
+
+
+def _jit_serving_step(cfg, dist):
+    """The engine's batched decode executable: ragged decode step + greedy
+    argmax fused into one program.  Cached per (cfg, dist); the slot-array
+    shapes are fixed for an engine's lifetime, so admission/eviction never
+    retraces (locked by a trace-count regression test)."""
+    def make():
+        def step(p, tok, cache, pos, cap):
+            logits, cache = T.decode_step_ragged(p, cfg, tok, cache, pos,
+                                                 cap, dist=dist)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, cache
+        return step
+    return _cached_jit(("serving_step", cfg, id(dist)), make)
+
+
+class ServingEngine:
+    """Continuous-batching serving engine: scheduler + slot KV cache +
+    one batched decode launch per step.
+
+    Requests are admitted into free slots mid-flight (each admission is a
+    B=1 jitted prefill plus a slot-row write), every step runs ALL active
+    slots through one ``decode_step_ragged`` — so each degree-bin
+    ``bsr_matmul_packed`` launch does an M=B GEMM over the same packed
+    weights instead of B separate M=1 GEMVs — and finished requests are
+    evicted the step their stop condition fires, freeing the slot for the
+    queue.  Decoding is greedy (temperature 0): a batch of N requests is
+    token-for-token identical to N independent ``generate`` calls (the
+    oracle test in tests/test_serving.py).
+
+    Counters in ``stats``: engine steps, admitted/finished/evicted/
+    rejected requests, emitted tokens, and the running occupancy sum
+    (``mean_occupancy()`` = mean fraction of busy slots per step).
+    """
+
+    FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+    def __init__(self, params, cfg: ArchConfig, *, n_slots=8, seq_cap=256,
+                 dist=None):
+        if cfg.family not in self.FAMILIES:
+            raise NotImplementedError(
+                f"family {cfg.family!r} is not served (supported: "
+                f"{self.FAMILIES})")
+        if cfg.sliding_window:
+            # a slot never needs more ring than the attention window
+            seq_cap = min(seq_cap, cfg.sliding_window)
+        self.params, self.cfg, self.dist = params, cfg, dist
+        self.n_slots, self.seq_cap = n_slots, seq_cap
+        dtype = params["embed"]["table"].dtype
+        self.cache = KV.init_slots(params, cfg, n_slots, seq_cap,
+                                   dtype=dtype)
+        self.sched = Scheduler(n_slots)
+        # per-slot decode operands; free slots idle as pos=0/cap=1 padding
+        self.tok = np.zeros((n_slots, 1), np.int32)
+        self.pos = np.zeros((n_slots, 1), np.int32)
+        self.cap = np.ones((n_slots,), np.int32)
+        self._step_fn = _jit_serving_step(cfg, dist)
+        self._rid = 0
+        self.requests: dict = {}
+        self.stats = {"steps": 0, "occupancy_sum": 0.0, "tokens": 0,
+                      "admitted": 0, "finished": 0, "evicted": 0,
+                      "rejected": 0}
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens, *, arrival=0,
+               stop_token=None) -> int:
+        """Queue one request; returns its id (``requests[rid].tokens`` holds
+        the output).  Prompts whose effective (window-clipped) length
+        exceeds the slot capacity are rejected up front — the one budget a
+        slot cannot ring-buffer away."""
+        req = Request(self._rid, tuple(int(t) for t in prompt),
+                      int(max_new_tokens), arrival=arrival,
+                      stop_token=stop_token)
+        self._rid += 1
+        self.requests[req.rid] = req
+        if (not req.prompt or req.max_new_tokens < 1
+                or KV.slot_capacity(self.cfg, len(req.prompt))
+                > self.seq_cap):
+            self.sched.reject(req, "over_budget")
+            self.stats["rejected"] += 1
+        else:
+            self.sched.submit(req)
+        return req.rid
+
+    # -- engine loop --------------------------------------------------------
+
+    def _admit(self):
+        while (pair := self.sched.admit(self.stats["steps"])) is not None:
+            slot, req = pair
+            toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+            logits, rc = _jit_prefill(self.cfg, self.dist)(
+                self.params, toks, None)
+            t0 = int(jnp.argmax(logits[:, -1, :], axis=-1)[0])
+            req.tokens.append(t0)
+            self.stats["admitted"] += 1
+            self.stats["tokens"] += 1
+            if req.done():      # budget of 1 (or instant stop token)
+                self._release(slot, req, "finished")
+                continue
+            self.cache = KV.write_prefill(self.cache, slot, rc)
+            self.cap[slot] = KV.slot_capacity(self.cfg, len(req.prompt))
+            self.pos[slot] = len(req.prompt)
+            self.tok[slot] = t0
+
+    def _release(self, slot, req, status):
+        self.sched.release(req, status)
+        self.cache = KV.clear_slot(self.cache, slot)
+        self.tok[slot], self.pos[slot], self.cap[slot] = 0, 0, 1
+        if status == "finished":
+            self.stats["finished"] += 1
+        else:
+            self.stats["evicted"] += 1
+
+    def step(self) -> int:
+        """One engine step: admit from the queue into free slots, decode
+        every active slot in one batched launch, harvest tokens, evict
+        finished requests.  Returns the number of active slots stepped
+        (0 = an idle tick while the open-loop queue waits to arrive)."""
+        self._admit()
+        active = self.sched.active()
+        self.stats["steps"] += 1
+        self.stats["occupancy_sum"] += len(active) / self.n_slots
+        if not active:
+            return 0
+        nxt, self.cache = self._step_fn(
+            self.params, jnp.asarray(self.tok), self.cache,
+            jnp.asarray(self.pos), jnp.asarray(self.cap))
+        nxt = np.asarray(nxt)
+        for slot, req in active:
+            t = int(nxt[slot])
+            req.tokens.append(t)
+            self.stats["tokens"] += 1
+            self.pos[slot] += 1
+            self.tok[slot] = t
+            if req.done():
+                self._release(slot, req, "finished")
+        return len(active)
+
+    def run(self, max_steps=100_000):
+        """Drive ``step`` until queue and slots drain; returns ``stats``.
+        ``max_steps`` bounds runaway workloads — anything still live when
+        it trips is evicted (status ``"evicted"``), never silently lost."""
+        while self.sched.has_work() and self.stats["steps"] < max_steps:
+            self.step()
+        for slot, req in self.sched.active():
+            self._release(slot, req, "evicted")
+        return self.stats
+
+    def mean_occupancy(self) -> float:
+        """Mean fraction of busy slots per engine step so far."""
+        steps = self.stats["steps"]
+        return self.stats["occupancy_sum"] / steps if steps else 0.0
 
 
 def generate_python(params, cfg: ArchConfig, tokens, n_new, frontend=None,

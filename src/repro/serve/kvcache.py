@@ -1,0 +1,147 @@
+"""Slot-based paged KV / state cache for the continuous-batching engine.
+
+The cache is one fixed-capacity pytree shared by every live request: each
+request owns one *slot* (a batch row) of every leaf, so admitting or
+evicting a request is a row write, never a reshape — the batched decode
+step keeps one compiled executable for the whole engine lifetime.
+
+Layout per family (``L`` = layer-stack dim, ``B`` = slot count, ``S`` =
+slot sequence capacity):
+
+* attention families (dense / moe / hybrid): ``k``/``v`` slot arrays
+  ``(L, B, S, KV, hd)`` plus a per-entry position map ``pos (L, B, S)``.
+  Entries never written hold :data:`INVALID_POS`, which fails the
+  ``k_pos <= q_pos`` decode mask for every real query position — a slot's
+  empty (or evicted) region can never attend, structurally.
+* SSM families (ssm / hybrid): the per-layer decode state
+  (``h (L, B, H, P, N)`` fp32 + ``conv (L, B, W-1, C)``), one batch row
+  per slot.
+
+Ring semantics match ``models.attention.mha_decode`` exactly, but per
+slot: a request whose prefill produced ``cap`` cache entries (``cap =
+min(prompt_len, sliding_window)``, the ``serve.engine._window_kv`` rule)
+keeps position ``p`` at ring index ``p % cap`` — drop-oldest at fixed
+shape.  Because each slot carries its own ``cap``, requests with
+different prompt lengths decode bit-identically to N independent
+``generate`` calls while sharing one launch.
+
+Admission writes retrace only per *bucket shape* (the request's ``cap``);
+same-length prompts reuse the compiled writer, and the batched decode
+step never retraces at all (its shapes are fixed by ``(B, S)``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as S
+
+tmap = jax.tree_util.tree_map
+
+# Sentinel for cache entries that were never written (or were invalidated
+# by eviction): larger than any reachable token position, so the decode
+# mask ``k_pos <= q_pos`` always rejects it.
+INVALID_POS = 1 << 30
+
+
+def slot_capacity(cfg: ArchConfig, prompt_len: int) -> int:
+    """Ring capacity a request's slot needs — ``serve.engine._window_kv``'s
+    effective prefill length: the sliding window when it is shorter than
+    the prompt, else the full prompt."""
+    W = cfg.sliding_window
+    if W and W < prompt_len:
+        return W
+    return prompt_len
+
+
+def init_slots(params, cfg: ArchConfig, n_slots: int, seq_cap: int,
+               dtype=jnp.bfloat16):
+    """Allocate the engine's slot cache: all-zero KV with every position
+    :data:`INVALID_POS` (nothing attends), zero SSM state."""
+    hd = cfg.hd
+    n = cfg.n_layers
+    fam = cfg.family
+
+    def kv():
+        return {"k": jnp.zeros((n, n_slots, seq_cap, cfg.n_kv_heads, hd),
+                               dtype),
+                "v": jnp.zeros((n, n_slots, seq_cap, cfg.n_kv_heads, hd),
+                               dtype),
+                "pos": jnp.full((n, n_slots, seq_cap), INVALID_POS,
+                                jnp.int32)}
+
+    def ssm_state():
+        one = S.ssm_state_init(
+            tmap(lambda a: a[0], params["layers"]["ssm"]), n_slots,
+            cfg.d_model, dtype)
+        return tmap(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if fam in ("dense", "moe"):
+        return {"kv": kv()}
+    if fam == "ssm":
+        return {"ssm": ssm_state()}
+    if fam == "hybrid":
+        return {"kv": kv(), "ssm": ssm_state()}
+    raise NotImplementedError(
+        f"family {fam!r} has no slot-cache layout (serving engine covers "
+        "dense/moe/ssm/hybrid)")
+
+
+@jax.jit
+def _scatter_kv(kv, slot, k, v, pos):
+    """Write one request's prefill KV (``k/v (L, 1, cap, KV, hd)``, ``pos
+    (L, cap)``) into slot row ``slot``; the row's tail beyond ``cap`` is
+    zeroed and its positions invalidated, so nothing from a previous
+    occupant survives."""
+    n, _, seq_cap = kv["pos"].shape
+    cap = pos.shape[1]
+    k_row = jnp.zeros(kv["k"].shape[:1] + kv["k"].shape[2:], kv["k"].dtype)
+    v_row = jnp.zeros_like(k_row)
+    k_row = k_row.at[:, :cap].set(k[:, 0].astype(k_row.dtype))
+    v_row = v_row.at[:, :cap].set(v[:, 0].astype(v_row.dtype))
+    p_row = jnp.full((n, seq_cap), INVALID_POS, jnp.int32)
+    p_row = p_row.at[:, :cap].set(pos)
+    return {"k": kv["k"].at[:, slot].set(k_row),
+            "v": kv["v"].at[:, slot].set(v_row),
+            "pos": kv["pos"].at[:, slot].set(p_row)}
+
+
+@jax.jit
+def _scatter_state(state, slot, st):
+    """Write one request's prefill SSM state (leaves ``(L, 1, ...)``) into
+    slot row ``slot``."""
+    return tmap(lambda a, b: a.at[:, slot].set(b[:, 0].astype(a.dtype)),
+                state, st)
+
+
+@jax.jit
+def _invalidate_kv(kv, slot):
+    return dict(kv, pos=kv["pos"].at[:, slot].set(INVALID_POS))
+
+
+def write_prefill(cache, slot: int, request_cache):
+    """Graft a single request's ``serve.engine.prefill`` cache (batch 1)
+    into slot ``slot``.  Retraces only per prefill *shape bucket* (the
+    request's ring capacity); same-length prompts reuse the executable."""
+    out = dict(cache)
+    if "kv" in cache:
+        rkv = request_cache["kv"]
+        out["kv"] = _scatter_kv(cache["kv"], slot, rkv["k"], rkv["v"],
+                                rkv["pos"])
+    if "ssm" in cache:
+        out["ssm"] = _scatter_state(cache["ssm"], slot,
+                                    request_cache["ssm"])
+    return out
+
+
+def clear_slot(cache, slot: int):
+    """Evict slot ``slot``: invalidate every cache position so the dead
+    history can never attend into the slot's next occupant.  (Admission
+    additionally zero-fills the row; this makes eviction safe even before
+    reuse.)  SSM state needs no invalidation — it is overwritten wholesale
+    at the next admission and free slots never feed real outputs."""
+    out = dict(cache)
+    if "kv" in cache:
+        out["kv"] = _invalidate_kv(cache["kv"], slot)
+    return out

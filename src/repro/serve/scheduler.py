@@ -1,0 +1,109 @@
+"""Continuous-batching request scheduler: slot admission, eviction, and
+per-request state.
+
+Pure Python bookkeeping — no JAX arrays — so every decision is exactly
+reproducible: FIFO by submission order with head-of-line arrival gating
+(a queued request whose simulated ``arrival`` step is still in the future
+blocks the queue, modelling an open-loop workload), admission into the
+LOWEST free slot index, eviction the step a stop condition fires.  The
+``events`` list is a complete audit trail; two runs over the same
+submissions replay identical traces (locked by a regression test).
+
+The scheduler never touches the cache: ``serve.engine.ServingEngine``
+pairs each admission/eviction with the matching ``serve.kvcache`` row
+write, so scheduler state and slot contents move in lockstep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from dataclasses import dataclass
+
+
+@dataclass
+class Request:
+    """One generation request and its accumulated per-request state.
+
+    ``tokens`` grows to at most ``max_new_tokens`` entries (the first is
+    the prefill argmax, exactly like ``serve.engine.generate``'s first
+    output column); generation also stops early when ``stop_token`` is
+    emitted.  ``status`` walks queued -> running -> finished (or
+    ``rejected`` when the request can never fit a slot, or ``evicted``
+    when the engine aborts it over budget)."""
+    rid: int
+    prompt: tuple
+    max_new_tokens: int
+    arrival: int = 0
+    stop_token: int | None = None
+    status: str = "queued"
+    slot: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+
+    def done(self) -> bool:
+        """Stop condition: token budget spent or stop token emitted."""
+        if len(self.tokens) >= self.max_new_tokens:
+            return True
+        return (self.stop_token is not None and bool(self.tokens)
+                and self.tokens[-1] == self.stop_token)
+
+
+class Scheduler:
+    """Slot allocator + FIFO queue for the continuous-batching engine."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._slots: list = [None] * n_slots
+        self._queue: deque = deque()
+        self.events: list = []
+
+    # -- queue side ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue a request (FIFO; callers submit in arrival order)."""
+        req.status = "queued"
+        self._queue.append(req)
+        self.events.append(("submit", req.rid, req.arrival))
+
+    def reject(self, req: Request, reason: str) -> None:
+        """Mark a request unservable (e.g. prompt beyond slot capacity)."""
+        req.status = "rejected"
+        self.events.append(("reject", req.rid, reason))
+
+    # -- slot side ----------------------------------------------------------
+
+    def admit(self, now: int):
+        """Admit the queue head into the lowest free slot, if both exist
+        and the head has arrived (``arrival <= now``).  Returns
+        ``(slot, request)`` or ``None``; loop until ``None`` to refill
+        every free slot in one engine step."""
+        free = next((i for i, r in enumerate(self._slots) if r is None),
+                    None)
+        if free is None or not self._queue:
+            return None
+        if self._queue[0].arrival > now:
+            return None
+        req = self._queue.popleft()
+        req.status, req.slot = "running", free
+        self._slots[free] = req
+        self.events.append(("admit", req.rid, free, now))
+        return free, req
+
+    def release(self, req: Request, status: str = "finished") -> None:
+        """Free a running request's slot and record why."""
+        self._slots[req.slot] = None
+        self.events.append((status, req.rid, req.slot))
+        req.status, req.slot = status, None
+
+    # -- queries ------------------------------------------------------------
+
+    def active(self):
+        """Occupied slots as ``[(slot, request), ...]`` in slot order."""
+        return [(i, r) for i, r in enumerate(self._slots) if r is not None]
+
+    def has_work(self) -> bool:
+        """True while anything is queued (even future arrivals) or live."""
+        return bool(self._queue) or any(r is not None for r in self._slots)
+
+    def queued(self) -> int:
+        """Number of requests still waiting in the queue."""
+        return len(self._queue)

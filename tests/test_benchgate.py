@@ -120,6 +120,47 @@ def test_fresh_without_baseline_is_a_note_not_a_failure(gate, capsys):
     assert "no committed baseline" in out and "BENCH_new_suite" in out
 
 
+def test_tok_per_s_gates_higher_better_at_wall_threshold(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json",
+          payload([("serving,B8", "tok_per_s=2000.0")]))
+    # 35% drop: above --threshold, under --wall-threshold -> passes
+    write(fresh / "BENCH_x.json",
+          payload([("serving,B8", "tok_per_s=1300.0")]))
+    assert run() == 0
+    # 60% collapse trips the wall gate
+    write(fresh / "BENCH_x.json",
+          payload([("serving,B8", "tok_per_s=800.0")]))
+    assert run() == 1
+    assert "regressed" in capsys.readouterr().err
+
+
+def test_batch_speedup_is_a_wall_metric(gate):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json",
+          payload([("serving,scaling", "batch_speedup=4.00x")]))
+    write(fresh / "BENCH_x.json",
+          payload([("serving,scaling", "batch_speedup=3.00x")]))
+    assert run() == 0          # 25% wall swing tolerated
+    write(fresh / "BENCH_x.json",
+          payload([("serving,scaling", "batch_speedup=1.50x")]))
+    assert run() == 1
+
+
+def test_mean_occupancy_gates_strictly(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json",
+          payload([("serving,rate1", "mean_occupancy=0.70")]))
+    # deterministic scheduler metric: a 20% drop fails at the strict 10%
+    write(fresh / "BENCH_x.json",
+          payload([("serving,rate1", "mean_occupancy=0.56")]))
+    assert run() == 1
+    assert "regressed" in capsys.readouterr().err
+    write(fresh / "BENCH_x.json",
+          payload([("serving,rate1", "mean_occupancy=0.68")]))
+    assert run() == 0
+
+
 def test_memory_metric_gates_lower_is_better(gate, capsys):
     base, fresh, run = gate
     write(base / "BENCH_x.json", payload([("row_a", "peak_mb=10.00")]))
