@@ -1,0 +1,187 @@
+"""Quantized (int8) sparse serving vs the float packs — the value path of
+``CompileSpec(value_dtype="int8")`` measured on the paper's two fixture
+families.
+
+Three rows, one per kernel family the quantized layouts feed:
+
+  * ``quant_conv`` — a VGG-scale 3x3 conv under block-punched pruning,
+    packed at fp32 and at int8 ("block" scale granularity), served through
+    ``ops.sparse_conv2d``.
+  * ``quant_pattern`` — the same conv under a 4-of-9 pattern +
+    connectivity mask, tap-lowered and quantized per-filter ("out" — the
+    granularity ``compile_model`` always uses for tap layouts), served
+    through ``ops.sparse_conv2d_pattern``.
+  * ``quant_moe_fc`` — an MoE-expert-shaped FC GEMM under block pruning,
+    served through ``ops.sparse_linear``.
+  * ``quant_decode_fc`` — a decode-shaped LM projection (small M, 4k x 4k
+    weight, MXU-sized blocks): the memory-bound regime where the weight
+    read dominates the roofline, so the int8 pick wins MODELED latency
+    too — the exact shape class both mappers flip to int8 on
+    (``quant_speedup`` > 1 here; the small fixtures above are
+    step-overhead-bound, so their modeled latency barely moves and the
+    mappers correctly keep float values).
+
+Each row reports the modeled latency of the int8 pick next to the float
+pick (``quant_speedup`` — ``matmul_latency(value_bytes=1)`` vs the
+default, the exact pricing both mappers choose precision by), the REAL
+packed-layout bytes of both packs (``w_fp32_mb`` / ``w_int8_mb``,
+deterministic accounting of values + indices + scales) and their ratio
+(``bytes_speedup`` — asserted >= 1.5x on the block-layout rows and
+regression-gated via the baseline: int8 must actually shrink the
+artifact, scales included; the tap row reports ungated, its 4-byte
+per-value tap ids cap the ratio below the block layouts'), and
+the kernel's parity error against the DEQUANTIZED dense oracle
+(``max_err`` — ``layout.to_dense()`` through the dense reference; the
+kernels dequantize before the fp32 accumulation, so this is a tight
+float-roundoff bound, not a quantization-error bound).  Emitted rows land
+in BENCH_quant.json under ``run.py --json``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcs as BCS
+from repro.core import regularity as R
+from repro.core.latency_model import conv_as_gemm, im2col_x_frac, \
+    matmul_latency
+from repro.kernels import ops
+
+MIN_BYTES_SPEEDUP = 1.5
+
+
+def _layout_mb(layout):
+    return ops._entry_bytes(layout) / 1e6
+
+
+def _derived(t_fp, t_q, mb_fp, mb_q, err, gate=True):
+    if gate:
+        assert mb_fp / mb_q >= MIN_BYTES_SPEEDUP, (
+            f"int8 pack shrinks weight bytes only {mb_fp / mb_q:.2f}x "
+            f"(< {MIN_BYTES_SPEEDUP}x): scale leaves are eating the win")
+    return (f"quant_speedup={t_fp / t_q:.2f}x;"
+            f"bytes_speedup={mb_fp / mb_q:.2f}x;"
+            f"w_fp32_mb={mb_fp:.3f};w_int8_mb={mb_q:.3f};"
+            f"max_err={err:.1e}")
+
+
+def _conv_row(P=128, Q=128, feat=14, kernel_block=(8, 8), rate=0.6):
+    kh = kw = 3
+    w = jax.random.normal(jax.random.PRNGKey(0), (P, Q, kh, kw),
+                          jnp.float32) * 0.1
+    mask = R.block_punched_mask(w, kernel_block, rate=rate)
+    wm = w * mask
+    gemm_block, why = BCS.conv_gemm_block(kernel_block, w.shape)
+    assert gemm_block is not None, why
+    wl, ml = BCS.conv_lower(wm), BCS.conv_lower(mask)
+    conv = (kh, kw, Q)
+    fp = ops.pack(wl, ml, gemm_block, reorder=True, n_bins=4, conv=conv)
+    q8 = ops.pack(wl, ml, gemm_block, reorder=True, n_bins=4, conv=conv,
+                  value_dtype="int8")
+    M, K, N = conv_as_gemm(feat, Q, P, kh, kw)
+    comp = (fp.Kb * fp.Nb) / max(fp.executed_blocks, 1)
+    lat = lambda vb: matmul_latency(
+        M, K, N, scheme="block_punched", block=gemm_block,
+        compression=comp, value_bytes=vb, x_frac=im2col_x_frac(kh * kw))
+    t_fp, t_q = lat(None), lat(1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, feat, feat, Q),
+                          jnp.float32)
+    y = ops.sparse_conv2d(x, q8, kh=kh, kw=kw)
+    ref_w = jnp.asarray(q8.to_dense()).reshape(kh, kw, Q, P)
+    y_ref = jax.lax.conv_general_dilated(
+        x, ref_w, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    return (f"quant_conv,{P}x{Q}x3x3,blk{kernel_block[0]}x{kernel_block[1]}",
+            t_q * 1e6,
+            _derived(t_fp, t_q, _layout_mb(fp), _layout_mb(q8), err))
+
+
+def _pattern_row(P=128, Q=128, feat=14, connectivity=0.5):
+    kh = kw = 3
+    w = jax.random.normal(jax.random.PRNGKey(2), (P, Q, kh, kw),
+                          jnp.float32) * 0.1
+    mask = R.pattern_mask(w, connectivity_rate=connectivity)
+    wm = w * mask
+    fp = ops.pack_taps(wm, mask)
+    q8 = ops.pack_taps(wm, mask, value_dtype="int8",
+                       scale_granularity="out")
+    M, K, N = conv_as_gemm(feat, Q, P, kh, kw)
+    frac = 1.0 - fp.flops_saved
+    lat = lambda vb: matmul_latency(
+        M, K, N, scheme="pattern", compression=1 / frac, value_bytes=vb,
+        executed_frac=frac, x_frac=im2col_x_frac(kh * kw))
+    t_fp, t_q = lat(None), lat(1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, feat, feat, Q),
+                          jnp.float32)
+    y = ops.sparse_conv2d_pattern(x, q8, kh=kh, kw=kw)
+    ref_w = jnp.asarray(q8.to_dense()).reshape(kh, kw, Q, P)
+    y_ref = jax.lax.conv_general_dilated(
+        x, ref_w, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    return (f"quant_pattern,{P}x{Q}x3x3,conn{connectivity}", t_q * 1e6,
+            _derived(t_fp, t_q, _layout_mb(fp), _layout_mb(q8), err,
+                     gate=False))
+
+
+def _whole_block_mask(key, shape, block, keep):
+    """Keep-mask that kills WHOLE (bk, bn) blocks — the structured
+    collapse the BCS kernels actually skip (``block_mask`` prunes
+    rows/cols inside blocks, which leaves every block alive)."""
+    kb = jax.random.uniform(key, (shape[0] // block[0],
+                                  shape[1] // block[1])) < keep
+    return jnp.kron(kb.astype(jnp.float32),
+                    jnp.ones(block, jnp.float32))
+
+
+def _moe_fc_row(M=64, K=512, N=1024, block=(16, 16), keep=0.4):
+    w = jax.random.normal(jax.random.PRNGKey(4), (K, N), jnp.float32) * 0.1
+    mask = _whole_block_mask(jax.random.PRNGKey(14), (K, N), block, keep)
+    wm = w * mask
+    fp = ops.pack(wm, mask, block, reorder=True, n_bins=4)
+    q8 = ops.pack(wm, mask, block, reorder=True, n_bins=4,
+                  value_dtype="int8")
+    comp = (fp.Kb * fp.Nb) / max(fp.executed_blocks, 1)
+    lat = lambda vb: matmul_latency(M, K, N, scheme="block", block=block,
+                                    compression=comp, value_bytes=vb)
+    t_fp, t_q = lat(None), lat(1)
+    x = jax.random.normal(jax.random.PRNGKey(5), (M, K), jnp.float32)
+    y = ops.sparse_linear(x, packed=q8)
+    y_ref = x @ jnp.asarray(q8.to_dense())
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    return (f"quant_moe_fc,{K}x{N},blk{block[0]}x{block[1]}", t_q * 1e6,
+            _derived(t_fp, t_q, _layout_mb(fp), _layout_mb(q8), err))
+
+
+def _decode_fc_row(M=256, K=4096, N=4096, block=(128, 128), keep=0.125):
+    w = jax.random.normal(jax.random.PRNGKey(6), (K, N), jnp.float32) * 0.1
+    mask = _whole_block_mask(jax.random.PRNGKey(16), (K, N), block, keep)
+    wm = w * mask
+    fp = ops.pack(wm, mask, block, reorder=True, n_bins=4)
+    q8 = ops.pack(wm, mask, block, reorder=True, n_bins=4,
+                  value_dtype="int8")
+    comp = (fp.Kb * fp.Nb) / max(fp.executed_blocks, 1)
+    lat = lambda vb: matmul_latency(M, K, N, scheme="block", block=block,
+                                    compression=comp, value_bytes=vb)
+    t_fp, t_q = lat(None), lat(1)
+    assert t_q < t_fp, (
+        f"int8 must win modeled latency on the decode-shaped FC "
+        f"(fp {t_fp * 1e6:.1f}us vs int8 {t_q * 1e6:.1f}us)")
+    x = jax.random.normal(jax.random.PRNGKey(7), (M, K), jnp.float32)
+    y = ops.sparse_linear(x, packed=q8)
+    y_ref = x @ jnp.asarray(q8.to_dense())
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    return (f"quant_decode_fc,{K}x{N},blk{block[0]}x{block[1]}", t_q * 1e6,
+            _derived(t_fp, t_q, _layout_mb(fp), _layout_mb(q8), err))
+
+
+def bench(fast=True):
+    """Returns [(name, us_per_call, derived), ...] — modeled int8 latency
+    per row, with the fp-vs-int8 speedup/bytes/parity metrics in
+    ``derived``."""
+    del fast  # deterministic byte/latency accounting — no long mode
+    return [_conv_row(), _pattern_row(), _moe_fc_row(), _decode_fc_row()]
+
+
+if __name__ == "__main__":
+    for row in bench():
+        print(row)

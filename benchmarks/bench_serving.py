@@ -27,7 +27,7 @@ from repro import configs
 from repro.core import reweighted as RW
 from repro.launch.serve import SPARSE_SPEC
 from repro.models import transformer as T
-from repro.serve.compile import compile_model
+from repro.serve.compile import CompileSpec, compile_model
 from repro.serve.engine import ServingEngine
 from repro.train.trainer import apply_masks
 
@@ -40,7 +40,8 @@ def _packed_smoke_lm():
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     masks = RW.magnitude_block_masks(params, SPARSE_SPEC, None, rate=0.6)
     params = apply_masks(params, masks)
-    params, _ = compile_model(params, masks, SPARSE_SPEC, keep_dense=False)
+    params, _ = compile_model(params, masks, SPARSE_SPEC,
+                              spec=CompileSpec(keep_dense=False))
     return params, cfg
 
 

@@ -18,7 +18,8 @@ from repro.kernels import ops
 from repro.kernels.ref import masked_matmul_ref
 from repro.models import transformer as T
 from repro.data.pipeline import synthetic_batch
-from repro.serve.compile import compile_model, compiled_summary
+from repro.serve.compile import (CompileSpec, compile_model,
+                                 compiled_summary)
 from repro.serve.engine import generate
 from repro.train.trainer import apply_masks
 
@@ -45,14 +46,15 @@ def kernel_demo():
 
 def whole_model_demo():
     """Block-prune a smoke model, compile it, and serve on the kernel."""
-    spec = [(r"(attn/w[qkvo]|ffn/(gate|up|down))/w",
-             RW.SchemeChoice("block", (16, 16)))]
+    mapping = [(r"(attn/w[qkvo]|ffn/(gate|up|down))/w",
+                RW.SchemeChoice("block", (16, 16)))]
     cfg = configs.get("yi-9b", smoke=True)
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     # whole (16,16) blocks die — the structured collapse the kernel skips
-    masks = RW.random_block_masks(params, spec, (16, 16), keep_prob=0.4)
+    masks = RW.random_block_masks(params, mapping, (16, 16), keep_prob=0.4)
     pm = apply_masks(params, masks)
-    exec_params, report = compile_model(pm, masks, spec, keep_dense=False)
+    exec_params, report = compile_model(pm, masks, mapping,
+                                        spec=CompileSpec(keep_dense=False))
     print(compiled_summary(report))
     batch = synthetic_batch(0, 0, 4, 32, cfg.vocab)
     t0 = time.time()

@@ -90,7 +90,8 @@ def im2col_x_frac(taps, implicit=True) -> float:
 
 def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
                    compression=1.0, target: TPUTarget = V5E,
-                   dtype_bytes=2, executed_frac=None, x_frac=None) -> float:
+                   dtype_bytes=2, value_bytes=None, executed_frac=None,
+                   x_frac=None) -> float:
     """One FC/CONV-as-GEMM layer: y(M,N) = x(M,K) @ w(K,N) with the given
     pruning scheme at `compression` (param reduction factor).
 
@@ -99,6 +100,17 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
     scheme: measured tap savings from a ``core.packed.TapLayout``) — the
     executed-cost hook the mappers use so a pattern pick is ranked by what
     the tap-gather kernel runs, not by raw mask density.
+
+    ``value_bytes`` is the stored bytes per surviving WEIGHT value (the
+    quantized serving path of ``core.quant``: 1 for int8 values, while
+    activations stay at ``dtype_bytes``).  None keeps ``dtype_bytes``.
+    When it differs, the sparse branches add the fp32 scale traffic the
+    dequantizing kernels actually read: one scale per surviving block
+    ("block" granularity) for the block schemes, one per output filter
+    for the pattern scheme (tap layouts quantize per-filter).  Compute
+    terms are unchanged — the kernels dequantize into the same fp32
+    accumulation, so quantization only moves the HBM term, which is
+    exactly the post-implicit-GEMM bottleneck it attacks.
 
     ``x_frac`` scales the activation DRAM bytes (memory-traffic term) for
     conv-as-GEMM layers: pass ``im2col_x_frac(kh*kw)`` to price the
@@ -111,6 +123,7 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
     x_b = M * K * dtype_bytes
     y_b = M * N * dtype_bytes
     w_dense_b = K * N * dtype_bytes
+    v_b = dtype_bytes if value_bytes is None else value_bytes
 
     if scheme == "none":
         t_c = dense_flops / target.peak_flops
@@ -121,7 +134,7 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
 
     if scheme == "unstructured":
         # CSR gather: no MXU, index+value traffic at degraded bandwidth
-        w_b = density * K * N * (dtype_bytes + 4)
+        w_b = density * K * N * (v_b + 4)
         t_m = (x_b + y_b + w_b) / (target.hbm_bw * target.gather_bw_frac)
         t_c = density * dense_flops / (target.peak_flops * target.vpu_frac)
         return max(t_c, t_m)
@@ -145,7 +158,9 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
         # filter group) at group=1 — the serve-path layout.
         frac = executed_frac if executed_frac is not None else density
         t_c = frac * dense_flops / (target.peak_flops * target.vpu_frac)
-        w_b = frac * K * N * (dtype_bytes + 4)
+        w_b = frac * K * N * (v_b + 4)
+        if v_b != dtype_bytes:
+            w_b += 4 * N               # per-filter fp32 scales ("out")
         # activation traffic: explicit x_frac (implicit kernel reads the
         # feature map, materialized pays the patch round-trip); the legacy
         # default approximates the alive-band read of the gathered path
@@ -162,7 +177,9 @@ def matmul_latency(M, K, N, *, scheme="none", block=(128, 128),
     eff_flops = density * dense_flops
     t_c = eff_flops / (target.peak_flops * util)
     idx_b = 4 * n_blocks_alive + 4 * (K // bk)
-    w_b = density * w_dense_b + idx_b
+    w_b = density * K * N * v_b + idx_b
+    if v_b != dtype_bytes:
+        w_b += 4 * n_blocks_alive      # per-block fp32 scales
     t_m = (x_b * (1.0 if x_frac is None else x_frac)
            + y_b + w_b) / target.hbm_bw
     # grid steps at the autotuned M-tile (512): each M-tile revisits every

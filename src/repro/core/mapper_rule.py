@@ -9,11 +9,19 @@ Workflow per layer (TPU edition, DESIGN.md §2 table):
      SMALLEST legal block whose modeled latency is within (1+beta) of the
      structured-pruning baseline at equal compression (§5.2.2) — smallest
      because finer granularity = higher accuracy.
+  4. Serving precision rides the same pricing: every packable pick is
+     re-priced with int8 values (``matmul_latency(value_bytes=1)`` — the
+     quantized layouts of ``core.quant``), and the cheaper precision wins
+     the layer (``SchemeChoice.value_dtype``).  On the memory-bound layers
+     the implicit-GEMM work exposed, int8 roughly halves the dominant
+     weight-traffic term at unchanged modeled compute (fp32 accumulation
+     in-kernel), so the pick is usually int8 — but MXU-bound layers keep
+     float values (no modeled win, so no quantization error for free).
 The latency model is the offline artifact (§5.2.1); the whole mapping is
 training-free."""
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from repro.configs.base import ArchConfig
 from repro.core.latency_model import (TPUTarget, V5E, im2col_x_frac,
@@ -112,9 +120,27 @@ def select_block_size(M, K, N, compression, beta, target: TPUTarget = V5E,
     return b, t, base
 
 
+def _pick_precision(choice, t, *, M, K, N, compression, target,
+                    executed_frac=None, x_frac=None):
+    """Re-price a packable pick with int8 values (``value_bytes=1``) and
+    return (choice, latency) of the cheaper precision — the mapper's
+    per-layer precision action.  Strictly-better wins: a compute-bound
+    layer whose modeled latency does not move keeps float values, so it
+    never pays quantization error for nothing."""
+    t_q = matmul_latency(M, K, N, scheme=choice.scheme, block=choice.block,
+                         compression=compression, target=target,
+                         value_bytes=1, executed_frac=executed_frac,
+                         x_frac=x_frac)
+    if t_q < t:
+        return replace(choice, value_dtype="int8"), t_q
+    return choice, t
+
+
 def map_rules(layers: list[LayerDesc], *, dataset_hard=True, beta=0.2,
               compression=8.0, target: TPUTarget = V5E):
-    """Returns (PruneSpec rules, per-layer report)."""
+    """Returns (PruneSpec rules, per-layer report) — each rule's
+    ``SchemeChoice`` carries the scheme, block, and the precision pick
+    (``value_dtype``), all priced by the extended latency model."""
     spec, report = [], []
     for ld in layers:
         if ld.kind in ("dw", "frozen"):
@@ -137,11 +163,18 @@ def map_rules(layers: list[LayerDesc], *, dataset_hard=True, beta=0.2,
                                    executed_frac=frac, x_frac=xf)
                 t_base = structured_baseline(ld.M, ld.K, ld.N, 1 / frac,
                                              target)
+                choice, t = _pick_precision(
+                    choice, t, M=ld.M, K=ld.K, N=ld.N,
+                    compression=1 / frac, target=target,
+                    executed_frac=frac, x_frac=xf)
             else:
                 b, t, t_base = select_block_size(ld.M, ld.K, ld.N,
                                                  compression, beta, target,
                                                  x_frac=xf)
                 choice = SchemeChoice("block_punched", block=b)
+                choice, t = _pick_precision(
+                    choice, t, M=ld.M, K=ld.K, N=ld.N,
+                    compression=compression, target=target, x_frac=xf)
         elif ld.kind in ("fc", "conv1x1", "convkxk"):
             xf = im2col_x_frac(ld.taps) if ld.taps > 1 else None
             b, t, t_base = select_block_size(ld.M, ld.K, ld.N, compression,
@@ -156,11 +189,15 @@ def map_rules(layers: list[LayerDesc], *, dataset_hard=True, beta=0.2,
                 t = t_dense
             else:
                 choice = SchemeChoice("block", block=b)
+                choice, t = _pick_precision(
+                    choice, t, M=ld.M, K=ld.K, N=ld.N,
+                    compression=compression, target=target, x_frac=xf)
         else:
             raise ValueError(ld.kind)
         spec.append((ld.path, choice))
         report.append({"path": ld.path, "kind": ld.kind,
                        "scheme": choice.scheme, "block": choice.block,
+                       "value_dtype": choice.value_dtype,
                        "latency_s": t, "structured_s": t_base,
                        "count": ld.count})
     return spec, report

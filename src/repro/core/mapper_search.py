@@ -3,11 +3,14 @@ seq2seq policy.
 
 State per layer (paper: {layer type, kernel size, in_ch, out_ch}): a feature
 vector [kind-onehot, log M/K/N].  Action per layer (paper: {regularity,
-block size}): a pair of categoricals, masked to the applicable scheme set.
-Policy: LSTM decoder over the layer sequence; policy-gradient with a moving
-baseline B (Eq. 6); reward = accuracy-proxy - w * modeled latency —
-accuracy from one-shot magnitude pruning + a short retrain (paper uses
-2-epoch proxies), latency from the offline latency model (§5.2.1)."""
+block size}, extended here with serving precision): a triple of
+categoricals — scheme (masked to the applicable set), block size, and
+value precision (PRECISION_MENU: float vs int8 quantized values, priced
+by ``matmul_latency(value_bytes=1)``).  Policy: LSTM decoder over the
+layer sequence; policy-gradient with a moving baseline B (Eq. 6); reward
+= accuracy-proxy - w * modeled latency — accuracy from one-shot magnitude
+pruning + a short retrain (paper uses 2-epoch proxies), latency from the
+offline latency model (§5.2.1)."""
 from __future__ import annotations
 
 
@@ -24,6 +27,13 @@ KINDS = ("fc", "conv3x3", "conv1x1", "convkxk", "dw", "frozen")
 SCHEME_MENU = ("none", "unstructured", "structured_row", "pattern", "block",
                "block_punched")
 BLOCK_MENU = ((4, 4), (8, 16), (16, 32), (32, 64), (64, 128), (128, 128))
+# serving precision of the packed values (None = float; "int8" = the
+# quantized layouts of core.quant, priced at value_bytes=1)
+PRECISION_MENU = (None, "int8")
+# schemes whose packed layouts can carry quantized values — precision
+# picks on other schemes are inert (actions_to_spec drops them)
+_QUANTIZABLE = ("pattern", "block", "block_row", "block_col",
+                "block_punched")
 
 
 def applicable(kind: str) -> np.ndarray:
@@ -51,13 +61,14 @@ def layer_features(layers: list[LayerDesc]) -> np.ndarray:
 # -- tiny LSTM policy ---------------------------------------------------------
 
 def policy_init(key, in_dim, hidden=64):
-    k1, k2, k3, k4 = jax.random.split(key, 4)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
     s = lambda k, sh: jax.random.normal(k, sh, jnp.float32) * 0.1
     return {"wx": s(k1, (in_dim, 4 * hidden)),
             "wh": s(k2, (hidden, 4 * hidden)),
             "b": jnp.zeros((4 * hidden,), jnp.float32),
             "head_s": s(k3, (hidden, len(SCHEME_MENU))),
-            "head_b": s(k4, (hidden, len(BLOCK_MENU)))}
+            "head_b": s(k4, (hidden, len(BLOCK_MENU))),
+            "head_p": s(k5, (hidden, len(PRECISION_MENU)))}
 
 
 def _lstm_step(p, carry, x):
@@ -70,7 +81,8 @@ def _lstm_step(p, carry, x):
 
 
 def sample_mapping(p, feats, app_masks, key):
-    """Returns (scheme_idx (L,), block_idx (L,), logp scalar)."""
+    """Returns (scheme_idx (L,), block_idx (L,), precision_idx (L,),
+    logp scalar)."""
     hidden = p["wh"].shape[0]
     L = feats.shape[0]
     keys = jax.random.split(key, L)
@@ -80,60 +92,82 @@ def sample_mapping(p, feats, app_masks, key):
         x, mask, k = xs
         hc, h = _lstm_step(p, hc, x)
         ls = jnp.where(mask, h @ p["head_s"], -1e9)
-        k1, k2 = jax.random.split(k)
+        k1, k2, k3 = jax.random.split(k, 3)
         a_s = jax.random.categorical(k1, ls)
         logp = logp + jax.nn.log_softmax(ls)[a_s]
         lb = h @ p["head_b"]
         a_b = jax.random.categorical(k2, lb)
         logp = logp + jax.nn.log_softmax(lb)[a_b]
-        return (hc, logp), (a_s, a_b)
+        lp = h @ p["head_p"]
+        a_p = jax.random.categorical(k3, lp)
+        logp = logp + jax.nn.log_softmax(lp)[a_p]
+        return (hc, logp), (a_s, a_b, a_p)
 
     hc0 = (jnp.zeros((hidden,)), jnp.zeros((hidden,)))
-    (_, logp), (a_s, a_b) = jax.lax.scan(
+    (_, logp), (a_s, a_b, a_p) = jax.lax.scan(
         body, (hc0, jnp.zeros(())), (feats, app_masks, keys))
-    return a_s, a_b, logp
+    return a_s, a_b, a_p, logp
 
 
-def mapping_logp(p, feats, app_masks, a_s, a_b):
+def mapping_logp(p, feats, app_masks, a_s, a_b, a_p):
     hidden = p["wh"].shape[0]
 
     def body(carry, xs):
         hc, logp = carry
-        x, mask, s, b = xs
+        x, mask, s, b, pr = xs
         hc, h = _lstm_step(p, hc, x)
         ls = jnp.where(mask, h @ p["head_s"], -1e9)
         lb = h @ p["head_b"]
-        logp = logp + jax.nn.log_softmax(ls)[s] + jax.nn.log_softmax(lb)[b]
+        lp = h @ p["head_p"]
+        logp = (logp + jax.nn.log_softmax(ls)[s]
+                + jax.nn.log_softmax(lb)[b] + jax.nn.log_softmax(lp)[pr])
         return (hc, logp), None
 
     hc0 = (jnp.zeros((hidden,)), jnp.zeros((hidden,)))
     (_, logp), _ = jax.lax.scan(body, (hc0, jnp.zeros(())),
-                                (feats, app_masks, a_s, a_b))
+                                (feats, app_masks, a_s, a_b, a_p))
     return logp
 
 
-def actions_to_spec(layers, a_s, a_b, rate=None) -> list:
+def _precision(scheme, a_p, i):
+    """Resolve layer i's precision action: the picked value dtype on a
+    quantizable scheme, None otherwise (or when no a_p was sampled)."""
+    if a_p is None or scheme not in _QUANTIZABLE:
+        return None
+    return PRECISION_MENU[int(np.asarray(a_p)[i])]
+
+
+def actions_to_spec(layers, a_s, a_b, a_p=None, rate=None) -> list:
+    """Decode sampled action indices into a PruneSpec; ``a_p`` (the
+    precision head, optional for legacy two-action callers) becomes each
+    choice's ``value_dtype`` on quantizable schemes."""
     spec = []
-    for ld, s, b in zip(layers, np.asarray(a_s), np.asarray(a_b)):
+    for i, (ld, s, b) in enumerate(zip(layers, np.asarray(a_s),
+                                       np.asarray(a_b))):
         scheme = SCHEME_MENU[int(s)]
         block = BLOCK_MENU[int(b)]
         # snap block to layer divisibility
         bk = max(1, np.gcd(block[0], ld.K))
         bn = max(1, np.gcd(block[1], ld.N))
-        spec.append((ld.path, SchemeChoice(scheme, (int(bk), int(bn)),
-                                           rate=rate)))
+        spec.append((ld.path, SchemeChoice(
+            scheme, (int(bk), int(bn)), rate=rate,
+            value_dtype=_precision(scheme, a_p, i))))
     return spec
 
 
-def mapping_latency(layers, a_s, a_b, compression=8.0, target=V5E) -> float:
+def mapping_latency(layers, a_s, a_b, a_p=None, compression=8.0,
+                    target=V5E) -> float:
     """Modeled total latency of a sampled mapping — the reward's latency
     term.  Pattern picks are priced at the tap-gather kernel's executed-tap
-    fraction (``pattern_executed_frac``), not raw mask density, and
+    fraction (``pattern_executed_frac``), not raw mask density;
     conv-as-GEMM layers (``LayerDesc.taps`` > 1) at the implicit-GEMM
     path's activation traffic (feature map read once — ``im2col_x_frac``),
-    not the never-materialized M*K patch bytes."""
+    not the never-materialized M*K patch bytes; and int8 precision picks
+    (``a_p``) at 1 byte per stored value plus the kernels' fp32 scale
+    traffic (``matmul_latency(value_bytes=1)``)."""
     t = 0.0
-    for ld, s, b in zip(layers, np.asarray(a_s), np.asarray(a_b)):
+    for i, (ld, s, b) in enumerate(zip(layers, np.asarray(a_s),
+                                       np.asarray(a_b))):
         scheme = SCHEME_MENU[int(s)]
         taps = getattr(ld, "taps", 0)
         xf = im2col_x_frac(taps) if taps > 1 else None
@@ -145,9 +179,11 @@ def mapping_latency(layers, a_s, a_b, compression=8.0, target=V5E) -> float:
             comp = 1 / frac
         else:
             comp = compression
+        vb = 1 if _precision(scheme, a_p, i) == "int8" else None
         t += ld.count * matmul_latency(
             ld.M, ld.K, ld.N, scheme=scheme, block=BLOCK_MENU[int(b)],
-            compression=comp, target=target, executed_frac=frac, x_frac=xf)
+            compression=comp, target=target, value_bytes=vb,
+            executed_frac=frac, x_frac=xf)
     return t
 
 
@@ -164,23 +200,23 @@ def search(layers, evaluate_fn, *, key=None, iters=20, samples=4,
     history = []
     sample_jit = jax.jit(lambda pp, k: sample_mapping(pp, feats, app, k))
     grad_fn = jax.jit(jax.grad(
-        lambda pp, a_s, a_b, adv: -adv * mapping_logp(pp, feats, app,
-                                                      a_s, a_b)))
+        lambda pp, a_s, a_b, a_p, adv: -adv * mapping_logp(
+            pp, feats, app, a_s, a_b, a_p)))
     for it in range(iters):
         key, *ks = jax.random.split(key, samples + 1)
         grads_acc = jax.tree_util.tree_map(jnp.zeros_like, p)
         rewards = []
         for k in ks:
-            a_s, a_b, _ = sample_jit(p, k)
-            spec = actions_to_spec(layers, a_s, a_b)
+            a_s, a_b, a_p, _ = sample_jit(p, k)
+            spec = actions_to_spec(layers, a_s, a_b, a_p)
             acc = evaluate_fn(spec)
-            lat = mapping_latency(layers, a_s, a_b)
+            lat = mapping_latency(layers, a_s, a_b, a_p)
             r = acc - latency_weight * lat
             rewards.append(r)
             if r > best[1]:
                 best = (spec, r)
             adv = r - baseline
-            g = grad_fn(p, a_s, a_b, adv)
+            g = grad_fn(p, a_s, a_b, a_p, adv)
             grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, g)
         baseline = 0.9 * baseline + 0.1 * float(np.mean(rewards))
         p = jax.tree_util.tree_map(lambda w, g: w - lr * g / samples,

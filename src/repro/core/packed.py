@@ -31,6 +31,15 @@ share the same structural conventions (per-bin leaf tuples, degree
 sort + binning, perm/inv_perm over the output axis, fused-epilogue bias
 helpers), so ``serve.compile`` and the model dispatch treat "packed" as one
 concept and pick the executor by layout type.
+
+Quantized values (``core.quant``): either layout may carry its values as
+symmetric-scale int8 with an extra per-bin ``scales`` leaf tuple (fp32).
+Scale granularity is encoded in the scale shapes (see the dataclass docs);
+the kernels dequantize in-kernel before the fp32-accumulated dot, so the
+executed result equals the dequantized dense reference.  All-zero groups
+store scale 0 (nothing to recover).  ``to_dense`` on a quantized layout
+returns the DEQUANTIZED dense weight — the parity oracle for the int8
+kernel paths.
 """
 from __future__ import annotations
 
@@ -39,6 +48,19 @@ from dataclasses import dataclass
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+
+def _dequant(values, scale):
+    """Host-side dequantize of one bin: int8 values * fp32 scale, the scale
+    right-padded with broadcast axes up to the values rank (so every scale
+    granularity — per-block, per-column, per-tap-slot, per-filter —
+    broadcasts the same way).  Identity when ``scale`` is None."""
+    if scale is None:
+        return values
+    v = np.asarray(values)
+    s = np.asarray(scale, np.float32)
+    s = s.reshape(s.shape + (1,) * (v.ndim - s.ndim))
+    return v.astype(np.float32) * s
 
 
 # frozen: ops.pack hands out the SAME cached instance to every caller, so a
@@ -58,6 +80,12 @@ class PackedLayout:
                  or None when the layout is in original column order
       inv_perm : (..., Nb) int32 original block column -> layout position,
                  or None (identity)
+      scales   : None for float values; for int8 values, a tuple of
+                 per-bin fp32 arrays — (..., nb_b, L_b) with one symmetric
+                 scale per stored block ("block" granularity) or
+                 (..., nb_b) with one per block column ("out") — the rank
+                 relative to ``values`` encodes the granularity.  All-zero
+                 blocks store scale 0.
 
     Static aux data (hashable; part of the jit cache key):
       block : (bk, bn)
@@ -82,23 +110,24 @@ class PackedLayout:
     block: tuple = (128, 128)
     shape: tuple = (0, 0)
     conv_taps: tuple = None
+    scales: tuple = None
 
     # -- pytree protocol -----------------------------------------------------
 
     def tree_flatten(self):
         """Flatten into (array leaves, static aux) for jax pytree traversal."""
         children = (self.values, self.k_idx, self.nnz, self.perm,
-                    self.inv_perm)
+                    self.inv_perm, self.scales)
         return children, (self.block, self.shape, self.conv_taps)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
-        values, k_idx, nnz, perm, inv_perm = children
+        values, k_idx, nnz, perm, inv_perm, scales = children
         block, shape, conv_taps = aux
         return cls(values=values, k_idx=k_idx, nnz=nnz, perm=perm,
                    inv_perm=inv_perm, block=block, shape=shape,
-                   conv_taps=conv_taps)
+                   conv_taps=conv_taps, scales=scales)
 
     # -- static geometry (no device sync) ------------------------------------
 
@@ -151,6 +180,18 @@ class PackedLayout:
         layout executes ``executed_blocks`` of Kb*Nb — NOT the raw block
         density: imbalanced column degrees execute padding blocks."""
         return max(0.0, 1.0 - self.executed_blocks / (self.Kb * self.Nb))
+
+    @property
+    def value_dtype(self) -> str:
+        """Dtype name of the stored values ("int8" on quantized layouts)."""
+        return jnp.asarray(self.values[0]).dtype.name
+
+    def bin_scales(self) -> tuple:
+        """Per-bin scale arrays, or a tuple of Nones on float layouts —
+        what the packed kernel wrappers zip alongside ``values``."""
+        if self.scales is None:
+            return (None,) * self.n_bins
+        return self.scales
 
     # -- data-dependent stats (host sync; report/test time only) -------------
 
@@ -205,19 +246,23 @@ class PackedLayout:
 
     def to_dense(self):
         """Reconstruct the dense (K, N) weight (single-slice layouts only) —
-        the test/debug oracle for round-trip identity."""
+        the test/debug oracle for round-trip identity.  Quantized layouts
+        reconstruct the DEQUANTIZED weight (values * scales), which is what
+        the in-kernel dequant path must match."""
         assert self.values[0].ndim == 4, "to_dense needs an unstacked layout"
         K, N = self.shape
         bk, bn = self.block
         Kb, Nb = self.Kb, self.Nb
         dense = np.zeros((Kb, Nb, bk, bn),
-                         np.asarray(self.values[0]).dtype)
+                         np.float32 if self.scales is not None
+                         else np.asarray(self.values[0]).dtype)
         col = 0
         perm = (np.asarray(self.perm) if self.perm is not None
                 else np.arange(Nb))
         nnz = np.asarray(self.nnz)
-        for vals, kidx in zip(self.values, self.k_idx):
-            vals, kidx = np.asarray(vals), np.asarray(kidx)
+        for vals, kidx, sc in zip(self.values, self.k_idx,
+                                  self.bin_scales()):
+            vals, kidx = np.asarray(_dequant(vals, sc)), np.asarray(kidx)
             for j in range(vals.shape[0]):
                 oj = int(perm[col + j])
                 for l in range(int(nnz[col + j])):
@@ -263,6 +308,11 @@ class TapLayout:
       perm     : (G,) int32 layout position -> original filter group, or
                  None when unreordered
       inv_perm : (G,) int32 original filter group -> layout position
+      scales   : None for float values; for int8 values, a tuple of
+                 per-bin fp32 arrays — (G_b, L_b) with one symmetric scale
+                 per tap slot ("block" granularity) or (G_b, 1, group)
+                 with one per filter ("out") — the rank encodes the
+                 granularity.  All-zero slots store scale 0.
 
     Static aux data (hashable; part of the jit cache key):
       group : filters per tap-list (1 = exact per-filter taps; larger
@@ -284,23 +334,24 @@ class TapLayout:
     group: int = 1
     shape: tuple = (0, 0)
     k_full: tuple = None
+    scales: tuple = None
 
     # -- pytree protocol -----------------------------------------------------
 
     def tree_flatten(self):
         """Flatten into (array leaves, static aux) for jax pytree traversal."""
         children = (self.values, self.t_idx, self.nnz, self.alive,
-                    self.perm, self.inv_perm, self.k_full)
+                    self.perm, self.inv_perm, self.k_full, self.scales)
         return children, (self.group, self.shape)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
-        values, t_idx, nnz, alive, perm, inv_perm, k_full = children
+        values, t_idx, nnz, alive, perm, inv_perm, k_full, scales = children
         group, shape = aux
         return cls(values=values, t_idx=t_idx, nnz=nnz, alive=alive,
                    perm=perm, inv_perm=inv_perm, group=group, shape=shape,
-                   k_full=k_full)
+                   k_full=k_full, scales=scales)
 
     # -- static geometry (no device sync) ------------------------------------
 
@@ -353,6 +404,18 @@ class TapLayout:
         density)."""
         K = self.shape[0]
         return max(0.0, 1.0 - self.executed_taps / (K * self.n_groups))
+
+    @property
+    def value_dtype(self) -> str:
+        """Dtype name of the stored values ("int8" on quantized layouts)."""
+        return jnp.asarray(self.values[0]).dtype.name
+
+    def bin_scales(self) -> tuple:
+        """Per-bin scale arrays, or a tuple of Nones on float layouts —
+        what the tap kernel wrappers zip alongside ``values``."""
+        if self.scales is None:
+            return (None,) * self.n_bins
+        return self.scales
 
     # -- data-dependent stats (host sync; report/test time only) -------------
 
@@ -411,16 +474,20 @@ class TapLayout:
 
     def to_dense(self):
         """Reconstruct the dense lowered (K, P) weight — the round-trip
-        oracle: must equal ``core.bcs.conv_lower(w * mask)``."""
+        oracle: must equal ``core.bcs.conv_lower(w * mask)`` (dequantized
+        values * scales on a quantized layout)."""
         K, P = self.shape
-        dense = np.zeros((K, P), np.asarray(self.values[0]).dtype)
+        dense = np.zeros((K, P),
+                         np.float32 if self.scales is not None
+                         else np.asarray(self.values[0]).dtype)
         alive = np.asarray(self.alive)
         perm = (np.asarray(self.perm) if self.perm is not None
                 else np.arange(self.n_groups))
         nnz = np.asarray(self.nnz)
         col = 0
-        for vals, tidx in zip(self.values, self.t_idx):
-            vals, tidx = np.asarray(vals), np.asarray(tidx)
+        for vals, tidx, sc in zip(self.values, self.t_idx,
+                                  self.bin_scales()):
+            vals, tidx = np.asarray(_dequant(vals, sc)), np.asarray(tidx)
             for g in range(vals.shape[0]):
                 og = int(perm[col + g])
                 sl = slice(og * self.group, (og + 1) * self.group)

@@ -1,0 +1,99 @@
+"""Symmetric int8 quantization of the packed interchange layouts.
+
+The NPAS observation (PAPERS.md) is that compiler-aware pruning compounds
+with quantization, and the implicit-GEMM work (PR 5) made HBM *value*
+traffic the modeled bottleneck of the sparse serving path — so halving (or
+quartering) bytes-per-value attacks exactly the dominant roofline term.
+This module converts a float ``core.packed.PackedLayout``/``TapLayout``
+into the same layout with int8 values plus per-group fp32 scales attached
+as a new ``scales`` leaf tuple; everything else (indices, degree bins,
+perm, geometry aux) is untouched, so the quantized layout drops into every
+existing consumer and the Pallas kernels dequantize in-kernel on top of
+the unchanged fp32 accumulation.
+
+Scheme: symmetric linear, ``q = clip(round(v / s), -127, 127)`` with
+``s = maxabs(group) / 127`` — no zero point, so zero weights (the pruned
+and padding slots both layouts rely on multiplying to nothing) stay
+exactly zero.  All-zero groups store scale 0 (there is nothing to
+recover; the kernels multiply q=0 by s=0).
+
+Granularity (``scale_granularity``):
+
+  * ``"block"`` (default): one scale per stored unit — per (bk, bn) BCS
+    block (``PackedLayout`` scales (..., nb_b, L_b)) or per tap slot
+    (``TapLayout`` scales (G_b, L_b)).  Finest error, scale traffic is
+    one fp32 per block/slot.
+  * ``"out"``: one scale per output column — per BCS block column
+    (``PackedLayout`` scales (..., nb_b)) or per filter (``TapLayout``
+    scales (G_b, 1, group)).  Coarser error, negligible scale storage —
+    the right choice for group=1 tap layouts, where a per-slot scale
+    would cost 4 bytes per single stored value.
+
+The granularity is recoverable from the scale ranks alone (see
+``core.packed``), so it needs no extra static aux; ``core.validate``
+enforces the shape contract and ``serve.artifacts`` serializes the scale
+leaves like any other.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.packed import PackedLayout, TapLayout
+
+QMAX = 127.0
+GRANULARITIES = ("block", "out")
+
+
+def _scale_and_cast(v, axes):
+    """Quantize one bin's value array over ``axes`` (the reduced group
+    axes): returns (int8 values, fp32 scales with the reduced axes
+    dropped).  All-zero groups get scale 0 and quantize to all-zero."""
+    v = np.asarray(v, np.float32)
+    maxabs = np.max(np.abs(v), axis=axes)
+    scale = (maxabs / QMAX).astype(np.float32)
+    safe = np.where(scale > 0, scale, 1.0)
+    safe = np.expand_dims(safe, axes)
+    q = np.clip(np.rint(v / safe), -QMAX, QMAX).astype(np.int8)
+    return q, scale
+
+
+def quantize_layout(layout, *, value_dtype="int8",
+                    scale_granularity="block"):
+    """Quantize a float layout's values to ``value_dtype`` (only "int8"),
+    attaching the per-bin fp32 ``scales`` leaves.
+
+    Works on both layout kinds and on stacked ``PackedLayout`` leaves
+    (leading layer/expert dims quantize per-slice-group like any other).
+    Returns the quantized layout; a layout that already carries scales is
+    rejected (double quantization would silently square the error).
+    """
+    if value_dtype != "int8":
+        raise ValueError(f"unsupported value_dtype {value_dtype!r} "
+                         "(only 'int8')")
+    if scale_granularity not in GRANULARITIES:
+        raise ValueError(f"unsupported scale_granularity "
+                         f"{scale_granularity!r} (one of {GRANULARITIES})")
+    if isinstance(layout, PackedLayout):
+        # values (..., nb_b, L_b, bk, bn): "block" reduces the (bk, bn)
+        # trailing block, "out" additionally the L (column-degree) axis
+        axes = (-2, -1) if scale_granularity == "block" else (-3, -2, -1)
+    elif isinstance(layout, TapLayout):
+        # values (G_b, L_b, group): "block" reduces the per-slot filter
+        # axis; "out" keeps a broadcastable (G_b, 1, group) per-filter form
+        axes = (-1,) if scale_granularity == "block" else (-2,)
+    else:
+        raise TypeError(f"not a packable layout: {type(layout).__name__}")
+    if layout.scales is not None:
+        raise ValueError("layout is already quantized (scales present)")
+    values, scales = [], []
+    for v in layout.values:
+        q, s = _scale_and_cast(v, axes)
+        if isinstance(layout, TapLayout) and scale_granularity == "out":
+            s = s[:, None, :]          # keep the broadcastable rank-3 form
+        values.append(jnp.asarray(q))
+        scales.append(jnp.asarray(s))
+    return dataclasses.replace(layout, values=tuple(values),
+                               scales=tuple(scales))

@@ -25,6 +25,10 @@ Taxonomy (one subclass per failure class, ``code`` is the stable tag):
                               permutations (or only one present)
   ``LayoutAuxError``          ``conv_taps``/``k_full`` aux inconsistent
                               with the layout geometry
+  ``LayoutQuantError``        quantized-value invariants broken: int
+                              values without ``scales`` (or scales on
+                              float values), bin-count/shape/dtype
+                              mismatches, negative or non-finite scales
 
 ``validate_layout`` checks one layout; ``validate_tree`` walks an
 exec-param tree and checks every ``"packed"`` entry.
@@ -93,6 +97,14 @@ class LayoutAuxError(LayoutError):
     """Static aux (``conv_taps``/``k_full``) disagrees with geometry."""
 
     code = "aux"
+
+
+class LayoutQuantError(LayoutError):
+    """Quantized values and their ``scales`` leaves disagree: int values
+    with no scales, scales on float values, wrong bin count / shape /
+    dtype, or negative / non-finite scale entries."""
+
+    code = "quant"
 
 
 def _as_host(x):
@@ -172,6 +184,50 @@ def _bounds_of(sizes):
     return out
 
 
+def _check_scales(layout, allowed_shapes, path):
+    """Quantization invariants shared by both layouts: integer values and
+    ``scales`` must come together; per bin the scale leaf must be float,
+    finite, non-negative, and of one of the ``allowed_shapes(bin)`` forms
+    (the rank encodes the scale granularity — see ``core.quant``)."""
+    int_values = any(
+        np.issubdtype(np.asarray(v).dtype, np.integer)
+        for v in layout.values)
+    if layout.scales is None:
+        if int_values:
+            raise LayoutQuantError(
+                "integer values without scales (quantized layout missing "
+                "its dequantization leaves)", field="scales", path=path)
+        return
+    if not int_values:
+        raise LayoutQuantError(
+            f"scales present on {np.asarray(layout.values[0]).dtype} "
+            "values (only int values are quantized)", field="scales",
+            path=path)
+    if len(layout.scales) != len(layout.values):
+        raise LayoutQuantError(
+            f"{len(layout.scales)} scale bin(s) vs "
+            f"{len(layout.values)} value bin(s)", field="scales", path=path)
+    for b, s in enumerate(layout.scales):
+        sa = _as_host(s)
+        if not np.issubdtype(sa.dtype, np.floating):
+            raise LayoutQuantError(
+                f"dtype {sa.dtype} is not floating", field="scales", bin=b,
+                path=path)
+        if tuple(sa.shape) not in allowed_shapes(b):
+            raise LayoutQuantError(
+                f"shape {tuple(sa.shape)} is none of the granularity "
+                f"forms {allowed_shapes(b)}", field="scales", bin=b,
+                path=path)
+        if sa.size and not np.all(np.isfinite(sa)):
+            raise LayoutQuantError(
+                "non-finite scale entries", field="scales", bin=b,
+                path=path)
+        if sa.size and float(sa.min()) < 0:
+            raise LayoutQuantError(
+                f"negative scale {float(sa.min())}", field="scales", bin=b,
+                path=path)
+
+
 def _validate_packed(layout: PackedLayout, path):
     bk, bn = layout.block
     K, N = layout.shape
@@ -222,6 +278,14 @@ def _validate_packed(layout: PackedLayout, path):
     _check_perm_pair(layout.perm, layout.inv_perm, Nb, path)
     if layout.conv_taps is not None:
         _check_conv_taps(layout.conv_taps, Kb, bk, path)
+    # quantization: "block" granularity = one scale per stored block
+    # (values shape minus the (bk, bn) block), "out" = one per block
+    # column (additionally minus the degree axis)
+    _check_scales(
+        layout,
+        lambda b: (np.shape(layout.values[b])[:-2],
+                   np.shape(layout.values[b])[:-3]),
+        path)
 
 
 def _check_conv_taps(conv_taps, Kb, bk, path):
@@ -331,6 +395,13 @@ def _validate_tap(layout: TapLayout, path):
     _check_nnz(layout.nnz, _bounds_of(layout.bin_sizes),
                layout.bin_degrees, G, R, path)
     _check_perm_pair(layout.perm, layout.inv_perm, G, path)
+    # quantization: "block" granularity = one scale per tap slot (G_b,
+    # L_b); "out" = one per filter in the broadcastable (G_b, 1, group)
+    _check_scales(
+        layout,
+        lambda b: (np.shape(layout.values[b])[:-1],
+                   (np.shape(layout.values[b])[0], 1, group)),
+        path)
 
 
 def validate_layout(layout, *, path=None):

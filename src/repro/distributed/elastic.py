@@ -40,7 +40,7 @@ def choose_mesh_shape(n_devices: int, model_parallel: int = 16,
 
 def replica_restore(ckpt_dir, tree_like, *, mapping=(), masks=None,
                     artifact_dir=None, step=None, shardings=None,
-                    **compile_kw):
+                    spec=None, **compile_kw):
     """Elastic replica start: restore the newest complete checkpoint, then
     load-or-compile the packed execution params through the SAME artifact
     front door as ``launch.serve --artifacts``.
@@ -48,6 +48,9 @@ def replica_restore(ckpt_dir, tree_like, *, mapping=(), masks=None,
     ``masks=None`` derives masks from the zeros already baked into the
     restored weights (checkpoints hold post-``apply_masks`` params), so a
     replica needs nothing beyond the checkpoint + the artifact store.
+    ``spec`` (a ``serve.compile.CompileSpec``) carries the compile
+    options; extra ``compile_kw`` still forwards the legacy per-option
+    kwargs through ``compile_model``'s deprecation shim.
     Returns ``(exec_params, report, step)`` — ``(None, None, None)`` when
     no checkpoint exists yet.  A missing/stale/corrupt artifact costs a
     repack (logged, structured reason); it can never mis-execute.
@@ -59,7 +62,7 @@ def replica_restore(ckpt_dir, tree_like, *, mapping=(), masks=None,
                                 shardings=shardings)
     if params is None:
         return None, None, None
-    exec_params, report = compile_model(params, masks, mapping,
+    exec_params, report = compile_model(params, masks, mapping, spec=spec,
                                         artifact_dir=artifact_dir,
                                         **compile_kw)
     return exec_params, report, step

@@ -60,14 +60,20 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import bcs as BCS
 
 
-def _kernel(k_idx, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act):
+def _kernel(k_idx, x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_l, act):
     l = pl.program_id(2)
 
     @pl.when(l == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0, 0],
+    w = w_ref[0, 0]
+    if s_ref is not None:
+        # int8 path: dequantize in-kernel (one fp32 scale per stored block
+        # or per block column) BEFORE the dot, so accumulation stays fp32
+        # and the result equals the dequantized dense reference
+        w = w.astype(jnp.float32) * s_ref[0, 0]
+    acc_ref[...] += jnp.dot(x_ref[...], w,
                             preferred_element_type=jnp.float32)
 
     @pl.when(l == n_l - 1)
@@ -134,14 +140,16 @@ def _m_tile(M, bm, dtype):
 
 @functools.partial(jax.jit,
                    static_argnames=("bm", "act", "interpret", "out_dtype"))
-def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
-               interpret=None, out_dtype=None):
+def bsr_matmul(x, values, k_idx, bias=None, scales=None, *, bm=128,
+               act="none", interpret=None, out_dtype=None):
     """x (M, K) @ BCS-sparse W (K, N) -> (M, N).
 
-    values (Nb, L, bk, bn); k_idx (Nb, L) int32.  ``interpret=None``
-    auto-detects the backend (Pallas lowering on TPU, interpreter
-    elsewhere).  ``out_dtype`` defaults to x.dtype; pass jnp.float32 to
-    keep the fp32 accumulator precision on a bf16 input."""
+    values (Nb, L, bk, bn); k_idx (Nb, L) int32.  ``scales`` rides along
+    for int8 values (``core.quant``): fp32, (Nb, L) per-block or (Nb,)
+    per-block-column, dequantized in-kernel before the fp32-accumulated
+    dot.  ``interpret=None`` auto-detects the backend (Pallas lowering on
+    TPU, interpreter elsewhere).  ``out_dtype`` defaults to x.dtype; pass
+    jnp.float32 to keep the fp32 accumulator precision on a bf16 input."""
     if interpret is None:
         interpret = _auto_interpret()
     M, K = x.shape
@@ -151,7 +159,8 @@ def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
     assert K % bk == 0, (K, bk)
     if Mp != M:
         x = jnp.pad(x, ((0, Mp - M), (0, 0)))
-    out_dtype = out_dtype or x.dtype
+    if out_dtype is None:
+        out_dtype = x.dtype
 
     grid = (Mp // bm, Nb, L)
     in_specs = [
@@ -159,14 +168,26 @@ def bsr_matmul(x, values, k_idx, bias=None, *, bm=128, act="none",
         pl.BlockSpec((1, 1, bk, bn), lambda i, j, l, kidx: (j, l, 0, 0)),
     ]
     args = [x, values]
+    if scales is not None:
+        sc = scales if scales.ndim == 2 else scales[:, None]
+        # per-block scales index (j, l); per-column scales are constant
+        # across the degree steps and index (j, 0)
+        idx = ((lambda i, j, l, kidx: (j, l)) if sc.shape[1] == L
+               else (lambda i, j, l, kidx: (j, 0)))
+        in_specs.append(pl.BlockSpec((1, 1), idx))
+        args.append(sc)
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, l, kidx: (0, j)))
         args.append(bias.reshape(1, N))
-        kern = functools.partial(_kernel, n_l=L, act=act)
-    else:
-        def kern(k_idx_ref, x_ref, w_ref, o_ref, acc_ref):
-            _kernel(k_idx_ref, x_ref, w_ref, None, o_ref, acc_ref,
-                    n_l=L, act=act)
+    has_s, has_b = scales is not None, bias is not None
+
+    def kern(k_idx_ref, x_ref, w_ref, *rest):
+        rest = list(rest)
+        s_ref = rest.pop(0) if has_s else None
+        b_ref = rest.pop(0) if has_b else None
+        o_ref, acc_ref = rest
+        _kernel(k_idx_ref, x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref,
+                n_l=L, act=act)
 
     y = pl.pallas_call(
         kern,
@@ -194,12 +215,15 @@ def bsr_matmul_packed(x, layout, bias=None, *, bm=128, act="none",
     order first); the final column gather restores the original output
     order.  Per-column accumulation order is identical to the single-bin
     kernel, so reordered and unreordered results are bit-identical.
+    Quantized layouts (int8 values, ``core.quant``) thread each bin's
+    ``scales`` leaf into the launch for in-kernel dequantization.
     """
     outs = []
-    for vals_b, kidx_b, bias_b in zip(layout.values, layout.k_idx,
-                                      layout.bin_bias(bias)):
-        outs.append(bsr_matmul(x, vals_b, kidx_b, bias=bias_b, bm=bm,
-                               act=act, interpret=interpret,
+    for vals_b, kidx_b, sc_b, bias_b in zip(layout.values, layout.k_idx,
+                                            layout.bin_scales(),
+                                            layout.bin_bias(bias)):
+        outs.append(bsr_matmul(x, vals_b, kidx_b, bias=bias_b, scales=sc_b,
+                               bm=bm, act=act, interpret=interpret,
                                out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     return layout.unpermute_cols(y)
@@ -209,7 +233,7 @@ def bsr_matmul_packed(x, layout, bias=None, *, bm=128, act="none",
 # Tap-gather kernel: pattern/connectivity-pruned convs (PatDNN/PCONV style)
 # ---------------------------------------------------------------------------
 
-def _tap_kernel(t_idx, x_ref, w_ref, b_ref, o_ref, *, act):
+def _tap_kernel(t_idx, x_ref, w_ref, s_ref, b_ref, o_ref, *, act):
     """One grid step per (M tile, filter group): gather this group's
     surviving taps from the VMEM-resident alive band and contract them in a
     single dot — no cross-step accumulator, epilogue fused into the same
@@ -217,7 +241,14 @@ def _tap_kernel(t_idx, x_ref, w_ref, b_ref, o_ref, *, act):
     j = pl.program_id(1)
     taps = t_idx[j]                                     # (L,) int32, SMEM
     g = jnp.take(x_ref[...], taps, axis=1)              # (bm, L)
-    out = jnp.dot(g, w_ref[0], preferred_element_type=jnp.float32)
+    w = w_ref[0]
+    if s_ref is not None:
+        # int8 path: per-slot scales arrive as (1, L), per-filter scales as
+        # (1, 1, group) — dequantize before the dot (fp32 accumulation)
+        s = s_ref[...]
+        w = w.astype(jnp.float32) * (s[0][:, None] if s.ndim == 2
+                                     else s[0, 0][None, :])
+    out = jnp.dot(g, w, preferred_element_type=jnp.float32)
     if b_ref is not None:
         out = out + b_ref[0].astype(jnp.float32)
     if act == "silu":
@@ -229,8 +260,8 @@ def _tap_kernel(t_idx, x_ref, w_ref, b_ref, o_ref, *, act):
 
 @functools.partial(jax.jit,
                    static_argnames=("bm", "act", "interpret", "out_dtype"))
-def tap_gather_conv(x, values, t_idx, bias=None, *, bm=128, act="none",
-                    interpret=None, out_dtype=None):
+def tap_gather_conv(x, values, t_idx, bias=None, scales=None, *, bm=128,
+                    act="none", interpret=None, out_dtype=None):
     """x (M, R) alive im2col band @ per-group tap lists -> (M, G*group).
 
     The executor for pattern/connectivity-pruned convolutions (one launch
@@ -267,13 +298,25 @@ def tap_gather_conv(x, values, t_idx, bias=None, *, bm=128, act="none",
         pl.BlockSpec((1, L, gp), lambda i, j, tidx: (j, 0, 0)),
     ]
     args = [x, values]
+    if scales is not None:
+        # per-slot (G, L) scales ride as a (1, L) row per group; per-filter
+        # (G, 1, gp) scales as a (1, 1, gp) slab — rank picks the form
+        if scales.ndim == 2:
+            in_specs.append(pl.BlockSpec((1, L), lambda i, j, tidx: (j, 0)))
+        else:
+            in_specs.append(
+                pl.BlockSpec((1, 1, gp), lambda i, j, tidx: (j, 0, 0)))
+        args.append(scales)
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, gp), lambda i, j, tidx: (0, j)))
         args.append(bias.reshape(1, N))
-        kern = functools.partial(_tap_kernel, act=act)
-    else:
-        def kern(t_idx_ref, x_ref, w_ref, o_ref):
-            _tap_kernel(t_idx_ref, x_ref, w_ref, None, o_ref, act=act)
+    has_s, has_b = scales is not None, bias is not None
+
+    def kern(t_idx_ref, x_ref, w_ref, *rest):
+        rest = list(rest)
+        s_ref = rest.pop(0) if has_s else None
+        b_ref = rest.pop(0) if has_b else None
+        _tap_kernel(t_idx_ref, x_ref, w_ref, s_ref, b_ref, rest[0], act=act)
 
     y = pl.pallas_call(
         kern,
@@ -296,12 +339,14 @@ def tap_gather_conv_packed(x, layout, bias=None, *, bm=128, act="none",
     One ``tap_gather_conv`` launch per degree bin (each bin padded only to
     its own max tap degree), outputs concatenated over bins and gathered
     back through ``inv_perm`` — the TapLayout mirror of
-    ``bsr_matmul_packed``."""
+    ``bsr_matmul_packed``, including the quantized-scales plumbing."""
     outs = []
-    for vals_b, tidx_b, bias_b in zip(layout.values, layout.t_idx,
-                                      layout.bin_bias(bias)):
-        outs.append(tap_gather_conv(x, vals_b, tidx_b, bias=bias_b, bm=bm,
-                                    act=act, interpret=interpret,
+    for vals_b, tidx_b, sc_b, bias_b in zip(layout.values, layout.t_idx,
+                                            layout.bin_scales(),
+                                            layout.bin_bias(bias)):
+        outs.append(tap_gather_conv(x, vals_b, tidx_b, bias=bias_b,
+                                    scales=sc_b, bm=bm, act=act,
+                                    interpret=interpret,
                                     out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     return layout.unpermute_cols(y)
@@ -324,8 +369,8 @@ def _out_positions(i, bm, geom):
     return (m // Wo) * (s * Wp) + (m % Wo) * s
 
 
-def _conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act,
-                 geom):
+def _conv_kernel(tap_ref, x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *,
+                 n_l, act, geom):
     """Implicit BCS conv step: the x tile (bm, bk) is gathered from the
     VMEM-resident padded image — slot (j, l)'s SMEM entry carries this
     K-block's (dy*Wp + dx, c0) offsets, so the gather lands on input
@@ -344,8 +389,10 @@ def _conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act,
     cols = tap_ref[j, l, 1] + jax.lax.broadcasted_iota(jnp.int32, (bm, bk),
                                                        1)
     g = jnp.take(x_ref[...].reshape(-1), rows * C + cols, axis=0)
-    acc_ref[...] += jnp.dot(g, w_ref[0, 0],
-                            preferred_element_type=jnp.float32)
+    w = w_ref[0, 0]
+    if s_ref is not None:
+        w = w.astype(jnp.float32) * s_ref[0, 0]
+    acc_ref[...] += jnp.dot(g, w, preferred_element_type=jnp.float32)
 
     @pl.when(l == n_l - 1)
     def _store():
@@ -361,8 +408,8 @@ def _conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_l, act,
 
 @functools.partial(jax.jit, static_argnames=("geom", "bm", "act",
                                              "interpret", "out_dtype"))
-def _conv_implicit_bin(xp, values, taps, bias=None, *, geom, bm=128,
-                       act="none", interpret=None, out_dtype=None):
+def _conv_implicit_bin(xp, values, taps, bias=None, scales=None, *, geom,
+                       bm=128, act="none", interpret=None, out_dtype=None):
     """One degree bin of the implicit BCS conv: xp (B, Hp*Wp, C) padded
     flattened images, values (Nb, L, bk, bn), taps (Nb, L, 2) int32 per-slot
     (dy*Wp + dx, c0) offsets (scalar-prefetched).  Grid (B, M/bm, Nb, L):
@@ -385,15 +432,25 @@ def _conv_implicit_bin(xp, values, taps, bias=None, *, geom, bm=128,
         pl.BlockSpec((1, 1, bk, bn), lambda b, i, j, l, taps: (j, l, 0, 0)),
     ]
     args = [xp, values]
+    if scales is not None:
+        sc = scales if scales.ndim == 2 else scales[:, None]
+        idx = ((lambda b, i, j, l, taps: (j, l)) if sc.shape[1] == L
+               else (lambda b, i, j, l, taps: (j, 0)))
+        in_specs.append(pl.BlockSpec((1, 1), idx))
+        args.append(sc)
     if bias is not None:
         in_specs.append(
             pl.BlockSpec((1, bn), lambda b, i, j, l, taps: (0, j)))
         args.append(bias.reshape(1, N))
-        kern = functools.partial(_conv_kernel, n_l=L, act=act, geom=geom)
-    else:
-        def kern(tap_ref, x_ref, w_ref, o_ref, acc_ref):
-            _conv_kernel(tap_ref, x_ref, w_ref, None, o_ref, acc_ref,
-                         n_l=L, act=act, geom=geom)
+    has_s, has_b = scales is not None, bias is not None
+
+    def kern(tap_ref, x_ref, w_ref, *rest):
+        rest = list(rest)
+        s_ref = rest.pop(0) if has_s else None
+        b_ref = rest.pop(0) if has_b else None
+        o_ref, acc_ref = rest
+        _conv_kernel(tap_ref, x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref,
+                     n_l=L, act=act, geom=geom)
 
     return pl.pallas_call(
         kern,
@@ -438,20 +495,22 @@ def bsr_conv2d_implicit(x, layout, *, kh, kw, stride=1, padding="SAME",
     c0_t = jnp.asarray([c0 for _, _, c0 in taps], jnp.int32)
     geom = (Hp, Wp, Ho, Wo, stride)
     outs = []
-    for vals_b, kidx_b, bias_b in zip(layout.values, layout.k_idx,
-                                      layout.bin_bias(bias)):
+    for vals_b, kidx_b, sc_b, bias_b in zip(layout.values, layout.k_idx,
+                                            layout.bin_scales(),
+                                            layout.bin_bias(bias)):
         slot = jnp.stack([jnp.take(off_t, kidx_b),
                           jnp.take(c0_t, kidx_b)], axis=-1)
         outs.append(_conv_implicit_bin(xp, vals_b, slot, bias=bias_b,
-                                       geom=geom, bm=bm, act=act,
-                                       interpret=interpret,
+                                       scales=sc_b, geom=geom, bm=bm,
+                                       act=act, interpret=interpret,
                                        out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     y = layout.unpermute_cols(y)
     return y[:, :Ho * Wo].reshape(B, Ho, Wo, y.shape[-1])
 
 
-def _tap_conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, *, act, geom):
+def _tap_conv_kernel(tap_ref, x_ref, w_ref, s_ref, b_ref, o_ref, *, act,
+                     geom):
     """Implicit tap-gather step: like ``_tap_kernel`` but the (bm, L) tap
     matrix is gathered straight from the VMEM-resident padded image —
     group j's SMEM row carries each tap slot's (dy*Wp + dx, c) offsets, so
@@ -462,7 +521,12 @@ def _tap_conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, *, act, geom):
     base = _out_positions(i, bm, geom)                           # (bm, 1)
     flat = (base + tap_ref[j, :, 0][None, :]) * C + tap_ref[j, :, 1][None, :]
     g = jnp.take(x_ref[...].reshape(-1), flat, axis=0)           # (bm, L)
-    out = jnp.dot(g, w_ref[0], preferred_element_type=jnp.float32)
+    w = w_ref[0]
+    if s_ref is not None:
+        s = s_ref[...]
+        w = w.astype(jnp.float32) * (s[0][:, None] if s.ndim == 2
+                                     else s[0, 0][None, :])
+    out = jnp.dot(g, w, preferred_element_type=jnp.float32)
     if b_ref is not None:
         out = out + b_ref[0].astype(jnp.float32)
     if act == "silu":
@@ -474,8 +538,8 @@ def _tap_conv_kernel(tap_ref, x_ref, w_ref, b_ref, o_ref, *, act, geom):
 
 @functools.partial(jax.jit, static_argnames=("geom", "bm", "act",
                                              "interpret", "out_dtype"))
-def _tap_implicit_bin(xp, values, taps, bias=None, *, geom, bm=128,
-                      act="none", interpret=None, out_dtype=None):
+def _tap_implicit_bin(xp, values, taps, bias=None, scales=None, *, geom,
+                      bm=128, act="none", interpret=None, out_dtype=None):
     """One degree bin of the implicit tap-gather conv: xp (B, Hp*Wp, C),
     values (G, L, group), taps (G, L, 2) int32 per-slot (dy*Wp + dx, c)
     offsets.  Grid (B, M/bm, G), no cross-step accumulator — epilogue fused
@@ -495,14 +559,25 @@ def _tap_implicit_bin(xp, values, taps, bias=None, *, geom, bm=128,
         pl.BlockSpec((1, L, gp), lambda b, i, j, taps: (j, 0, 0)),
     ]
     args = [xp, values]
+    if scales is not None:
+        if scales.ndim == 2:
+            in_specs.append(
+                pl.BlockSpec((1, L), lambda b, i, j, taps: (j, 0)))
+        else:
+            in_specs.append(
+                pl.BlockSpec((1, 1, gp), lambda b, i, j, taps: (j, 0, 0)))
+        args.append(scales)
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, gp), lambda b, i, j, taps: (0, j)))
         args.append(bias.reshape(1, N))
-        kern = functools.partial(_tap_conv_kernel, act=act, geom=geom)
-    else:
-        def kern(tap_ref, x_ref, w_ref, o_ref):
-            _tap_conv_kernel(tap_ref, x_ref, w_ref, None, o_ref, act=act,
-                             geom=geom)
+    has_s, has_b = scales is not None, bias is not None
+
+    def kern(tap_ref, x_ref, w_ref, *rest):
+        rest = list(rest)
+        s_ref = rest.pop(0) if has_s else None
+        b_ref = rest.pop(0) if has_b else None
+        _tap_conv_kernel(tap_ref, x_ref, w_ref, s_ref, b_ref, rest[0],
+                         act=act, geom=geom)
 
     return pl.pallas_call(
         kern,
@@ -539,14 +614,16 @@ def tap_gather_conv_implicit(x, layout, *, kh, kw, stride=1, padding="SAME",
     xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0))).reshape(B, Hp * Wp, C)
     geom = (Hp, Wp, Ho, Wo, stride)
     outs = []
-    for vals_b, kf_b, bias_b in zip(layout.values, layout.bin_k_full(),
-                                    layout.bin_bias(bias)):
+    for vals_b, kf_b, sc_b, bias_b in zip(layout.values,
+                                          layout.bin_k_full(),
+                                          layout.bin_scales(),
+                                          layout.bin_bias(bias)):
         t = kf_b // C
         slot = jnp.stack([(t // kw) * Wp + t % kw, kf_b % C],
                          axis=-1).astype(jnp.int32)
         outs.append(_tap_implicit_bin(xp, vals_b, slot, bias=bias_b,
-                                      geom=geom, bm=bm, act=act,
-                                      interpret=interpret,
+                                      scales=sc_b, geom=geom, bm=bm,
+                                      act=act, interpret=interpret,
                                       out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     y = layout.unpermute_cols(y)

@@ -46,7 +46,12 @@ every sparse consumer shares — optionally degree-sorted/binned
 
 Cache-key contract: results are memoized on a blake2b content digest of
 (layout kind, w bytes, mask bytes, w shape+dtype, block-or-group, reorder,
-n_bins).  Every knob that changes the produced layout is part of the key,
+n_bins, quantization spec).  ``pack``/``pack_taps`` take ``value_dtype``
+("int8") + ``scale_granularity`` to emit quantized layouts
+(``core.quant``): the float pack is produced (or fetched) first — so a
+quantized pack warms/reuses the float entry — then quantized and cached
+under its own key.  Every knob that changes the produced layout is part of
+the key,
 so reordered and unreordered packs, different bin counts, block shapes, or
 tap-group sizes of the SAME weights can never collide; entries are evicted
 LRU under both a count and a byte bound (configurable via
@@ -66,6 +71,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bcs as BCS
+from repro.core import quant as QUANT
 from repro.core.packed import PackedLayout
 from repro.kernels.bsr_matmul import (bsr_conv2d_implicit, bsr_matmul_packed,
                                       conv_geometry, tap_gather_conv_implicit,
@@ -143,10 +149,10 @@ def _evict_to_bounds():
 
 
 def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins,
-            kind="bcs", conv=None) -> str:
+            kind="bcs", conv=None, quant=None) -> str:
     h = hashlib.blake2b(digest_size=16)
     h.update(str((kind, w.shape, str(w.dtype), block, bool(reorder),
-                  int(n_bins), conv)).encode())
+                  int(n_bins), conv, quant)).encode())
     h.update(np.ascontiguousarray(w).tobytes())
     h.update(np.ascontiguousarray(mask).tobytes())
     return h.hexdigest()
@@ -161,7 +167,16 @@ def _cache_put(key, out):
     _evict_to_bounds()
 
 
+def _quant_spec(value_dtype, scale_granularity):
+    """Normalize the (value_dtype, scale_granularity) pair for the cache
+    digest: None (float pack) or a ('int8', granularity) tuple."""
+    if value_dtype is None:
+        return None
+    return (str(value_dtype), str(scale_granularity))
+
+
 def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
+         value_dtype=None, scale_granularity="block",
          use_cache=True) -> PackedLayout:
     """Host-side packing of a pruned weight into the kernel layout.
 
@@ -173,23 +188,33 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
     the static K-block -> (dy, dx, c0) offset table
     (``core.bcs.conv_tap_table``) is attached as ``conv_taps`` aux so the
     implicit-GEMM kernel can gather from the feature map directly; the
-    geometry is part of the cache digest.
+    geometry is part of the cache digest.  ``value_dtype="int8"`` quantizes
+    the packed values symmetrically (``core.quant``) at
+    ``scale_granularity`` ("block" or "out"), attaching the fp32 scale
+    leaves — the float pack is produced (and cached) first, then quantized.
     """
     w = np.asarray(w)
     mask = np.asarray(mask)
-    key = (_digest(w, mask, tuple(block), reorder, n_bins, conv=conv)
+    qspec = _quant_spec(value_dtype, scale_granularity)
+    key = (_digest(w, mask, tuple(block), reorder, n_bins, conv=conv,
+                   quant=qspec)
            if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
         _PACK_CACHE_STATS["hits"] += 1
         return _PACK_CACHE[key]
-    if reorder:
+    if value_dtype is not None:
+        base = pack(w, mask, block, reorder=reorder, n_bins=n_bins,
+                    conv=conv, use_cache=use_cache)
+        out = QUANT.quantize_layout(base, value_dtype=value_dtype,
+                                    scale_granularity=scale_granularity)
+    elif reorder:
         out = BCS.pack_csc_reordered(w, mask, block, n_bins=n_bins)
     else:
         values, k_idx, nnz, _ = BCS.pack_csc(w, mask, block)
         out = PackedLayout(values=(values,), k_idx=(k_idx,), nnz=nnz,
                            block=tuple(block), shape=tuple(w.shape))
-    if conv is not None:
+    if conv is not None and out.conv_taps is None:
         kh, kw, cin = conv
         out = dataclasses.replace(
             out, conv_taps=BCS.conv_tap_table(kh, kw, cin, block[0]))
@@ -199,6 +224,7 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
 
 
 def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
+              value_dtype=None, scale_granularity="block",
               use_cache=True):
     """Host-side packing of a pattern/connectivity-pruned conv weight into
     the tap-gather layout.
@@ -212,17 +238,27 @@ def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
     layouts have uniform degrees, so extra bins cost nothing).  Shares the
     pack cache (and its cache-key contract — the layout kind is part of
     the digest, so a TapLayout and a PackedLayout of the same weights
-    never collide)."""
+    never collide).  ``value_dtype="int8"`` quantizes the tap values
+    (``core.quant``); prefer ``scale_granularity="out"`` for group=1
+    layouts, where a per-slot scale would cost 4 bytes per stored value."""
     w = np.asarray(w)
     mask = np.asarray(mask)
-    key = (_digest(w, mask, (1, int(group)), reorder, n_bins, kind="taps")
+    qspec = _quant_spec(value_dtype, scale_granularity)
+    key = (_digest(w, mask, (1, int(group)), reorder, n_bins, kind="taps",
+                   quant=qspec)
            if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
         _PACK_CACHE_STATS["hits"] += 1
         return _PACK_CACHE[key]
-    out = BCS.pattern_lower(w, mask, group=group, n_bins=n_bins,
-                            reorder=reorder)
+    if value_dtype is not None:
+        base = pack_taps(w, mask, group=group, reorder=reorder,
+                         n_bins=n_bins, use_cache=use_cache)
+        out = QUANT.quantize_layout(base, value_dtype=value_dtype,
+                                    scale_granularity=scale_granularity)
+    else:
+        out = BCS.pattern_lower(w, mask, group=group, n_bins=n_bins,
+                                reorder=reorder)
     if key is not None:
         _cache_put(key, out)
     return out

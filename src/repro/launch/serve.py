@@ -28,7 +28,7 @@ from repro.core import reweighted as RW
 from repro.data.pipeline import synthetic_batch
 from repro.kernels.ops import pack_cache_stats
 from repro.models import transformer as T
-from repro.serve.compile import compile_model, compiled_summary
+from repro.serve.compile import CompileSpec, compile_model, compiled_summary
 from repro.serve.engine import ServingEngine, generate
 from repro.train.trainer import apply_masks
 
@@ -88,7 +88,7 @@ def main(argv=None):
         params = apply_masks(params, masks)
         t0 = time.time()
         params, report = compile_model(params, masks, SPARSE_SPEC,
-                                       keep_dense=False,
+                                       spec=CompileSpec(keep_dense=False),
                                        artifact_dir=args.artifacts)
         dt_compile = time.time() - t0
         print(f"compile_model in {dt_compile:.2f}s"

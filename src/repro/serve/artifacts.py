@@ -55,7 +55,12 @@ from repro.models.module import path_str
 
 log = logging.getLogger("repro.serve.artifacts")
 
-FORMAT_VERSION = 1
+# v2: quantized value leaves (int8 values + fp32 ``scales``, see
+# ``core.quant``) join the layout serialization, the manifest stores the
+# typed CompileReport + CompileSpec, and the digest hashes the spec's
+# digest fields — older fp-only artifacts fail the version check and
+# repack instead of misloading
+FORMAT_VERSION = 2
 MANIFEST_FILE = "MANIFEST.json"
 ARRAYS_FILE = "arrays.npz"
 
@@ -123,20 +128,28 @@ def _hash_tree(h, tree, tag):
         h.update(np.ascontiguousarray(a).tobytes())
 
 
-def model_digest(params, masks, mapping, *, block_override=None,
-                 min_saving=0.0, reorder=True, n_bins=None,
-                 exclude=("router", "embed", "head")) -> str:
+def model_digest(params, masks, mapping, *, spec=None, **legacy) -> str:
     """Content digest of everything that determines the compile result:
-    the weights, the masks, the scheme mapping, and every ``compile_model``
-    knob that changes the produced layouts (``keep_dense`` is applied at
-    graft time, so it stays out of the key).  Extends the per-layer
-    ``kernels.ops.pack`` cache-key contract to the whole model — two
-    compiles share an artifact iff they would produce identical layouts."""
+    the weights, the masks, the scheme mapping, and the ``CompileSpec``
+    digest fields — exactly the knobs that change the produced layouts
+    (``keep_dense``/``implicit`` are serving-time, so they stay out of the
+    key).  Pass ``spec=CompileSpec(...)``; the historical keyword pile
+    still resolves through the same shim as ``compile_model``, and both
+    spellings of an equivalent compile digest identically.  Extends the
+    per-layer ``kernels.ops.pack`` cache-key contract to the whole model —
+    two compiles share an artifact iff they would produce identical
+    layouts."""
+    from repro.serve.compile import resolve_spec
+    import warnings
+    with warnings.catch_warnings():
+        # the shim's DeprecationWarning belongs to compile_model's surface;
+        # digests are computed internally on every artifact lookup
+        warnings.simplefilter("ignore", DeprecationWarning)
+        spec = resolve_spec(spec, **legacy)
     h = hashlib.blake2b(digest_size=16)
     h.update(repr(("repro-artifact", FORMAT_VERSION,
                    [(pat, repr(choice)) for pat, choice in mapping],
-                   block_override, float(min_saving), bool(reorder),
-                   n_bins, tuple(exclude))).encode())
+                   spec.digest_fields())).encode())
     _hash_tree(h, params, "params")
     _hash_tree(h, masks, "masks")
     return h.hexdigest()
@@ -159,6 +172,8 @@ def _layout_leaves(layout):
         for b in range(layout.n_bins):
             yield f"values.{b}", layout.values[b]
             yield f"k_idx.{b}", layout.k_idx[b]
+            if layout.scales is not None:
+                yield f"scales.{b}", layout.scales[b]
         yield "nnz", layout.nnz
         yield "perm", layout.perm
         yield "inv_perm", layout.inv_perm
@@ -168,6 +183,8 @@ def _layout_leaves(layout):
             yield f"t_idx.{b}", layout.t_idx[b]
             if layout.k_full is not None:
                 yield f"k_full.{b}", layout.k_full[b]
+            if layout.scales is not None:
+                yield f"scales.{b}", layout.scales[b]
         yield "nnz", layout.nnz
         yield "alive", layout.alive
         yield "perm", layout.perm
@@ -220,6 +237,9 @@ def _layout_from_spec(lpath, spec, data):
         return out
 
     n_bins = int(spec["n_bins"])
+    has_scales = "scales.0" in leaves
+    scales = (tuple(_get(f"scales.{b}") for b in range(n_bins))
+              if has_scales else None)
     if spec["layout"] == "packed":
         return PackedLayout(
             values=tuple(_get(f"values.{b}") for b in range(n_bins)),
@@ -229,7 +249,8 @@ def _layout_from_spec(lpath, spec, data):
             inv_perm=_get("inv_perm", required=False),
             block=tuple(spec["block"]), shape=tuple(spec["shape"]),
             conv_taps=(tuple(tuple(t) for t in spec["conv_taps"])
-                       if spec.get("conv_taps") is not None else None))
+                       if spec.get("conv_taps") is not None else None),
+            scales=scales)
     if spec["layout"] == "tap":
         has_kfull = "k_full.0" in leaves
         return TapLayout(
@@ -240,7 +261,8 @@ def _layout_from_spec(lpath, spec, data):
             nnz=_get("nnz"), alive=_get("alive"),
             perm=_get("perm", required=False),
             inv_perm=_get("inv_perm", required=False),
-            group=int(spec["group"]), shape=tuple(spec["shape"]))
+            group=int(spec["group"]), shape=tuple(spec["shape"]),
+            scales=scales)
     raise ArtifactCorrupt(
         f"layer {lpath!r}: unknown layout kind {spec['layout']!r}")
 
@@ -277,13 +299,22 @@ def save_artifact(artifact_dir, key, exec_params, report, *,
     specs, report), then publishes with one atomic ``os.replace`` — a
     crash at any point leaves either the previous state or a ``.tmp_*``
     husk loaders never read.  Content-addressed: if this digest is
-    already published (or a concurrent writer wins the rename race) the
-    existing artifact is kept.  Returns the final path.
+    already published at the CURRENT format version (or a concurrent
+    writer wins the rename race) the existing artifact is kept; an
+    artifact left at this key by an older format version is replaced, so
+    a version bump costs exactly one repack per key, not one per start.
+    Returns the final path.
     """
     artifact_dir = pathlib.Path(artifact_dir)
     final = artifact_dir / key
     if final.exists():
-        return final
+        try:
+            man = json.loads((final / MANIFEST_FILE).read_text())
+            if man.get("format_version") == FORMAT_VERSION:
+                return final
+        except (OSError, ValueError):
+            pass                       # unreadable manifest: replace it
+        shutil.rmtree(final, ignore_errors=True)
     layers = _packed_layers(exec_params, report)
     if validate:
         for lpath, layout in layers.items():
@@ -306,7 +337,8 @@ def save_artifact(artifact_dir, key, exec_params, report, *,
         "files": {ARRAYS_FILE: {"sha256": file_checksum(arrays_path),
                                 "bytes": arrays_path.stat().st_size}},
         "layers": specs,
-        "report": report,
+        "report": (report.to_json() if hasattr(report, "to_json")
+                   else report),
         "meta": meta or {},
     }
     (tmp / MANIFEST_FILE).write_text(json.dumps(manifest, indent=1))
@@ -388,10 +420,9 @@ def load_artifact(artifact_dir, key):
         layout = _layout_from_spec(lpath, spec, data)
         validate_layout(layout, path=lpath)     # LayoutError propagates
         layers[lpath] = layout
-    for row in report:                 # JSON turned tuples into lists
-        for k in ("block", "shape"):
-            if isinstance(row.get(k), list):
-                row[k] = tuple(row[k])
+    # rebuild the typed report (also accepts historical bare-list rows)
+    from repro.serve.compile import CompileReport
+    report = CompileReport.from_json(report)
     return layers, report
 
 

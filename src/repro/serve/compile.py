@@ -31,15 +31,36 @@ an expert axis), so per-layer layouts are padded to common per-bin column
 degrees and stacked — one pallas_call per projection *kind* and bin, not
 per layer.  Packing itself is vectorized + content-cached (see
 ``kernels.ops.pack``); a second compile of the same weights is free.
+
+The compile knobs live in one frozen ``CompileSpec`` — the primary
+``compile_model(params, masks, mapping, spec=...)`` signature — and the
+spec (not ad-hoc kwarg tuples) feeds both the pack-cache keys and the
+artifact ``model_digest``, so equivalent invocations hit the same cache
+entries however they were spelled.  The old keyword pile
+(``keep_dense=``, ``reorder=``, ...) still works as a deprecation shim
+that builds a spec.  ``spec.value_dtype="int8"`` turns on the quantized
+value path (``core.quant``): packed values are stored int8 with fp32
+scale leaves and the Pallas kernels dequantize in-kernel; a per-layer
+``SchemeChoice.value_dtype`` (the mapper's precision pick) overrides the
+spec default.
+
+The per-layer outcome is returned as a typed ``CompileReport`` (one
+``LayerReport`` per visited layer: kind, scheme, L -> L_reordered,
+executed fraction, value dtype, or the skip reason), serialized verbatim
+into the artifact manifest; ``compiled_summary`` renders it.  Reports
+keep a dict-style item protocol, so existing ``row["path"]`` consumers
+keep working.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import bcs as BCS
+from repro.core import quant as QUANT
 from repro.core import reweighted as RW
 from repro.core.packed import PackedLayout
 from repro.kernels import ops
@@ -53,6 +74,217 @@ BLOCK_SCHEMES = ("block", "block_row", "block_col")
 CONV_SCHEMES = ("block_punched",)
 PATTERN_SCHEMES = ("pattern",)
 PACKABLE_SCHEMES = BLOCK_SCHEMES + CONV_SCHEMES + PATTERN_SCHEMES
+
+# value dtypes the packed executors can serve (None = keep float values)
+VALUE_DTYPES = (None, "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileSpec:
+    """All ``compile_model`` knobs in one frozen, hashable value.
+
+    keep_dense : keep "w" next to "packed" (dense fallback / debugging);
+        False drops it to halve serving weight memory.
+    reorder : degree-sort + bin block columns before padding (paper Fig 4
+        row reordering) so L drops toward the mean degree; outputs stay
+        bit-identical (``core.bcs.pack_csc_reordered``).
+    n_bins : number of degree bins when reordering.  None uses each
+        producer's own default: 4 for block layouts, 8 for tap layouts.
+    block_override : force one (bk, bn) packing block for every layer
+        (otherwise each layer uses its mapped choice.block).
+    min_saving : skip packing when the effective skipped-FLOP fraction is
+        not above this.
+    implicit : conv x-operand strategy hint for serving dispatch
+        (None = auto by patch size, see ``kernels.ops._pick_implicit``).
+        Recorded with the report; does not change the packed layouts.
+    value_dtype : default serving precision for packed values — None keeps
+        float, "int8" quantizes symmetrically with fp32 scale leaves
+        (``core.quant``); a per-layer ``SchemeChoice.value_dtype``
+        (the mapper's precision pick) overrides this default.
+    scale_granularity : scale group for quantized BCS layouts — "block"
+        (one fp32 per stored block) or "out" (one per block column).
+        Tap layouts always quantize per-filter ("out"): their group=1
+        slots hold single values, so a per-slot scale would cost 4 bytes
+        per stored value.
+    exclude : path substrings never packed (router/embeddings per §5.2.4).
+
+    ``digest_fields()`` is the spec's contribution to the pack-cache key
+    and the artifact ``model_digest``: exactly the fields that change the
+    produced layouts (``keep_dense`` and ``implicit`` are excluded — they
+    only affect serving-time dispatch), so equivalent invocations digest
+    identically however the spec was built.
+    """
+    keep_dense: bool = True
+    reorder: bool = True
+    n_bins: int | None = None
+    block_override: tuple | None = None
+    min_saving: float = 0.0
+    implicit: bool | None = None
+    value_dtype: str | None = None
+    scale_granularity: str = "block"
+    exclude: tuple = ("router", "embed", "head")
+
+    def __post_init__(self):
+        """Validate + normalize (tuples for hashability, checked enums)."""
+        if self.value_dtype not in VALUE_DTYPES:
+            raise ValueError(f"value_dtype {self.value_dtype!r} not in "
+                             f"{VALUE_DTYPES}")
+        if self.scale_granularity not in QUANT.GRANULARITIES:
+            raise ValueError(
+                f"scale_granularity {self.scale_granularity!r} not in "
+                f"{QUANT.GRANULARITIES}")
+        if self.block_override is not None:
+            bo = tuple(int(b) for b in self.block_override)
+            if len(bo) != 2:
+                raise ValueError(f"block_override must be (bk, bn), got "
+                                 f"{self.block_override!r}")
+            object.__setattr__(self, "block_override", bo)
+        object.__setattr__(self, "exclude", tuple(self.exclude))
+        if self.n_bins is not None:
+            object.__setattr__(self, "n_bins", int(self.n_bins))
+
+    def digest_fields(self) -> tuple:
+        """The layout-determining fields, in a stable order — what the
+        artifact ``model_digest`` hashes for the compile-knob part."""
+        return (self.block_override, float(self.min_saving),
+                bool(self.reorder), self.n_bins, tuple(self.exclude),
+                self.value_dtype, str(self.scale_granularity))
+
+    def to_json(self) -> dict:
+        """Plain-JSON form (manifest serialization)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CompileSpec":
+        """Rebuild from ``to_json`` output (lists back to tuples)."""
+        d = dict(d)
+        if d.get("block_override") is not None:
+            d["block_override"] = tuple(d["block_override"])
+        if d.get("exclude") is not None:
+            d["exclude"] = tuple(d["exclude"])
+        return cls(**d)
+
+
+# LayerReport fields always present in the item protocol even when falsy
+_ALWAYS_KEYS = ("path", "packed")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerReport:
+    """One layer's line of the compile log, typed.
+
+    ``packed`` rows carry the layout geometry and the load-balance lever
+    (pre-reorder padded degree ``L`` -> post-reorder ``L_reordered`` of
+    ``Kb`` column blocks), the executed fraction (``1 - flops_saved``),
+    the mapped ``scheme`` and the served ``value_dtype`` (None = float).
+    Skipped rows carry the ``reason``.  A dict-style item protocol
+    (``row["path"]``, ``row.get(...)``, ``"kind" in row`` — None fields
+    read as absent) keeps the historical dict-row consumers working.
+    """
+    path: str
+    packed: bool
+    kind: str | None = None
+    scheme: str | None = None
+    reason: str | None = None
+    block: tuple | None = None
+    shape: tuple | None = None
+    L: int | None = None
+    Kb: int | None = None
+    L_reordered: float | None = None
+    reorder_gain: float | None = None
+    density: float | None = None
+    flops_saved: float | None = None
+    layers: int | None = None
+    value_dtype: str | None = None
+    patch_b_per_pos: int | None = None
+
+    @property
+    def executed_frac(self) -> float | None:
+        """Fraction of dense FLOPs the padded layout actually executes."""
+        return None if self.flops_saved is None else 1.0 - self.flops_saved
+
+    def __getitem__(self, key):
+        """Dict-style field access; None-valued fields raise KeyError."""
+        v = getattr(self, key, None) if not key.startswith("_") else None
+        if v is None and key not in _ALWAYS_KEYS:
+            raise KeyError(key)
+        return v
+
+    def get(self, key, default=None):
+        """Dict-style ``get`` over the non-None fields."""
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __contains__(self, key) -> bool:
+        """Dict-style membership: a field is "present" when non-None."""
+        return self.get(key) is not None or key in _ALWAYS_KEYS
+
+    def to_json(self) -> dict:
+        """Plain-JSON row: only the present (non-None) fields."""
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None or k in _ALWAYS_KEYS}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "LayerReport":
+        """Rebuild from ``to_json`` output (lists back to tuples)."""
+        d = {k: v for k, v in d.items()
+             if k in {f.name for f in dataclasses.fields(cls)}}
+        for k in ("block", "shape"):
+            if d.get(k) is not None:
+                d[k] = tuple(d[k])
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileReport:
+    """The typed compile log ``compile_model`` returns (and the artifact
+    manifest stores verbatim): one ``LayerReport`` per visited layer plus
+    the ``CompileSpec`` that produced it.  Iterates/indexes like the
+    historical list of rows."""
+    rows: tuple = ()
+    spec: CompileSpec | None = None
+
+    def __iter__(self):
+        """Iterate the per-layer rows."""
+        return iter(self.rows)
+
+    def __len__(self) -> int:
+        """Number of per-layer rows."""
+        return len(self.rows)
+
+    def __getitem__(self, i):
+        """Index the per-layer rows (int or slice)."""
+        return self.rows[i]
+
+    @property
+    def packed(self) -> tuple:
+        """The rows that produced a layout."""
+        return tuple(r for r in self.rows if r.packed)
+
+    @property
+    def skipped(self) -> tuple:
+        """The rows skipped with a reason."""
+        return tuple(r for r in self.rows if not r.packed)
+
+    def to_json(self) -> dict:
+        """Manifest form: {"spec": ..., "layers": [row, ...]}."""
+        return {"spec": self.spec.to_json() if self.spec else None,
+                "layers": [r.to_json() for r in self.rows]}
+
+    @classmethod
+    def from_json(cls, d) -> "CompileReport":
+        """Rebuild from ``to_json`` output — also accepts the historical
+        bare list-of-row-dicts manifests."""
+        if isinstance(d, dict):
+            spec = (CompileSpec.from_json(d["spec"])
+                    if d.get("spec") else None)
+            rows = d.get("layers", ())
+        else:
+            spec, rows = None, d
+        return cls(rows=tuple(LayerReport.from_json(r) for r in rows),
+                   spec=spec)
 
 
 def _layer_kind(w, scheme: str) -> str:
@@ -95,11 +327,14 @@ def _stack_pad_L(arrays, Lb):
     return np.stack(out)
 
 
-def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4):
+def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4,
+                  value_dtype=None, scale_granularity="block"):
     """Pack (..., K, N) weights slice-by-slice, pad every slice's per-bin
     column degree to the stack max, and restack -> a scan/vmap-compatible
     ``PackedLayout`` whose leaves carry the leading stack dims (layers,
-    experts, or both).
+    experts, or both).  ``value_dtype="int8"`` quantizes the STACKED
+    layout (one ``core.quant`` pass over the restacked leaves — the
+    per-slice float packs stay cached as-is).
 
     Returns (PackedLayout, stats)."""
     w = np.asarray(w)
@@ -132,6 +367,10 @@ def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4):
     stacked = PackedLayout(values=tuple(values), k_idx=tuple(k_idx),
                            nnz=nnz, perm=perm, inv_perm=inv_perm,
                            block=tuple(block), shape=(K, N))
+    if value_dtype is not None:
+        stacked = QUANT.quantize_layout(
+            stacked, value_dtype=value_dtype,
+            scale_granularity=scale_granularity)
     # L: the padded max column degree (what every column pays without
     # reordering); L_reordered: mean executed degree under the binned
     # stacked layout.  Equal when reorder is off.
@@ -148,11 +387,42 @@ def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4):
     return stacked, stats
 
 
-def compile_model(params, masks=None, mapping=(), *, block_override=None,
-                  keep_dense=True, min_saving=0.0, reorder=True, n_bins=None,
-                  exclude=("router", "embed", "head"), artifact_dir=None):
+# the historical compile_model keyword pile, now a deprecation shim that
+# builds a CompileSpec (same defaults)
+_LEGACY_SPEC_KWARGS = ("block_override", "keep_dense", "min_saving",
+                       "reorder", "n_bins", "exclude", "implicit",
+                       "value_dtype", "scale_granularity")
+
+
+def resolve_spec(spec=None, **legacy) -> CompileSpec:
+    """Resolve the ``spec``-or-legacy-kwargs compile surface to one
+    ``CompileSpec``: pass ``spec`` through, build one from the historical
+    keywords (DeprecationWarning), reject mixing the two."""
+    legacy = {k: v for k, v in legacy.items() if v is not None}
+    bad = set(legacy) - set(_LEGACY_SPEC_KWARGS)
+    if bad:
+        raise TypeError(f"unknown compile_model argument(s): {sorted(bad)}")
+    if spec is not None:
+        if legacy:
+            raise TypeError(
+                f"pass spec= OR legacy keywords, not both (got spec and "
+                f"{sorted(legacy)})")
+        if not isinstance(spec, CompileSpec):
+            raise TypeError(f"spec must be a CompileSpec, got "
+                            f"{type(spec).__name__}")
+        return spec
+    if legacy:
+        warnings.warn(
+            "compile_model(keep_dense=..., reorder=..., ...) keywords are "
+            "deprecated; pass spec=CompileSpec(...) instead",
+            DeprecationWarning, stacklevel=3)
+    return CompileSpec(**legacy)
+
+
+def compile_model(params, masks=None, mapping=(), spec=None, *,
+                  artifact_dir=None, **legacy):
     """Pack every block-pruned linear/conv layer of ``params`` for sparse
-    execution.  Returns (exec_params, report).
+    execution.  Returns (exec_params, CompileReport).
 
     params   : model param tree (nested dicts; linear nodes hold "w").
     masks    : {0,1} mask tree matching ``params`` (scalar sentinels on
@@ -164,28 +434,18 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
                schemes pack the weight as-is; ``block_punched`` conv
                layers pack the im2col-lowered weight; ``pattern`` conv
                layers tap-lower into a TapLayout for the tap-gather
-               kernel).
-    block_override : force one (bk, bn) packing block for every layer
-               (otherwise each layer uses its mapped choice.block).
-    keep_dense : keep "w" next to "packed" (dense fallback / debugging);
-               False drops it to halve serving weight memory.
-    min_saving : skip packing when the effective skipped-FLOP fraction
-               (1 - executed/(Kb*Nb) under the padded layout) is not above
-               this — a padded layout with no skipping would only add
-               gather overhead.
-    reorder  : degree-sort + bin block columns before padding (paper Fig 4
-               row reordering) so L drops toward the mean degree; outputs
-               stay bit-identical (see ``core.bcs.pack_csc_reordered``).
-    n_bins   : number of degree bins when reordering.  None (the default)
-               uses each producer's own default: 4 for block layouts, 8
-               for tap layouts (connectivity-bearing tap degrees spread
-               wider — see ``kernels.ops.pack_taps``).
-    exclude  : path substrings never packed (router/embeddings per §5.2.4).
-               MoE expert projections (gate/up/down) ARE packed — they
-               dispatch through ``kernels.ops.sparse_expert_linear``.
+               kernel).  A choice's ``value_dtype`` (the mapper's
+               precision pick) overrides ``spec.value_dtype`` per layer.
+    spec     : ``CompileSpec`` — the primary compile surface; see its
+               docstring for every knob.  The historical keywords
+               (``keep_dense=``, ``reorder=``, ``n_bins=``,
+               ``block_override=``, ``min_saving=``, ``exclude=``, plus
+               the new ``implicit=``/``value_dtype=``/
+               ``scale_granularity=``) still work as a deprecation shim
+               that builds an equivalent spec; mixing both is an error.
     artifact_dir : AOT artifact store (``serve.artifacts``).  When set,
-               the model digest (weights + masks + mapping + compile
-               knobs) is looked up first: digest match -> checksum verify
+               the model digest (weights + masks + mapping + spec digest
+               fields) is looked up first: digest match -> checksum verify
                -> layout validation -> warm start with the stored layouts
                grafted on (no packing at all).  Digest mismatch, checksum
                failure, version skew, or invariant violation logs its
@@ -193,28 +453,28 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
                result is then published crash-safely (tmp + atomic
                rename) for the next start.
 
-    Every packed node's report entry carries the effective density, the
+    Every packed ``LayerReport`` carries the effective density, the
     pre-reorder padded column degree L, the post-reorder ``L_reordered``
-    with its gain, and the skipped-FLOP fraction; skipped nodes carry the
-    reason, so the report doubles as the compile log.
+    with its gain, the skipped-FLOP fraction, and the served value dtype;
+    skipped rows carry the reason, so the report doubles as the compile
+    log.
     """
+    spec = resolve_spec(spec, **legacy)
     artifact_key = None
     if artifact_dir is not None:
         from repro.serve import artifacts as ART
-        artifact_key = ART.model_digest(
-            params, masks, mapping, block_override=block_override,
-            min_saving=min_saving, reorder=reorder, n_bins=n_bins,
-            exclude=exclude)
+        artifact_key = ART.model_digest(params, masks, mapping, spec=spec)
         warm = ART.load_grafted(artifact_dir, artifact_key, params,
-                                keep_dense=keep_dense)
+                                keep_dense=spec.keep_dense)
         if warm is not None:
             return warm
 
-    report = []
+    rows = []
     # per-producer bin defaults (None = use each producer's own): block
     # layouts 4, tap layouts 8 — see kernels.ops.pack_taps
-    gemm_bins = 4 if n_bins is None else n_bins
-    tap_bins = 8 if n_bins is None else n_bins
+    gemm_bins = 4 if spec.n_bins is None else spec.n_bins
+    tap_bins = 8 if spec.n_bins is None else spec.n_bins
+    reorder = spec.reorder
 
     def walk(p, m, path):
         if not isinstance(p, dict):
@@ -228,10 +488,10 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
         wpath = f"{path}/w" if path else "w"
 
         def skip(reason):
-            report.append({"path": wpath, "packed": False, "reason": reason})
+            rows.append(LayerReport(path=wpath, packed=False, reason=reason))
             return out
 
-        if any(e in wpath for e in exclude):
+        if any(e in wpath for e in spec.exclude):
             return skip("excluded")
         choice = RW.match(list(mapping), wpath)
         if choice is None or choice.scheme not in PACKABLE_SCHEMES:
@@ -247,15 +507,22 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
             mask = np.asarray(w) != 0
         elif mask is None or getattr(mask, "ndim", 0) == 0:
             return skip("no mask (layer not pruned)")
-        block = tuple(block_override or choice.block)
+        block = tuple(spec.block_override or choice.block)
+        # per-layer precision: the mapper's pick wins over the spec default
+        vdt = getattr(choice, "value_dtype", None) or spec.value_dtype
+        if vdt not in VALUE_DTYPES:
+            return skip(f"unsupported value_dtype {vdt!r}")
         if kind == "pattern_conv":
             # tap producer: pattern/connectivity masks carry no block
             # structure (every kernel keeps its own tap set), so the layer
             # lowers to per-filter tap lists over the im2col band and
             # executes through the tap-gather kernel — the scheme the
             # mapper picked for accuracy now runs sparsely instead of
-            # silently falling back to masked-dense.
-            tap = ops.pack_taps(w, mask, reorder=reorder, n_bins=tap_bins)
+            # silently falling back to masked-dense.  Quantized taps always
+            # use per-filter ("out") scales — group=1 slots hold single
+            # values, so per-slot scales would cost 4 bytes per value.
+            tap = ops.pack_taps(w, mask, reorder=reorder, n_bins=tap_bins,
+                                value_dtype=vdt, scale_granularity="out")
             P, Q, Kh, Kw = w.shape
             stats = {
                 "block": (1, tap.group), "shape": tap.shape,
@@ -283,8 +550,9 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
             P, Q, Kh, Kw = w.shape
             wl = BCS.conv_lower(w)
             ml = BCS.conv_lower(np.broadcast_to(np.asarray(mask), w.shape))
-            packed, stats = _pack_stacked(wl, ml, gemm_block,
-                                          reorder=reorder, n_bins=gemm_bins)
+            packed, stats = _pack_stacked(
+                wl, ml, gemm_block, reorder=reorder, n_bins=gemm_bins,
+                value_dtype=vdt, scale_granularity=spec.scale_granularity)
             # attach the static tap-offset table so the implicit-GEMM
             # kernel can gather from the feature map without a patch tensor
             packed = dataclasses.replace(
@@ -295,18 +563,22 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
             K, N = w.shape[-2:]
             if K % block[0] or N % block[1]:
                 return skip(f"block {block} does not divide ({K}, {N})")
-            packed, stats = _pack_stacked(w, mask, block, reorder=reorder,
-                                          n_bins=gemm_bins)
-        if stats["flops_saved"] <= min_saving:
+            packed, stats = _pack_stacked(
+                w, mask, block, reorder=reorder, n_bins=gemm_bins,
+                value_dtype=vdt, scale_granularity=spec.scale_granularity)
+        if stats["flops_saved"] <= spec.min_saving:
             return skip(f"no effective saving (L={stats['L']} of "
                         f"Kb={stats['Kb']} column blocks survive)")
         out["packed"] = packed
-        if not keep_dense:
+        if not spec.keep_dense:
             del out["w"]
-        report.append({"path": wpath, "packed": True, "kind": kind, **stats})
+        rows.append(LayerReport(path=wpath, packed=True, kind=kind,
+                                scheme=choice.scheme, value_dtype=vdt,
+                                **stats))
         return out
 
     exec_params = walk(params, masks, "")
+    report = CompileReport(rows=tuple(rows), spec=spec)
     if artifact_key is not None:
         # publish for the next (replica) start; best-effort — an
         # unwritable store must never fail the compile itself
@@ -322,9 +594,11 @@ def compile_model(params, masks=None, mapping=(), *, block_override=None,
 
 def compiled_summary(report) -> str:
     """One-line-per-layer compile log, including the load-balance lever
-    (pre-reorder L -> post-reorder effective L and the gain) and, for conv
-    layers, the im2col patch bytes per output position the implicit-GEMM
-    path avoids allocating (total avoided = B*Ho*Wo of these)."""
+    (pre-reorder L -> post-reorder effective L and the gain), the served
+    value dtype for quantized layers, and, for conv layers, the im2col
+    patch bytes per output position the implicit-GEMM path avoids
+    allocating (total avoided = B*Ho*Wo of these).  Accepts a typed
+    ``CompileReport`` or the historical list of row dicts."""
     lines = []
     for r in report:
         if r["packed"]:
@@ -335,6 +609,8 @@ def compiled_summary(report) -> str:
                 f"L={r['L']}->{r['L_reordered']}/{r['Kb']} "
                 f"(reorder_gain={r['reorder_gain']:.2f}x) "
                 f"flops_saved={r['flops_saved']:.2f}")
+            if r.get("value_dtype"):
+                line += f" values={r['value_dtype']}"
             if "patch_b_per_pos" in r:
                 line += f" implicit_avoids={r['patch_b_per_pos']}B/pos"
             lines.append(line)

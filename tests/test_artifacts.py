@@ -20,7 +20,7 @@ from repro.core import reweighted as RW
 from repro.core import validate as V
 from repro.kernels import ops
 from repro.serve import artifacts as ART
-from repro.serve.compile import compile_model
+from repro.serve.compile import CompileSpec, compile_model
 from repro.train.trainer import apply_masks
 
 SPEC = [(r"ffn/(gate|up)/w", RW.SchemeChoice("block", (16, 16))),
@@ -94,7 +94,8 @@ def test_digest_covers_weights_and_options(store):
     bumped = jax.tree_util.tree_map(lambda x: x, pm)
     bumped["head"]["w"] = pm["head"]["w"] + 1.0
     assert ART.model_digest(bumped, masks, SPEC) != key
-    assert ART.model_digest(pm, masks, SPEC, n_bins=2) != key
+    assert ART.model_digest(pm, masks, SPEC,
+                            spec=CompileSpec(n_bins=2)) != key
     assert ART.model_digest(pm, masks, SPEC) == key     # deterministic
 
 

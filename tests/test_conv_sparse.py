@@ -15,7 +15,8 @@ from repro.core import regularity as R
 from repro.core import reweighted as RW
 from repro.kernels import ops
 from repro.models import convnet as C
-from repro.serve.compile import compile_model, compiled_summary
+from repro.serve.compile import (CompileSpec, compile_model,
+                                 compiled_summary)
 from repro.train.trainer import apply_masks
 
 CONV_SPEC = [(r"(^|/)(c|pw|dw)\d+/w", RW.SchemeChoice("block_punched",
@@ -259,8 +260,8 @@ def test_convnet_packed_drop_dense():
                             dtype=jnp.float32)
     masks = RW.punched_conv_masks(params, CONV_SPEC, (8, 8))
     pm = apply_masks(params, masks)
-    exec_params, report = compile_model(pm, masks, CONV_SPEC,
-                                        keep_dense=False)
+    exec_params, report = compile_model(
+        pm, masks, CONV_SPEC, spec=CompileSpec(keep_dense=False))
     for r in report:
         name = r["path"].split("/")[0]
         assert ("w" in exec_params[name]) == (not r["packed"])

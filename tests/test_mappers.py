@@ -80,9 +80,10 @@ class TestSearchBased:
         app = jnp.asarray(np.stack([MS.applicable(l.kind) for l in layers]))
         p = MS.policy_init(jax.random.PRNGKey(0), feats.shape[1], 16)
         for seed in range(5):
-            a_s, a_b, logp = MS.sample_mapping(p, feats, app,
-                                               jax.random.PRNGKey(seed))
+            a_s, a_b, a_p, logp = MS.sample_mapping(p, feats, app,
+                                                    jax.random.PRNGKey(seed))
             assert MS.SCHEME_MENU[int(a_s[0])] == "none"   # dw forced
+            assert a_p.shape == a_s.shape
             assert np.isfinite(float(logp))
 
     def test_search_improves_reward(self):

@@ -15,7 +15,8 @@ from repro.core import regularity as R
 from repro.core import reweighted as RW
 from repro.kernels import ops
 from repro.models import convnet as C
-from repro.serve.compile import compile_model, compiled_summary
+from repro.serve.compile import (CompileSpec, compile_model,
+                                 compiled_summary)
 from repro.train.trainer import apply_masks
 
 PATTERN_SPEC = [(r"(^|/)(c|pw|dw)\d+/w",
@@ -234,8 +235,8 @@ def test_pattern_net_drop_dense():
                             dtype=jnp.float32)
     masks = RW.masks_for_spec(params, PATTERN_SPEC)
     pm = apply_masks(params, masks)
-    exec_params, report = compile_model(pm, masks, PATTERN_SPEC,
-                                        keep_dense=False)
+    exec_params, report = compile_model(
+        pm, masks, PATTERN_SPEC, spec=CompileSpec(keep_dense=False))
     for r in report:
         name = r["path"].split("/")[0]
         assert ("w" in exec_params[name]) == (not r["packed"])

@@ -1,0 +1,384 @@
+"""Int8 quantized value path end to end: ``core.quant`` -> kernel parity
+vs the dequantized dense oracle on every kernel family, the CompileSpec
+API (shim, digest, cache), scale-leaf validation, artifact version-skew
+repack, and the mappers' per-layer precision picks."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bcs as BCS
+from repro.core import mapper_rule as MR
+from repro.core import mapper_search as MS
+from repro.core import quant as Q
+from repro.core import regularity as R
+from repro.core import reweighted as RW
+from repro.core import validate as V
+from repro.kernels import ops
+from repro.serve import artifacts as ART
+from repro.serve.compile import (CompileReport, CompileSpec, compile_model,
+                                 compiled_summary, _pack_stacked,
+                                 resolve_spec)
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _block_mask(key, shape, block, keep=0.5):
+    kb = jax.random.uniform(key, (shape[0] // block[0],
+                                  shape[1] // block[1])) < keep
+    return jnp.kron(kb.astype(jnp.float32), jnp.ones(block, jnp.float32))
+
+
+def _fc_case(K=64, N=96, block=(16, 16), seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (K, N),
+                          jnp.float32) * 0.1
+    mask = _block_mask(jax.random.PRNGKey(seed + 100), (K, N), block)
+    return w * mask, mask
+
+
+def _conv_case(P=32, Q=16, kernel_block=(8, 8), seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (P, Q, 3, 3),
+                          jnp.float32) * 0.1
+    mask = R.block_punched_mask(w, kernel_block, rate=0.5)
+    return w * mask, mask
+
+
+def _dense_conv_ref(x, dense_lowered, Q, P):
+    kernel = jnp.asarray(dense_lowered).reshape(3, 3, Q, P)
+    return jax.lax.conv_general_dilated(
+        x, kernel, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# -- core.quant --------------------------------------------------------------
+
+@pytest.mark.parametrize("gran", Q.GRANULARITIES)
+def test_quantize_roundtrip_error_bound(gran):
+    """to_dense of a quantized pack stays within the symmetric-scheme
+    error bound (s/2 per element) of the float weights, and pruned
+    positions stay exactly zero."""
+    wm, mask = _fc_case()
+    fp = ops.pack(wm, mask, (16, 16), reorder=True, use_cache=False)
+    q8 = Q.quantize_layout(fp, scale_granularity=gran)
+    assert q8.scales is not None and q8.value_dtype == "int8"
+    assert all(np.asarray(v).dtype == np.int8 for v in q8.values)
+    d_fp, d_q = fp.to_dense(), q8.to_dense()
+    bound = float(np.abs(d_fp).max()) / Q.QMAX
+    assert float(np.abs(d_fp - d_q).max()) <= bound
+    np.testing.assert_array_equal(d_q[np.asarray(mask) == 0], 0.0)
+
+
+def test_quantize_rejections():
+    wm, mask = _fc_case(seed=1)
+    fp = ops.pack(wm, mask, (16, 16), use_cache=False)
+    q8 = Q.quantize_layout(fp)
+    with pytest.raises(ValueError, match="already quantized"):
+        Q.quantize_layout(q8)
+    with pytest.raises(ValueError, match="value_dtype"):
+        Q.quantize_layout(fp, value_dtype="int4")
+    with pytest.raises(ValueError, match="scale_granularity"):
+        Q.quantize_layout(fp, scale_granularity="tensor")
+    with pytest.raises(TypeError, match="not a packable layout"):
+        Q.quantize_layout(np.zeros((4, 4)))
+
+
+# -- kernel parity vs the dequantized dense oracle ---------------------------
+
+@pytest.mark.parametrize("gran", Q.GRANULARITIES)
+def test_int8_parity_linear(gran):
+    """bsr_matmul_packed dequantizes in-kernel: output == x @ to_dense."""
+    wm, mask = _fc_case(seed=2)
+    q8 = ops.pack(wm, mask, (16, 16), reorder=True, value_dtype="int8",
+                  scale_granularity=gran)
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, wm.shape[0]),
+                          jnp.float32)
+    y = ops.sparse_linear(x, packed=q8)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x @ jnp.asarray(q8.to_dense())),
+                               **TOL)
+
+
+def test_int8_parity_moe_stacked():
+    """The stacked (expert-batched) quantized pack serves through
+    sparse_expert_linear with exactly the per-slice dequantized values."""
+    E, K, N = 3, 32, 48
+    w = jax.random.normal(jax.random.PRNGKey(4), (E, K, N),
+                          jnp.float32) * 0.1
+    mask = jnp.stack([_block_mask(jax.random.PRNGKey(40 + e), (K, N),
+                                  (16, 16)) for e in range(E)])
+    wm = w * mask
+    stacked, _ = _pack_stacked(wm, mask, (16, 16), value_dtype="int8")
+    assert stacked.scales is not None
+    x = jax.random.normal(jax.random.PRNGKey(5), (E, 8, K), jnp.float32)
+    y = ops.sparse_expert_linear(x, stacked)
+    for e in range(E):
+        ref = ops.pack(wm[e], mask[e], (16, 16), reorder=True,
+                       value_dtype="int8").to_dense()
+        np.testing.assert_allclose(np.asarray(y[e]),
+                                   np.asarray(x[e] @ jnp.asarray(ref)),
+                                   **TOL)
+
+
+@pytest.mark.parametrize("implicit", [False, True])
+def test_int8_parity_conv(implicit):
+    """BCS conv kernels (materialized + implicit-GEMM) vs the dequantized
+    dense conv."""
+    wm, mask = _conv_case(seed=6)
+    P, Q_, _, _ = wm.shape
+    gemm_block, why = BCS.conv_gemm_block((8, 8), wm.shape)
+    assert gemm_block is not None, why
+    q8 = ops.pack(BCS.conv_lower(wm), BCS.conv_lower(mask), gemm_block,
+                  reorder=True, conv=(3, 3, Q_), value_dtype="int8")
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 8, Q_), jnp.float32)
+    y = ops.sparse_conv2d(x, q8, kh=3, kw=3, implicit=implicit)
+    y_ref = _dense_conv_ref(x, q8.to_dense(), Q_, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **TOL)
+
+
+@pytest.mark.parametrize("implicit", [False, True])
+@pytest.mark.parametrize("gran", Q.GRANULARITIES)
+def test_int8_parity_tap(implicit, gran):
+    """Tap-gather kernels (materialized + implicit) vs the dequantized
+    dense conv, at both scale granularities."""
+    w = jax.random.normal(jax.random.PRNGKey(8), (16, 12, 3, 3),
+                          jnp.float32) * 0.1
+    mask = R.pattern_mask(w, connectivity_rate=0.4)
+    wm = w * mask
+    q8 = ops.pack_taps(wm, mask, value_dtype="int8",
+                       scale_granularity=gran)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 7, 7, 12), jnp.float32)
+    y = ops.sparse_conv2d_pattern(x, q8, kh=3, kw=3, implicit=implicit)
+    y_ref = _dense_conv_ref(x, q8.to_dense(), 12, 16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **TOL)
+
+
+# -- pack cache --------------------------------------------------------------
+
+def test_pack_cache_fp_int8_no_collision():
+    wm, mask = _fc_case(seed=10)
+    fp = ops.pack(wm, mask, (16, 16), reorder=True)
+    q8 = ops.pack(wm, mask, (16, 16), reorder=True, value_dtype="int8")
+    assert q8 is not fp and q8.scales is not None and fp.scales is None
+    assert ops.pack(wm, mask, (16, 16), reorder=True,
+                    value_dtype="int8") is q8
+    assert ops.pack(wm, mask, (16, 16), reorder=True) is fp
+
+
+# -- validation --------------------------------------------------------------
+
+def test_validate_accepts_quantized_layouts():
+    wm, mask = _fc_case(seed=11)
+    q8 = ops.pack(wm, mask, (16, 16), reorder=True, value_dtype="int8",
+                  use_cache=False)
+    assert V.validate_layout(q8) is q8
+    w = jax.random.normal(jax.random.PRNGKey(12), (8, 8, 3, 3),
+                          jnp.float32)
+    mask = R.pattern_mask(w, connectivity_rate=0.25)
+    tap = ops.pack_taps(w * mask, mask, value_dtype="int8",
+                        scale_granularity="out", use_cache=False)
+    assert V.validate_layout(tap) is tap
+
+
+def test_validate_rejects_malformed_scales():
+    wm, mask = _fc_case(seed=13)
+    q8 = ops.pack(wm, mask, (16, 16), reorder=True, value_dtype="int8",
+                  use_cache=False)
+    fp = ops.pack(wm, mask, (16, 16), reorder=True, use_cache=False)
+    cases = {
+        "int values, no scales": dataclasses.replace(q8, scales=None),
+        "scales on float values": dataclasses.replace(
+            fp, scales=q8.scales),
+        "bin count mismatch": dataclasses.replace(
+            q8, scales=q8.scales + (q8.scales[0],)),
+        "granularity shape": dataclasses.replace(
+            q8, scales=tuple(s[..., None] for s in q8.scales)),
+        "negative scale": dataclasses.replace(
+            q8, scales=(jnp.full_like(q8.scales[0], -1.0),)
+            + q8.scales[1:]),
+    }
+    for label, bad in cases.items():
+        with pytest.raises(V.LayoutQuantError):
+            V.validate_layout(bad)
+        assert V.LayoutQuantError.code == "quant", label
+
+
+# -- CompileSpec API ---------------------------------------------------------
+
+def _lm_fixture(seed=0):
+    K, N = 64, 96
+    wm, mask = _fc_case(K, N, seed=seed)
+    params = {"fc": {"w": wm}}
+    masks = {"fc": {"w": mask}}
+    mapping = [(r"fc/w", RW.SchemeChoice("block", (16, 16)))]
+    return params, masks, mapping
+
+
+def test_compile_spec_validation():
+    with pytest.raises(ValueError, match="value_dtype"):
+        CompileSpec(value_dtype="fp8")
+    with pytest.raises(ValueError, match="scale_granularity"):
+        CompileSpec(scale_granularity="tensor")
+    with pytest.raises(ValueError, match="block_override"):
+        CompileSpec(block_override=(16, 16, 16))
+    spec = CompileSpec(exclude=["router"], n_bins=2.0)
+    assert spec.exclude == ("router",) and spec.n_bins == 2
+    assert CompileSpec.from_json(spec.to_json()) == spec
+
+
+def test_resolve_spec_shim():
+    """Legacy keywords still work (with a DeprecationWarning) and build
+    the equivalent spec; mixing or misspelling them is a TypeError."""
+    with pytest.warns(DeprecationWarning):
+        assert resolve_spec(keep_dense=False) == CompileSpec(
+            keep_dense=False)
+    assert resolve_spec(None) == CompileSpec()       # no kwargs, no warning
+    with pytest.raises(TypeError, match="not both"):
+        resolve_spec(CompileSpec(), keep_dense=False)
+    with pytest.raises(TypeError, match="unknown"):
+        resolve_spec(keep_sparse=True)
+    with pytest.raises(TypeError, match="CompileSpec"):
+        resolve_spec({"keep_dense": False})
+
+
+def test_compile_model_legacy_kwargs_warn_and_match_spec():
+    params, masks, mapping = _lm_fixture(seed=20)
+    with pytest.warns(DeprecationWarning):
+        legacy, rep_l = compile_model(params, masks, mapping,
+                                      keep_dense=False)
+    fresh, rep_s = compile_model(params, masks, mapping,
+                                 spec=CompileSpec(keep_dense=False))
+    assert rep_l.spec == rep_s.spec
+    assert "w" not in legacy["fc"] and "w" not in fresh["fc"]
+    # same spec -> bit-identical pack either way
+    np.testing.assert_array_equal(
+        np.asarray(legacy["fc"]["packed"].values[0]),
+        np.asarray(fresh["fc"]["packed"].values[0]))
+
+
+def test_model_digest_spec_legacy_equivalence():
+    params, masks, mapping = _lm_fixture(seed=21)
+    by_spec = ART.model_digest(params, masks, mapping,
+                               spec=CompileSpec(n_bins=2))
+    assert by_spec == ART.model_digest(params, masks, mapping, n_bins=2)
+    assert by_spec != ART.model_digest(params, masks, mapping)
+    # serving-time-only knobs do not move the digest
+    base = ART.model_digest(params, masks, mapping)
+    assert base == ART.model_digest(params, masks, mapping,
+                                    spec=CompileSpec(keep_dense=False))
+    assert base == ART.model_digest(params, masks, mapping,
+                                    spec=CompileSpec(implicit=True))
+    # the precision knob does
+    assert base != ART.model_digest(params, masks, mapping,
+                                    spec=CompileSpec(value_dtype="int8"))
+
+
+def test_compile_model_int8_end_to_end():
+    params, masks, mapping = _lm_fixture(seed=22)
+    exec_params, report = compile_model(
+        params, masks, mapping, spec=CompileSpec(value_dtype="int8"))
+    (row,) = report.packed
+    assert row.value_dtype == "int8" and row["value_dtype"] == "int8"
+    packed = exec_params["fc"]["packed"]
+    assert packed.scales is not None
+    x = jax.random.normal(jax.random.PRNGKey(23), (8, 64), jnp.float32)
+    y = ops.sparse_linear(x, packed=packed)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ jnp.asarray(packed.to_dense())),
+        **TOL)
+    assert "values=int8" in compiled_summary(report)
+    # report roundtrips through its manifest form, spec included
+    back = CompileReport.from_json(json.loads(json.dumps(report.to_json())))
+    assert back.spec == report.spec
+    assert back[0].value_dtype == "int8"
+
+
+def test_choice_precision_overrides_spec_default():
+    params, masks, mapping = _lm_fixture(seed=24)
+    mapping = [(pat, dataclasses.replace(c, value_dtype="int8"))
+               for pat, c in mapping]
+    exec_params, report = compile_model(params, masks, mapping)
+    assert report[0].value_dtype == "int8"
+    assert exec_params["fc"]["packed"].scales is not None
+
+
+# -- artifacts ---------------------------------------------------------------
+
+def test_artifact_roundtrip_preserves_scales(tmp_path):
+    params, masks, mapping = _lm_fixture(seed=25)
+    spec = CompileSpec(value_dtype="int8")
+    exec_params, report = compile_model(params, masks, mapping, spec=spec,
+                                        artifact_dir=tmp_path)
+    key = ART.model_digest(params, masks, mapping, spec=spec)
+    warm = ART.load_grafted(tmp_path, key, params)
+    assert warm is not None
+    warm_params, warm_report = warm
+    assert warm_report.spec == spec
+    assert warm_report[0].value_dtype == "int8"
+    loaded = warm_params["fc"]["packed"]
+    assert loaded.scales is not None
+    np.testing.assert_array_equal(
+        np.asarray(loaded.to_dense()),
+        np.asarray(exec_params["fc"]["packed"].to_dense()))
+
+
+def test_artifact_version_skew_repacks(tmp_path):
+    """A FORMAT_VERSION 1 artifact (pre-quantization layout serialization)
+    must not warm-start: the loader rejects it and compile_model repacks
+    + republishes at the current version."""
+    params, masks, mapping = _lm_fixture(seed=26)
+    compile_model(params, masks, mapping, artifact_dir=tmp_path)
+    key = ART.model_digest(params, masks, mapping)
+    man_path = tmp_path / key / ART.MANIFEST_FILE
+    manifest = json.loads(man_path.read_text())
+    assert manifest["format_version"] == ART.FORMAT_VERSION == 2
+    manifest["format_version"] = 1
+    man_path.write_text(json.dumps(manifest))
+    assert ART.load_grafted(tmp_path, key, params) is None
+    with pytest.raises(ART.ArtifactVersionSkew):
+        ART.load_artifact(tmp_path, key)
+    exec_params, report = compile_model(params, masks, mapping,
+                                        artifact_dir=tmp_path)
+    assert report.packed           # fresh repack, not a graft of v1 data
+    assert json.loads(man_path.read_text())["format_version"] == 2
+    assert ops.sparse_linear(
+        jnp.ones((2, 64), jnp.float32),
+        packed=exec_params["fc"]["packed"]).shape == (2, 96)
+
+
+# -- mapper precision picks --------------------------------------------------
+
+def test_rule_mapper_picks_int8_when_memory_bound():
+    """Decode-shaped FC (small M, big weight): the weight read dominates
+    the roofline, so the re-priced int8 pick wins; a compute-bound layer
+    keeps float values (no modeled win -> no free quantization error)."""
+    decode = [MR.LayerDesc("dec/w", "fc", 256, 4096, 4096)]
+    spec, report = MR.map_rules(decode)
+    assert report[0]["scheme"] == "block"
+    assert report[0]["value_dtype"] == "int8"
+    assert spec[0][1].value_dtype == "int8"
+    prefill = [MR.LayerDesc("pre/w", "fc", 65536, 4096, 4096)]
+    _, report = MR.map_rules(prefill)
+    assert report[0]["scheme"] == "block"
+    assert report[0]["value_dtype"] is None
+
+
+def test_search_precision_action_to_spec():
+    layers = [MR.LayerDesc("a/w", "fc", 256, 4096, 4096),
+              MR.LayerDesc("b/w", "fc", 256, 4096, 4096)]
+    a_s = np.array([MS.SCHEME_MENU.index("block"),
+                    MS.SCHEME_MENU.index("unstructured")])
+    a_b = np.array([len(MS.BLOCK_MENU) - 1] * 2)
+    a_p = np.array([1, 1])
+    spec = MS.actions_to_spec(layers, a_s, a_b, a_p)
+    assert spec[0][1].value_dtype == "int8"      # quantizable scheme
+    assert spec[1][1].value_dtype is None        # inert on unstructured
+    # legacy two-action callers still work (no precision picks)
+    legacy = MS.actions_to_spec(layers, a_s, a_b)
+    assert all(c.value_dtype is None for _, c in legacy)
+    # int8 pricing never makes the modeled mapping slower
+    t_fp = MS.mapping_latency(layers, a_s, a_b)
+    t_q8 = MS.mapping_latency(layers, a_s, a_b, a_p)
+    assert t_q8 < t_fp

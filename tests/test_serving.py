@@ -13,7 +13,7 @@ from repro.core import reweighted as RW
 from repro.models import transformer as T
 from repro.serve import engine as E
 from repro.serve import kvcache as KV
-from repro.serve.compile import compile_model
+from repro.serve.compile import CompileSpec, compile_model
 from repro.serve.engine import ServingEngine, generate
 from repro.serve.scheduler import Request, Scheduler
 from repro.train.trainer import apply_masks
@@ -73,7 +73,8 @@ def test_engine_packed_kernel_path():
     from repro.launch.serve import SPARSE_SPEC
     masks = RW.magnitude_block_masks(params, SPARSE_SPEC, None, rate=0.6)
     params = apply_masks(params, masks)
-    params, _ = compile_model(params, masks, SPARSE_SPEC, keep_dense=False)
+    params, _ = compile_model(params, masks, SPARSE_SPEC,
+                              spec=CompileSpec(keep_dense=False))
     _assert_engine_matches_oracle(params, cfg, _prompts(cfg, [9, 6]), 5,
                                   n_slots=2)
 

@@ -19,7 +19,7 @@ from repro.kernels.ref import masked_matmul_ref
 from repro.models import module as M
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.serve.compile import compile_model
+from repro.serve.compile import CompileSpec, compile_model
 from repro.serve.engine import generate, generate_python
 from repro.train.trainer import apply_masks
 from repro.data.pipeline import synthetic_batch
@@ -215,7 +215,8 @@ def test_compile_model_drop_dense_and_generate():
     spec = ATTN_SPEC + FFN_SPEC
     masks = _whole_block_masks(params, spec, (16, 16))
     pm = apply_masks(params, masks)
-    exec_params, report = compile_model(pm, masks, spec, keep_dense=False)
+    exec_params, report = compile_model(pm, masks, spec,
+                                        spec=CompileSpec(keep_dense=False))
     packed_paths = [r["path"] for r in report if r["packed"]]
     assert packed_paths
     tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab)
@@ -342,8 +343,8 @@ def _compiled_ssm(seed=0, keep_dense=True):
     masks = RW.random_block_masks(params, SSM_SPEC, (16, 8), keep_prob=0.5,
                                   seed=seed)
     pm = apply_masks(params, masks)
-    exec_params, report = compile_model(pm, masks, SSM_SPEC,
-                                        keep_dense=keep_dense)
+    exec_params, report = compile_model(
+        pm, masks, SSM_SPEC, spec=CompileSpec(keep_dense=keep_dense))
     packed = {r["path"] for r in report if r["packed"]}
     assert {"layers/ssm/in_proj/w", "layers/ssm/out_proj/w"} <= packed, \
         report
