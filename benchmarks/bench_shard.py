@@ -1,0 +1,123 @@
+"""Tensor-parallel PackedLayout sharding — degree balance + modeled scaling.
+
+Two fixture classes:
+
+  * ``shard_balance`` rows — the skewed-degree fixture (every 8th block
+    column dense, a long degree-1..3 tail: the worst case for contiguous
+    shard assignment).  ``bcs.shard_columns`` greedy-LPT assignment must
+    keep the straggler factor — max/mean executed blocks were each shard
+    padded to its OWN bin maxima — at or below 1.15 (asserted here AND
+    regression-gated lower-is-better via the baseline), where contiguous
+    assignment (``naive_balance``, reported ungated) lands far higher.
+    The us column is the REAL wall time of the vmapped per-shard kernel
+    (``ops.sparse_linear`` on the sharded layout), and parity against the
+    unsharded oracle is asserted bit-identical (per-column accumulation
+    order is preserved by construction).
+  * ``tp_model`` row — a decode-shaped 4k x 4k FC under whole-block
+    pruning.  ``tp_speedup`` is the MODELED parallel speedup: unsharded
+    executed blocks over the per-device executed blocks of the tp=4
+    layout (each shard pads its bins to the cross-shard max, so the
+    straggler IS the per-device cost).  Deterministic layout accounting —
+    no wall noise — gated loose at the wall threshold because cross-shard
+    padding moves with the degree draw.
+
+Emitted rows land in BENCH_shard.json under ``run.py --json``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer_us
+from repro.kernels import ops
+
+MAX_BALANCE = 1.15
+
+
+def _skewed_fixture(seed=0, K=128, N=256, bk=8, bn=8):
+    """A few full-degree block columns plus a sparse tail (test_sharding's
+    skewed fixture, re-derived here so the bench stays self-contained)."""
+    rng = np.random.default_rng(seed)
+    Kb, Nb = K // bk, N // bn
+    mb = np.zeros((Kb, Nb), bool)
+    for j in range(Nb):
+        deg = Kb if j % 8 == 0 else 1 + int(rng.integers(0, 3))
+        mb[rng.permutation(Kb)[:deg], j] = True
+    w = rng.standard_normal((K, N)).astype(np.float32)
+    return w, np.kron(mb, np.ones((bk, bn), bool)), (bk, bn)
+
+
+def _contiguous_balance(cnt, bin_sizes_fn, S):
+    """Straggler factor of the NAIVE contiguous column assignment — what
+    sharding without ``shard_columns`` would cost."""
+    cnt = np.asarray(cnt)
+    per = cnt.shape[0] // S
+    loads = []
+    for s in range(S):
+        seg = np.sort(cnt[s * per:(s + 1) * per])[::-1]
+        loads.append(bin_sizes_fn(seg))
+    loads = np.asarray(loads, np.float64)
+    return float(loads.max() / loads.mean())
+
+
+def _balance_row(S):
+    w, mask, block = _skewed_fixture()
+    bk, bn = block
+    pk = ops.pack(w, mask, block, n_shards=S, use_cache=False)
+    bal = pk.shard_balance
+    assert bal <= MAX_BALANCE, (
+        f"tp={S} shard balance {bal:.3f} > {MAX_BALANCE}: shard_columns "
+        "is no longer equalizing per-shard executed blocks")
+    cnt = mask[::bk, ::bn].sum(axis=0).astype(np.int64)
+
+    def executed(seg):     # same binning geometry as the packed layout
+        sizes = pk.bin_sizes
+        out, start = 0.0, 0
+        for sz in sizes:
+            out += sz * max(seg[start:start + sz].max(initial=0), 1)
+            start += sz
+        return out
+
+    naive = _contiguous_balance(cnt, executed, S)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (8, w.shape[0])).astype(np.float32))
+    ref = ops.sparse_linear(x, packed=ops.pack(w, mask, block, reorder=True,
+                                               use_cache=False))
+    fn = jax.jit(lambda xx: ops.sparse_linear(xx, packed=pk))
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(ref))
+    us = timer_us(fn, x)
+    return (f"shard_balance,skewed{w.shape[0]}x{w.shape[1]},tp={S}", us,
+            f"shard_balance={bal:.3f};naive_balance={naive:.3f};"
+            f"executed_blocks={pk.executed_blocks}")
+
+
+def _tp_model_row(S=4, K=4096, N=4096, block=(128, 128), keep=0.125):
+    rng = np.random.default_rng(3)
+    kb = rng.random((K // block[0], N // block[1])) < keep
+    mask = np.kron(kb, np.ones(block, bool))
+    w = (rng.standard_normal((K, N)) * 0.1).astype(np.float32)
+    base = ops.pack(w, mask, block, reorder=True, use_cache=False)
+    pk = ops.pack(w, mask, block, n_shards=S, use_cache=False)
+    per_device = pk.executed_blocks / S
+    speedup = base.executed_blocks / per_device
+    x = jnp.asarray(rng.standard_normal((64, K)).astype(np.float32))
+    fn = jax.jit(lambda xx: ops.sparse_linear(xx, packed=pk))
+    np.testing.assert_allclose(np.asarray(fn(x)),
+                               np.asarray(ops.sparse_linear(x, packed=base)),
+                               rtol=1e-5, atol=1e-5)
+    us = timer_us(fn, x)
+    return (f"tp_model,decode_fc{K}x{N},tp={S}", us,
+            f"tp_speedup={speedup:.2f}x;"
+            f"shard_balance={pk.shard_balance:.3f};"
+            f"per_device_blocks={per_device:.0f}")
+
+
+def bench(fast=True):
+    """Returns [(name, us_per_call, derived), ...] — shard-balance and
+    modeled tensor-parallel speedup rows."""
+    del fast  # deterministic layout accounting — no long mode
+    return [_balance_row(2), _balance_row(4), _tp_model_row()]
+
+
+if __name__ == "__main__":
+    for row in bench():
+        print(row)

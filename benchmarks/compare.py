@@ -28,10 +28,18 @@ Gated metrics (parsed from each row's ``derived`` string):
     fraction over a *simulated* (virtual-step) workload: fully
     deterministic, so it gates at the strict threshold; a drop means the
     scheduler started stranding slots.
+  * shard balance (``shard_balance``) — the tensor-parallel straggler
+    factor (max/mean per-shard executed blocks) of the degree-balanced
+    column assignment: exact layout accounting, gated LOWER-is-better at
+    the strict threshold; growth means ``shard_columns`` stopped
+    equalizing per-device work.  (``tp_speedup``, the modeled parallel
+    scaling, gates at the loose wall threshold — cross-shard padding
+    shifts it with the degree draw.)
 
 A higher-better metric regresses when ``fresh < baseline * (1 -
-threshold)`` (default threshold 10%, wall metrics 50%); a ``*_mb`` metric
-when ``fresh > baseline * (1 + threshold)``.  Rows or metrics present in
+threshold)`` (default threshold 10%, wall metrics 50%); a lower-is-better
+metric (``*_mb``, ``shard_balance``) when ``fresh > baseline * (1 +
+threshold)``.  Rows or metrics present in
 the baseline but missing from the fresh run also fail — a silently
 dropped row is a lost metric, not a pass.  New rows/metrics are reported
 and ignored until the baselines are refreshed.
@@ -64,10 +72,18 @@ FRACTION_KEYS = (
 FRACTION_FLOOR = 0.05
 SPEEDUP_RE = re.compile(r"^([0-9.]+)x$")
 # wall-clock-derived ratios: gated at --wall-threshold, not --threshold
-WALL_KEYS = ("loop_speedup", "artifact_warm_speedup", "batch_speedup")
+WALL_KEYS = (
+    "loop_speedup",
+    "artifact_warm_speedup",
+    "batch_speedup",
+    "tp_speedup",
+)
 WALL_ROW_PREFIXES = ("pack_vectorized", "coldstart")
 # lower-is-better byte metrics (deterministic accounting, no wall noise)
 MEMORY_SUFFIX = "_mb"
+# lower-is-better ratios (deterministic layout accounting): the sharded
+# straggler factor max/mean executed blocks per shard
+LOWER_BETTER_KEYS = ("shard_balance",)
 # higher-is-better wall-clock throughput (serving engine tokens/s)
 THROUGHPUT_SUFFIX = "tok_per_s"
 
@@ -78,8 +94,9 @@ def is_wall_metric(key):
             or row.startswith(WALL_ROW_PREFIXES))
 
 
-def is_memory_metric(key):
-    return key.rsplit(":", 1)[-1].endswith(MEMORY_SUFFIX)
+def is_lower_better(key):
+    metric = key.rsplit(":", 1)[-1]
+    return metric.endswith(MEMORY_SUFFIX) or metric in LOWER_BETTER_KEYS
 
 
 def metrics_from(payload):
@@ -91,8 +108,12 @@ def metrics_from(payload):
             ratio = SPEEDUP_RE.match(val)
             if "speedup" in key and ratio:
                 out[f"{row['name']}:{key}"] = float(ratio.group(1))
-            elif (key in FRACTION_KEYS or key.endswith(MEMORY_SUFFIX)
-                    or key.endswith(THROUGHPUT_SUFFIX)):
+            elif (
+                key in FRACTION_KEYS
+                or key in LOWER_BETTER_KEYS
+                or key.endswith(MEMORY_SUFFIX)
+                or key.endswith(THROUGHPUT_SUFFIX)
+            ):
                 out[f"{row['name']}:{key}"] = float(val)
     return out
 
@@ -141,12 +162,12 @@ def compare_one(name, base_path, fresh_path, threshold, wall_threshold):
         if is_fraction and b < FRACTION_FLOOR:
             continue
         allowed = wall_threshold if is_wall_metric(key) else threshold
-        if is_memory_metric(key):
+        if is_lower_better(key):
             if f > b * (1 + allowed):
                 failures.append(
-                    f"{name}: {key} grew {b:.2f} -> {f:.2f} MB "
+                    f"{name}: {key} grew {b:.2f} -> {f:.2f} "
                     f"({(f / b - 1) * 100:.0f}% > {allowed * 100:.0f}% "
-                    "allowed; memory metrics gate lower-is-better)"
+                    "allowed; this metric gates lower-is-better)"
                 )
         elif f < b * (1 - allowed):
             failures.append(

@@ -18,6 +18,7 @@ BENCHES = [
     "bench_moe_sparse",       # batched sparse MoE expert GEMMs vs dense
     "bench_conv_sparse",      # conv via im2col PackedLayout (Fig 5 sweep)
     "bench_quant",            # int8 packed values vs fp: bytes + parity
+    "bench_shard",            # tensor-parallel shard balance + tp scaling
     "bench_macs",             # Table 5
     "bench_portability",      # Table 7
     "bench_blocksize",        # Fig 5 + Fig 9 (acc/latency vs block)

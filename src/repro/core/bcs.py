@@ -288,7 +288,71 @@ def bin_bounds(nb: int, n_bins: int) -> tuple:
                  if b > a)
 
 
-def pack_csc_reordered(w, mask, block, n_bins=4):
+def shard_columns(cnt, n_shards):
+    """Degree-balanced assignment of block columns to tensor-parallel shards.
+
+    Greedy LPT bin-packing with an exact per-shard capacity: columns are
+    visited in descending-degree order and each goes to the least-loaded
+    shard that still has room, so every shard ends up with exactly
+    ``Nb / n_shards`` columns (the equal-width invariant stacking and
+    ``NamedSharding`` both need) while per-shard total degree — the work a
+    device actually executes — is equalized.  This is the cross-DEVICE
+    analogue of the paper's Fig 4 row reordering: there, degree bins keep
+    one heavy column from inflating every column's padding; here, the same
+    degree statistics keep one heavy *shard* from making every other
+    device wait on the straggler.
+
+    Returns an ``(n_shards, Nb // n_shards)`` int32 array of ORIGINAL
+    column indices; each shard's row is in descending-degree order (the
+    order per-shard binning expects).  Requires ``n_shards`` | ``Nb``.
+    """
+    cnt = np.asarray(cnt)
+    Nb = cnt.shape[0]
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if Nb % n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} does not divide Nb={Nb} block columns")
+    cap = Nb // n_shards
+    order = np.argsort(-cnt, kind="stable")
+    load = np.zeros(n_shards, np.int64)
+    fill = np.zeros(n_shards, np.int64)
+    out = np.empty((n_shards, cap), np.int32)
+    for j in order:
+        open_ = fill < cap
+        s = int(np.flatnonzero(open_)[np.argmin(load[open_])])
+        out[s, fill[s]] = j
+        fill[s] += 1
+        load[s] += cnt[j]
+    return out
+
+
+def shard_balance(nnz, bin_sizes) -> float:
+    """max/mean executed blocks per shard, each shard padded independently.
+
+    ``nnz`` is the layout-order degree array ``(..., S, Nb_s)`` and
+    ``bin_sizes`` the per-bin column counts.  The stacked layout pads every
+    bin to the cross-shard max degree, so its *padded* work is equal by
+    construction; what this measures is the straggler factor if each shard
+    ran its own best-case layout (bins padded to that shard's own max) —
+    i.e. how well ``shard_columns`` equalized the real work.  1.0 = perfect.
+    """
+    n = np.asarray(nnz)
+    if n.ndim < 2:
+        return 1.0
+    flat = n.reshape(-1, n.shape[-2], n.shape[-1])   # (slices, S, Nb_s)
+    per_shard = np.zeros(flat.shape[:2], np.float64)  # executed blocks
+    start = 0
+    for sz in bin_sizes:
+        seg = flat[..., start:start + sz]
+        per_shard += sz * np.maximum(seg.max(axis=-1), 1)
+        start += sz
+    mean = per_shard.mean(axis=-1)
+    ratio = per_shard.max(axis=-1) / np.maximum(mean, 1e-9)
+    return float(ratio.max())
+
+
+def pack_csc_reordered(w, mask, block, n_bins=4, n_shards=0):
     """Degree-sorted, binned CSC packing — the paper's Fig 4 *row reordering
     for load balance*, applied to the kernel's work rows (block columns).
 
@@ -303,12 +367,44 @@ def pack_csc_reordered(w, mask, block, n_bins=4):
 
     Returns a ``core.packed.PackedLayout`` with per-bin values/k_idx,
     ``perm`` (layout position -> original column) and ``inv_perm``.
+
+    ``n_shards > 0`` produces the tensor-parallel variant: columns are
+    first distributed across shards by ``shard_columns`` (degree-balanced,
+    exactly ``Nb / n_shards`` per shard), then each shard is degree-sorted
+    and binned exactly as above, with every bin padded to the CROSS-shard
+    max degree so the per-bin leaves stack into one array with a leading
+    shard axis — ``values[b]`` is ``(S, nb_b, L_b, bk, bn)``, ``perm`` is
+    ``(S, Nb_s)`` holding ORIGINAL column ids, and ``inv_perm`` stays a
+    flat ``(Nb,)`` map original column -> shard-major layout position.
+    Per-column accumulation order is still untouched, so sharded outputs
+    merge to the bit-identical unsharded result.
     """
     from repro.core.packed import PackedLayout
 
     vals, kidx, nnz, density = pack_csc(w, mask, block)
     cnt = np.asarray(nnz)
     Nb = cnt.shape[0]
+    if n_shards:
+        assign = shard_columns(cnt, n_shards)          # (S, Nb_s)
+        S, Nbs = assign.shape
+        inv = np.empty(Nb, np.int32)
+        inv[assign.reshape(-1)] = np.arange(Nb, dtype=np.int32)
+        vs = jnp.take(vals, jnp.asarray(assign.reshape(-1)), axis=0)
+        ks = jnp.take(kidx, jnp.asarray(assign.reshape(-1)), axis=0)
+        vs = vs.reshape((S, Nbs) + vs.shape[1:])
+        ks = ks.reshape((S, Nbs) + ks.shape[1:])
+        cnt_sh = cnt[assign]                           # (S, Nb_s)
+        bin_values, bin_kidx = [], []
+        for s, e in bin_bounds(Nbs, n_bins):
+            Lb = max(1, int(cnt_sh[:, s:e].max()))     # cross-shard max
+            bin_values.append(vs[:, s:e, :Lb])
+            bin_kidx.append(ks[:, s:e, :Lb])
+        return PackedLayout(values=tuple(bin_values), k_idx=tuple(bin_kidx),
+                            nnz=jnp.asarray(cnt_sh),
+                            perm=jnp.asarray(assign),
+                            inv_perm=jnp.asarray(inv),
+                            block=tuple(block), shape=tuple(np.shape(w)),
+                            n_shards=S)
     order = np.argsort(-cnt, kind="stable").astype(np.int32)
     inv = np.empty(Nb, np.int32)
     inv[order] = np.arange(Nb, dtype=np.int32)
@@ -345,7 +441,7 @@ def conv_lower(w):
         w.transpose(2, 3, 1, 0).reshape(Kh * Kw * Q, P))
 
 
-def pattern_lower(w, mask, *, group=1, n_bins=4, reorder=True):
+def pattern_lower(w, mask, *, group=1, n_bins=4, reorder=True, n_shards=0):
     """Tap lowering of a pattern/connectivity-pruned conv (PatDNN/PCONV
     schemes, paper §2.1.1): per-kernel pattern masks carry NO block
     structure — every (p, q) kernel keeps its own 4-of-9 tap set — so the
@@ -370,8 +466,21 @@ def pattern_lower(w, mask, *, group=1, n_bins=4, reorder=True):
     groups only pay off after PatDNN-style similarity reordering.
 
     Works for any (P, Q, Kh, Kw) mask — 3x3 pattern masks, connectivity
-    (whole-kernel) masks on arbitrary kernel sizes, or their product."""
+    (whole-kernel) masks on arbitrary kernel sizes, or their product.
+
+    ``n_shards > 0`` (implies ``reorder``): filter groups are distributed
+    across tensor-parallel shards by the same degree-balanced
+    ``shard_columns`` assignment as ``pack_csc_reordered``, then binned
+    per shard with each bin padded to the cross-shard max — per-bin leaves
+    gain a leading shard axis, ``perm`` becomes ``(S, G_s)`` of ORIGINAL
+    group ids, ``inv_perm`` stays flat ``(G,)``.  ``alive`` remains the
+    GLOBAL live-row index (replicated): every shard gathers from the same
+    input band."""
     from repro.core.packed import TapLayout
+
+    if n_shards and not reorder:
+        raise ValueError("n_shards > 0 requires reorder=True (the "
+                         "degree-balanced shard assignment IS a reorder)")
 
     w = np.asarray(w)
     mask = np.broadcast_to(np.asarray(mask), w.shape)
@@ -389,6 +498,32 @@ def pattern_lower(w, mask, *, group=1, n_bins=4, reorder=True):
         alive = np.zeros(1, np.int64)                  # fully-pruned layer
     ga = galive[alive]                                 # (R, G)
     cnt = ga.sum(axis=0).astype(np.int64)              # taps per group
+    if n_shards:
+        assign = shard_columns(cnt, n_shards)          # (S, G_s)
+        S, Gs = assign.shape
+        inv = np.empty(G, np.int32)
+        inv[assign.reshape(-1)] = np.arange(G, dtype=np.int32)
+        cnt_sh = cnt[assign]
+        bin_values, bin_tidx, bin_kfull = [], [], []
+        for s, e in bin_bounds(Gs, n_bins):
+            Lb = max(1, int(cnt_sh[:, s:e].max()))     # cross-shard max
+            vals = np.zeros((S, e - s, Lb, group), w.dtype)
+            tidx = np.zeros((S, e - s, Lb), np.int32)
+            for sh in range(S):
+                for gi, g in enumerate(assign[sh, s:e]):
+                    rows = np.nonzero(ga[:, g])[0]
+                    vals[sh, gi, :len(rows)] = \
+                        wl[alive[rows], g * group:(g + 1) * group]
+                    tidx[sh, gi, :len(rows)] = rows
+            bin_values.append(jnp.asarray(vals))
+            bin_tidx.append(jnp.asarray(tidx))
+            bin_kfull.append(jnp.asarray(alive[tidx], jnp.int32))
+        return TapLayout(values=tuple(bin_values), t_idx=tuple(bin_tidx),
+                         k_full=tuple(bin_kfull),
+                         nnz=jnp.asarray(cnt_sh, jnp.int32),
+                         alive=jnp.asarray(alive, jnp.int32),
+                         perm=jnp.asarray(assign), inv_perm=jnp.asarray(inv),
+                         group=group, shape=(K, P), n_shards=S)
     if reorder:
         order = np.argsort(-cnt, kind="stable").astype(np.int32)
         bounds = bin_bounds(G, n_bins)

@@ -96,6 +96,19 @@ class PackedLayout:
                   offset table ``kernels.bsr_matmul.bsr_conv2d_implicit``
                   uses to gather its x tile straight from the padded
                   feature map instead of a materialized patch tensor.
+      n_shards : 0 for a single-device layout.  When S > 0 the layout is
+                 tensor-parallel over block COLUMNS: every per-bin leaf
+                 carries a shard axis as the LAST stack dim — ``values[b]``
+                 is (..., S, nb_b, L_b, bk, bn), ``nnz`` is (..., S, Nb_s)
+                 with Nb_s = Nb / S — so layer scans still slice axis 0
+                 and the per-layer slice is shard-major for ``jax.vmap`` /
+                 ``NamedSharding`` over the mesh "model" axis.  ``perm``
+                 becomes (..., S, Nb_s) holding ORIGINAL column ids (the
+                 flattened last two axes are a permutation of range(Nb));
+                 ``inv_perm`` stays flat (..., Nb) mapping original column
+                 -> shard-major layout position, consumed by
+                 ``merge_shards``.  Built by ``core.bcs.pack_csc_reordered``
+                 with its degree-balanced ``shard_columns`` assignment.
 
     Padding slots (column degree below the bin max) carry ``k_idx`` 0 and
     all-zero values, so they multiply to nothing; ``nnz`` records the true
@@ -111,6 +124,7 @@ class PackedLayout:
     shape: tuple = (0, 0)
     conv_taps: tuple = None
     scales: tuple = None
+    n_shards: int = 0
 
     # -- pytree protocol -----------------------------------------------------
 
@@ -118,16 +132,17 @@ class PackedLayout:
         """Flatten into (array leaves, static aux) for jax pytree traversal."""
         children = (self.values, self.k_idx, self.nnz, self.perm,
                     self.inv_perm, self.scales)
-        return children, (self.block, self.shape, self.conv_taps)
+        return children, (self.block, self.shape, self.conv_taps,
+                          self.n_shards)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
         values, k_idx, nnz, perm, inv_perm, scales = children
-        block, shape, conv_taps = aux
+        block, shape, conv_taps, n_shards = aux
         return cls(values=values, k_idx=k_idx, nnz=nnz, perm=perm,
                    inv_perm=inv_perm, block=block, shape=shape,
-                   conv_taps=conv_taps, scales=scales)
+                   conv_taps=conv_taps, scales=scales, n_shards=n_shards)
 
     # -- static geometry (no device sync) ------------------------------------
 
@@ -147,8 +162,13 @@ class PackedLayout:
         return len(self.values)
 
     @property
+    def Nb_shard(self) -> int:
+        """Block columns per shard (= Nb when unsharded)."""
+        return self.Nb // max(1, self.n_shards)
+
+    @property
     def bin_sizes(self) -> tuple:
-        """Block columns per bin."""
+        """Block columns per bin (per shard on a sharded layout)."""
         return tuple(v.shape[-4] for v in self.values)
 
     @property
@@ -165,8 +185,12 @@ class PackedLayout:
     @property
     def executed_blocks(self) -> int:
         """Blocks the kernel actually multiplies per dense-weight slice:
-        sum over bins of nb_b * L_b (padding included)."""
-        return sum(s * d for s, d in zip(self.bin_sizes, self.bin_degrees))
+        sum over bins of nb_b * L_b (padding included), times the shard
+        count on a sharded layout (each shard pads to the cross-shard bin
+        max, so per-shard padded work is identical by construction)."""
+        per_shard = sum(s * d
+                        for s, d in zip(self.bin_sizes, self.bin_degrees))
+        return per_shard * max(1, self.n_shards)
 
     @property
     def L_effective(self) -> float:
@@ -193,14 +217,31 @@ class PackedLayout:
             return (None,) * self.n_bins
         return self.scales
 
+    def shard_index_leaves(self) -> tuple:
+        """The per-bin index leaves the kernel launch consumes next to
+        ``values`` (``k_idx`` here, ``t_idx`` on TapLayout) — lets
+        ``kernels.bsr_matmul._sharded_launch`` drive both layouts."""
+        return self.k_idx
+
     # -- data-dependent stats (host sync; report/test time only) -------------
 
     @property
     def nnzb(self) -> int:
         """Surviving blocks per dense-weight slice (mean over stack dims)."""
         n = np.asarray(self.nnz)
-        per_slice = n.reshape(-1, n.shape[-1]).sum(axis=1)
+        # trailing layout axes ((Nb,) or (S, Nb_s)) flatten to Nb either way
+        per_slice = n.reshape(-1, self.Nb).sum(axis=1)
         return int(round(float(per_slice.mean())))
+
+    @property
+    def shard_balance(self) -> float:
+        """max/mean executed blocks per shard were each shard padded to its
+        OWN bin maxima — the straggler factor ``core.bcs.shard_columns``
+        minimizes.  1.0 on unsharded layouts and under perfect balance."""
+        if not self.n_shards:
+            return 1.0
+        from repro.core import bcs
+        return bcs.shard_balance(self.nnz, self.bin_sizes)
 
     @property
     def density(self) -> float:
@@ -216,7 +257,10 @@ class PackedLayout:
 
     def unpermute_cols(self, y):
         """Gather a (..., M, N) output from layout column order back to the
-        original column order (identity when the layout is unreordered)."""
+        original column order (identity when the layout is unreordered).
+        Sharded layouts merge per-shard outputs via ``merge_shards``
+        instead (the inverse permutation there spans shards)."""
+        assert not self.n_shards, "sharded layouts merge via merge_shards"
         if self.inv_perm is None:
             return y
         bn = self.block[1]
@@ -224,23 +268,42 @@ class PackedLayout:
         yb = jnp.take(yb, self.inv_perm, axis=-2)
         return yb.reshape(y.shape)
 
+    def merge_shards(self, y):
+        """Merge shard-local outputs (S, ..., M, N/S) — shard axis LEADING,
+        as ``jax.vmap`` over the shard axis produces — into the original
+        column order (..., M, N).  The flat ``inv_perm`` already maps each
+        original column to its shard-major layout position, so one gather
+        is both the cross-shard concat and the un-reorder; under jit with
+        sharded operands GSPMD turns it into the all-gather epilogue."""
+        assert self.n_shards, "merge_shards needs a sharded layout"
+        bn = self.block[1]
+        y = jnp.moveaxis(y, 0, -2)                  # (..., M, S, N/S)
+        yb = y.reshape(y.shape[:-2] + (self.Nb, bn))
+        yb = jnp.take(yb, self.inv_perm, axis=-2)
+        return yb.reshape(y.shape[:-2] + (self.Nb * bn,))
+
     def permute_bias(self, bias):
-        """Gather a (N,) bias into layout column order for fused epilogues."""
+        """Gather a (N,) bias into layout column order for fused epilogues.
+        Returns (N,) on unsharded layouts, (S, N/S) on sharded ones."""
         if bias is None or self.perm is None:
             return bias
         bn = self.block[1]
         bb = bias.reshape(self.Nb, bn)
-        return jnp.take(bb, self.perm, axis=0).reshape(-1)
+        pb = jnp.take(bb, self.perm, axis=0)        # (Nb, bn) | (S, Nb_s, bn)
+        return pb.reshape(pb.shape[:-2] + (-1,))
 
     def bin_bias(self, bias):
-        """Per-bin (nb_b * bn,) bias slices in layout order (or Nones)."""
+        """Per-bin (nb_b * bn,) bias slices in layout order (or Nones);
+        sharded layouts get (S, nb_b * bn) slices (vmap-ready)."""
         if bias is None:
             return (None,) * self.n_bins
         bn = self.block[1]
-        pb = self.permute_bias(bias).reshape(self.Nb, bn)
+        pb = self.permute_bias(bias)
+        pb = pb.reshape(pb.shape[:-1] + (-1, bn))   # (Nb, bn) | (S, Nb_s, bn)
         out, start = [], 0
         for s in self.bin_sizes:
-            out.append(pb[start:start + s].reshape(-1))
+            sl = pb[..., start:start + s, :]
+            out.append(sl.reshape(sl.shape[:-2] + (s * bn,)))
             start += s
         return tuple(out)
 
@@ -249,25 +312,33 @@ class PackedLayout:
         the test/debug oracle for round-trip identity.  Quantized layouts
         reconstruct the DEQUANTIZED weight (values * scales), which is what
         the in-kernel dequant path must match."""
-        assert self.values[0].ndim == 4, "to_dense needs an unstacked layout"
+        S = max(1, self.n_shards)
+        want = 4 + (1 if self.n_shards else 0)
+        assert self.values[0].ndim == want, \
+            "to_dense needs an unstacked layout"
         K, N = self.shape
         bk, bn = self.block
         Kb, Nb = self.Kb, self.Nb
         dense = np.zeros((Kb, Nb, bk, bn),
                          np.float32 if self.scales is not None
                          else np.asarray(self.values[0]).dtype)
-        col = 0
-        perm = (np.asarray(self.perm) if self.perm is not None
-                else np.arange(Nb))
-        nnz = np.asarray(self.nnz)
-        for vals, kidx, sc in zip(self.values, self.k_idx,
-                                  self.bin_scales()):
-            vals, kidx = np.asarray(_dequant(vals, sc)), np.asarray(kidx)
-            for j in range(vals.shape[0]):
-                oj = int(perm[col + j])
-                for l in range(int(nnz[col + j])):
-                    dense[int(kidx[j, l]), oj] += vals[j, l]
-            col += vals.shape[0]
+        perm = (np.asarray(self.perm).reshape(S, -1)
+                if self.perm is not None
+                else np.arange(Nb).reshape(S, -1))
+        nnz = np.asarray(self.nnz).reshape(S, -1)
+        for sh in range(S):
+            col = 0
+            for vals, kidx, sc in zip(self.values, self.k_idx,
+                                      self.bin_scales()):
+                vals = np.asarray(_dequant(vals, sc))
+                kidx = np.asarray(kidx)
+                if self.n_shards:
+                    vals, kidx = vals[sh], kidx[sh]
+                for j in range(vals.shape[0]):
+                    oj = int(perm[sh, col + j])
+                    for l in range(int(nnz[sh, col + j])):
+                        dense[int(kidx[j, l]), oj] += vals[j, l]
+                col += vals.shape[0]
         return dense.transpose(0, 2, 1, 3).reshape(K, N)
 
 
@@ -319,6 +390,12 @@ class TapLayout:
               groups widen the output tile but store the tap UNION, which
               erodes savings because patterns differ per kernel)
       shape : (K, P) of the lowered dense weight
+      n_shards : 0 for single-device; when S > 0 the filter groups are
+                 tensor-parallel exactly like ``PackedLayout`` block
+                 columns — per-bin leaves gain a leading shard axis
+                 ((S, G_b, L_b, group) values), ``nnz``/``perm`` become
+                 (S, G_s), ``inv_perm`` stays flat (G,), and ``alive``
+                 stays GLOBAL (every shard gathers the same input band).
 
     Degree sort + binning mirror ``PackedLayout``: groups are sorted by
     tap-degree and each bin padded to its own max, so connectivity-pruned
@@ -335,6 +412,7 @@ class TapLayout:
     shape: tuple = (0, 0)
     k_full: tuple = None
     scales: tuple = None
+    n_shards: int = 0
 
     # -- pytree protocol -----------------------------------------------------
 
@@ -342,16 +420,16 @@ class TapLayout:
         """Flatten into (array leaves, static aux) for jax pytree traversal."""
         children = (self.values, self.t_idx, self.nnz, self.alive,
                     self.perm, self.inv_perm, self.k_full, self.scales)
-        return children, (self.group, self.shape)
+        return children, (self.group, self.shape, self.n_shards)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         """Rebuild a layout from ``tree_flatten`` output (jax protocol)."""
         values, t_idx, nnz, alive, perm, inv_perm, k_full, scales = children
-        group, shape = aux
+        group, shape, n_shards = aux
         return cls(values=values, t_idx=t_idx, nnz=nnz, alive=alive,
                    perm=perm, inv_perm=inv_perm, group=group, shape=shape,
-                   k_full=k_full, scales=scales)
+                   k_full=k_full, scales=scales, n_shards=n_shards)
 
     # -- static geometry (no device sync) ------------------------------------
 
@@ -386,10 +464,18 @@ class TapLayout:
         return max(self.bin_degrees)
 
     @property
+    def n_groups_shard(self) -> int:
+        """Filter groups per shard (= n_groups when unsharded)."""
+        return self.n_groups // max(1, self.n_shards)
+
+    @property
     def executed_taps(self) -> int:
         """Tap slots the kernel gathers+multiplies (padding included):
-        sum over bins of G_b * L_b."""
-        return sum(s * d for s, d in zip(self.bin_sizes, self.bin_degrees))
+        sum over bins of G_b * L_b, times the shard count on a sharded
+        layout (bins pad to the cross-shard max, so shards match)."""
+        per_shard = sum(s * d
+                        for s, d in zip(self.bin_sizes, self.bin_degrees))
+        return per_shard * max(1, self.n_shards)
 
     @property
     def L_effective(self) -> float:
@@ -417,6 +503,11 @@ class TapLayout:
             return (None,) * self.n_bins
         return self.scales
 
+    def shard_index_leaves(self) -> tuple:
+        """Per-bin index leaves for the generic sharded kernel driver
+        (``t_idx`` — see ``PackedLayout.shard_index_leaves``)."""
+        return self.t_idx
+
     # -- data-dependent stats (host sync; report/test time only) -------------
 
     @property
@@ -434,32 +525,60 @@ class TapLayout:
         """Executed-tap overhead of bin padding vs exact tap lists."""
         return self.executed_taps / max(self.nnz_taps, 1)
 
+    @property
+    def shard_balance(self) -> float:
+        """max/mean executed taps per shard were each shard padded to its
+        own bin maxima (1.0 on unsharded layouts) — see
+        ``PackedLayout.shard_balance``."""
+        if not self.n_shards:
+            return 1.0
+        from repro.core import bcs
+        return bcs.shard_balance(self.nnz, self.bin_sizes)
+
     # -- helpers -------------------------------------------------------------
 
     def unpermute_cols(self, y):
         """Gather a (..., M, P) output from layout group order back to the
-        original filter order (identity when unreordered)."""
+        original filter order (identity when unreordered).  Sharded
+        layouts merge per-shard outputs via ``merge_shards`` instead."""
+        assert not self.n_shards, "sharded layouts merge via merge_shards"
         if self.inv_perm is None:
             return y
         yb = y.reshape(y.shape[:-1] + (self.n_groups, self.group))
         yb = jnp.take(yb, self.inv_perm, axis=-2)
         return yb.reshape(y.shape)
 
+    def merge_shards(self, y):
+        """Merge shard-local outputs (S, ..., M, P/S) — shard axis LEADING —
+        into original filter order (..., M, P); one gather through the flat
+        ``inv_perm`` is both the concat and the un-reorder (see
+        ``PackedLayout.merge_shards``)."""
+        assert self.n_shards, "merge_shards needs a sharded layout"
+        y = jnp.moveaxis(y, 0, -2)              # (..., M, S, P/S)
+        yb = y.reshape(y.shape[:-2] + (self.n_groups, self.group))
+        yb = jnp.take(yb, self.inv_perm, axis=-2)
+        return yb.reshape(y.shape[:-2] + (self.n_groups * self.group,))
+
     def permute_bias(self, bias):
-        """Gather a (P,) bias into layout group order for fused epilogues."""
+        """Gather a (P,) bias into layout group order for fused epilogues.
+        Returns (P,) unsharded, (S, P/S) sharded."""
         if bias is None or self.perm is None:
             return bias
         bb = bias.reshape(self.n_groups, self.group)
-        return jnp.take(bb, self.perm, axis=0).reshape(-1)
+        pb = jnp.take(bb, self.perm, axis=0)
+        return pb.reshape(pb.shape[:-2] + (-1,))
 
     def bin_bias(self, bias):
-        """Per-bin (G_b * group,) bias slices in layout order (or Nones)."""
+        """Per-bin (G_b * group,) bias slices in layout order (or Nones);
+        (S, G_b * group) on sharded layouts (vmap-ready)."""
         if bias is None:
             return (None,) * self.n_bins
-        pb = self.permute_bias(bias).reshape(self.n_groups, self.group)
+        pb = self.permute_bias(bias)
+        pb = pb.reshape(pb.shape[:-1] + (-1, self.group))
         out, start = [], 0
         for s in self.bin_sizes:
-            out.append(pb[start:start + s].reshape(-1))
+            sl = pb[..., start:start + s, :]
+            out.append(sl.reshape(sl.shape[:-2] + (s * self.group,)))
             start += s
         return tuple(out)
 
@@ -477,21 +596,27 @@ class TapLayout:
         oracle: must equal ``core.bcs.conv_lower(w * mask)`` (dequantized
         values * scales on a quantized layout)."""
         K, P = self.shape
+        S = max(1, self.n_shards)
         dense = np.zeros((K, P),
                          np.float32 if self.scales is not None
                          else np.asarray(self.values[0]).dtype)
         alive = np.asarray(self.alive)
-        perm = (np.asarray(self.perm) if self.perm is not None
-                else np.arange(self.n_groups))
-        nnz = np.asarray(self.nnz)
-        col = 0
-        for vals, tidx, sc in zip(self.values, self.t_idx,
-                                  self.bin_scales()):
-            vals, tidx = np.asarray(_dequant(vals, sc)), np.asarray(tidx)
-            for g in range(vals.shape[0]):
-                og = int(perm[col + g])
-                sl = slice(og * self.group, (og + 1) * self.group)
-                for l in range(int(nnz[col + g])):
-                    dense[alive[int(tidx[g, l])], sl] += vals[g, l]
-            col += vals.shape[0]
+        perm = (np.asarray(self.perm).reshape(S, -1)
+                if self.perm is not None
+                else np.arange(self.n_groups).reshape(S, -1))
+        nnz = np.asarray(self.nnz).reshape(S, -1)
+        for sh in range(S):
+            col = 0
+            for vals, tidx, sc in zip(self.values, self.t_idx,
+                                      self.bin_scales()):
+                vals = np.asarray(_dequant(vals, sc))
+                tidx = np.asarray(tidx)
+                if self.n_shards:
+                    vals, tidx = vals[sh], tidx[sh]
+                for g in range(vals.shape[0]):
+                    og = int(perm[sh, col + g])
+                    sl = slice(og * self.group, (og + 1) * self.group)
+                    for l in range(int(nnz[sh, col + g])):
+                        dense[alive[int(tidx[g, l])], sl] += vals[g, l]
+                col += vals.shape[0]
         return dense

@@ -228,9 +228,42 @@ def _check_scales(layout, allowed_shapes, path):
                 path=path)
 
 
+def _check_sharded(layout, n_cols, n_cols_name, path):
+    """Cross-shard invariants shared by both layouts when
+    ``layout.n_shards`` = S > 0: S must tile the column axis; ``nnz`` must
+    carry the (S, cols/S) trailing axes; ``perm``/``inv_perm`` are
+    REQUIRED (``merge_shards`` gathers through them) and ``perm`` must be
+    (..., S, cols/S) whose flattened last two axes are a permutation of
+    range(cols) — one shard claiming a column of another (or a column
+    twice) is exactly the corruption that would silently scramble the
+    merged output.  Returns cols-per-shard for the caller's bin checks."""
+    S = layout.n_shards
+    if S < 1 or n_cols % S:
+        raise LayoutGeometryError(
+            f"n_shards={S} does not divide {n_cols_name}={n_cols}",
+            field="n_shards", path=path)
+    per = n_cols // S
+    a = _as_host(layout.nnz)
+    if a.ndim < 2 or a.shape[-2:] != (S, per):
+        raise LayoutStructureError(
+            f"nnz shape {a.shape} does not end in the shard axes "
+            f"(S={S}, {n_cols_name}/S={per})", field="nnz", path=path)
+    if layout.perm is None or layout.inv_perm is None:
+        raise LayoutPermutationError(
+            "sharded layout requires perm/inv_perm (merge_shards gathers "
+            "through them)", field="perm", path=path)
+    p = _as_host(layout.perm)
+    if p.ndim < 2 or p.shape[-2:] != (S, per):
+        raise LayoutStructureError(
+            f"perm shape {p.shape} does not end in the shard axes "
+            f"(S={S}, {n_cols_name}/S={per})", field="perm", path=path)
+    return per
+
+
 def _validate_packed(layout: PackedLayout, path):
     bk, bn = layout.block
     K, N = layout.shape
+    S = layout.n_shards
     if bk <= 0 or bn <= 0 or K <= 0 or N <= 0:
         raise LayoutGeometryError(
             f"non-positive geometry block={layout.block} "
@@ -240,6 +273,7 @@ def _validate_packed(layout: PackedLayout, path):
             f"block {layout.block} does not divide shape {layout.shape}",
             field="block", path=path)
     Kb, Nb = K // bk, N // bn
+    cols = _check_sharded(layout, Nb, "Nb", path) if S else Nb
     if not layout.values or len(layout.values) != len(layout.k_idx):
         raise LayoutStructureError(
             f"{len(layout.values)} value bin(s) vs "
@@ -251,6 +285,11 @@ def _validate_packed(layout: PackedLayout, path):
             raise LayoutStructureError(
                 f"values shape {vs} does not end in block {(bk, bn)}",
                 field="values", bin=b, path=path)
+        if S and (len(vs) < 5 or vs[-5] != S):
+            raise LayoutStructureError(
+                f"values shape {vs} lacks the shard axis S={S} before the "
+                f"per-bin (nb_b, L_b, bk, bn) dims", field="values", bin=b,
+                path=path)
         if vs[:-4] != lead:
             raise LayoutStructureError(
                 f"stack dims {vs[:-4]} != bin-0 stack dims {lead}",
@@ -268,14 +307,20 @@ def _validate_packed(layout: PackedLayout, path):
             raise LayoutIndexError(
                 f"k_idx range [{int(ka.min())}, {int(ka.max())}] outside "
                 f"[0, Kb={Kb})", field="k_idx", bin=b, path=path)
-    if sum(layout.bin_sizes) != Nb:
+    if sum(layout.bin_sizes) != cols:
         raise LayoutGeometryError(
             f"bin sizes {layout.bin_sizes} sum to "
-            f"{sum(layout.bin_sizes)}, not Nb={Nb}", field="values",
+            f"{sum(layout.bin_sizes)}, not "
+            f"{'Nb/S' if S else 'Nb'}={cols}", field="values",
             path=path)
     _check_nnz(layout.nnz, _bounds_of(layout.bin_sizes),
-               layout.bin_degrees, Nb, Kb, path)
-    _check_perm_pair(layout.perm, layout.inv_perm, Nb, path)
+               layout.bin_degrees, cols, Kb, path)
+    if S:
+        p = _as_host(layout.perm)
+        _check_perm_pair(p.reshape(p.shape[:-2] + (Nb,)),
+                         layout.inv_perm, Nb, path)
+    else:
+        _check_perm_pair(layout.perm, layout.inv_perm, Nb, path)
     if layout.conv_taps is not None:
         _check_conv_taps(layout.conv_taps, Kb, bk, path)
     # quantization: "block" granularity = one scale per stored block
@@ -331,6 +376,7 @@ def _validate_tap(layout: TapLayout, path):
             f"group {group} does not divide P={P}", field="group",
             path=path)
     G = P // group
+    cols = _check_sharded(layout, G, "G", path) if layout.n_shards else G
     if not layout.values or len(layout.values) != len(layout.t_idx):
         raise LayoutStructureError(
             f"{len(layout.values)} value bin(s) vs "
@@ -357,11 +403,18 @@ def _validate_tap(layout: TapLayout, path):
             "alive rows are not strictly increasing (band gather order "
             "broken)", field="alive", path=path)
     R = alive.size
+    S = layout.n_shards
     for b, (v, t) in enumerate(zip(layout.values, layout.t_idx)):
         vs, ts = np.shape(v), np.shape(t)
-        if len(vs) != 3 or vs[-1] != group:
+        want_nd = 4 if S else 3
+        if len(vs) != want_nd or vs[-1] != group:
             raise LayoutStructureError(
-                f"values shape {vs} is not (G_b, L_b, group={group})",
+                f"values shape {vs} is not "
+                f"{'(S, G_b, L_b, group)' if S else '(G_b, L_b, group)'} "
+                f"with group={group}", field="values", bin=b, path=path)
+        if S and vs[0] != S:
+            raise LayoutStructureError(
+                f"values shape {vs} leading shard axis != S={S}",
                 field="values", bin=b, path=path)
         if ts != vs[:-1]:
             raise LayoutStructureError(
@@ -387,14 +440,20 @@ def _validate_tap(layout: TapLayout, path):
                     "k_full != alive[t_idx] (precomputed full-band rows "
                     "disagree with the alive gather)", field="k_full",
                     bin=b, path=path)
-    if sum(layout.bin_sizes) != G:
+    if sum(layout.bin_sizes) != cols:
         raise LayoutGeometryError(
             f"bin sizes {layout.bin_sizes} sum to "
-            f"{sum(layout.bin_sizes)}, not G={G}", field="values",
+            f"{sum(layout.bin_sizes)}, not "
+            f"{'G/S' if S else 'G'}={cols}", field="values",
             path=path)
     _check_nnz(layout.nnz, _bounds_of(layout.bin_sizes),
-               layout.bin_degrees, G, R, path)
-    _check_perm_pair(layout.perm, layout.inv_perm, G, path)
+               layout.bin_degrees, cols, R, path)
+    if S:
+        p = _as_host(layout.perm)
+        _check_perm_pair(p.reshape(p.shape[:-2] + (G,)),
+                         layout.inv_perm, G, path)
+    else:
+        _check_perm_pair(layout.perm, layout.inv_perm, G, path)
     # quantization: "block" granularity = one scale per tap slot (G_b,
     # L_b); "out" = one per filter in the broadcastable (G_b, 1, group)
     _check_scales(

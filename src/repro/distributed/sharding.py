@@ -12,6 +12,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
@@ -117,6 +118,117 @@ def make_dist(mesh: Mesh, cfg: ArchConfig, global_batch: int,
                 expert_sharded=(cfg.n_experts % tp == 0) if cfg.n_experts else False,
                 vocab_shardable=cfg.vocab % tp == 0,
                 mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Packed-layout partition specs (tensor-parallel sharded layouts)
+# ---------------------------------------------------------------------------
+
+def _axis_at(leaf, pos, axis):
+    """P with ``axis`` at dim ``pos`` of ``leaf``, None-safe replicate."""
+    if leaf is None:
+        return None
+    nd = np.ndim(leaf)
+    spec = [None] * nd
+    spec[pos] = axis
+    return P(*spec)
+
+
+def _replicated(leaf):
+    """Fully-replicated spec, None passed through (absent leaf)."""
+    return None if leaf is None else P()
+
+
+def layout_partition_specs(layout, model_axis: str = "model"):
+    """Per-leaf ``PartitionSpec`` tree for a ``PackedLayout``/``TapLayout``.
+
+    Column-sharded layouts (``n_shards`` > 0, ``core.bcs.shard_columns``)
+    map the shard stack dim — the LAST stack dim, sitting immediately
+    before each leaf's per-bin dims — onto the mesh model axis: values at
+    ndim-5 (tap: ndim-4), index leaves at ndim-3, nnz/perm at ndim-2.
+    ``inv_perm`` (flat, global) and ``alive`` stay replicated: the
+    ``merge_shards`` epilogue gathers through them after the all-gather.
+    Scale leaves share the values' leading dims, so their shard dim sits
+    at the same rank-relative position.  Unsharded layouts replicate
+    every leaf.  Returns the same layout class with each array leaf
+    replaced by its spec — pytree-compatible with the layout itself, so
+    it feeds ``jax.device_put`` / ``NamedSharding`` construction directly.
+    """
+    import dataclasses as _dc
+    from repro.core.packed import PackedLayout, TapLayout
+
+    def tmap(fn, leaf):
+        if leaf is None:
+            return None
+        if isinstance(leaf, tuple):
+            return tuple(fn(x) for x in leaf)
+        return fn(leaf)
+
+    if not layout.n_shards:
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(layout),
+            [P() for _ in jax.tree_util.tree_leaves(layout)])
+    if isinstance(layout, PackedLayout):
+        lead = np.ndim(layout.values[0]) - 5
+    else:
+        assert isinstance(layout, TapLayout)
+        lead = np.ndim(layout.values[0]) - 4
+    shard = lambda x: _axis_at(x, lead, model_axis)  # noqa: E731
+    out = _dc.replace(
+        layout,
+        values=tmap(shard, layout.values),
+        nnz=shard(layout.nnz),
+        perm=shard(layout.perm),
+        inv_perm=_replicated(layout.inv_perm),
+        scales=tmap(shard, layout.scales))
+    if isinstance(layout, PackedLayout):
+        return _dc.replace(out, k_idx=tmap(shard, layout.k_idx))
+    return _dc.replace(out, t_idx=tmap(shard, layout.t_idx),
+                       k_full=tmap(shard, layout.k_full),
+                       alive=_replicated(layout.alive))
+
+
+def expert_layout_specs(layout, model_axis: str = "model"):
+    """Specs for an expert-parallel MoE layout stack: every array leaf
+    (values, k_idx, nnz, perm, inv_perm, scales) carries the expert axis
+    in front, so each shards at dim 0 over the model axis — the free
+    sharding ``sparse_expert_linear`` exploits; column sharding
+    (``n_shards``) must never reach these layouts."""
+    assert layout.n_shards == 0, \
+        "expert layouts shard along experts, not block columns"
+    leaves, treedef = jax.tree_util.tree_flatten(layout)
+    return jax.tree_util.tree_unflatten(
+        treedef, [_axis_at(x, 0, model_axis) for x in leaves])
+
+
+def layout_shardings(layout, mesh: Mesh, model_axis: str = "model"):
+    """``NamedSharding`` tree for a layout on ``mesh`` (see
+    ``layout_partition_specs``)."""
+    specs = layout_partition_specs(layout, model_axis)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_packed_tree(params, mesh: Mesh, model_axis: str = "model"):
+    """Device-put every ``"packed"`` layout in a compiled param tree with
+    its shard-axis ``NamedSharding`` (column-sharded leaves split over the
+    model axis, everything else replicated) — the placement step between
+    ``serve.compile.compile_model(spec=CompileSpec(tp=...))`` and serving
+    on a real multi-device mesh.  Non-layout leaves are left alone."""
+    from repro.core.packed import PackedLayout, TapLayout
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: walk(v) for k, v in node.items()}
+        pk = out.get("packed")
+        if isinstance(pk, (PackedLayout, TapLayout)):
+            out["packed"] = jax.device_put(
+                pk, layout_shardings(pk, mesh, model_axis))
+        return out
+
+    return walk(params)
 
 
 # ---------------------------------------------------------------------------

@@ -217,7 +217,13 @@ def bsr_matmul_packed(x, layout, bias=None, *, bm=128, act="none",
     kernel, so reordered and unreordered results are bit-identical.
     Quantized layouts (int8 values, ``core.quant``) thread each bin's
     ``scales`` leaf into the launch for in-kernel dequantization.
+
+    Tensor-parallel layouts (``layout.n_shards > 0``) dispatch to
+    ``bsr_matmul_sharded`` — callers never need to care which they hold.
     """
+    if layout.n_shards:
+        return bsr_matmul_sharded(x, layout, bias=bias, bm=bm, act=act,
+                                  interpret=interpret, out_dtype=out_dtype)
     outs = []
     for vals_b, kidx_b, sc_b, bias_b in zip(layout.values, layout.k_idx,
                                             layout.bin_scales(),
@@ -227,6 +233,51 @@ def bsr_matmul_packed(x, layout, bias=None, *, bm=128, act="none",
                                out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     return layout.unpermute_cols(y)
+
+
+def _sharded_launch(x, layout, bias, launch):
+    """Shared shard-parallel driver: ``jax.vmap`` of the per-bin ``launch``
+    over the leading shard axis of every per-bin leaf (values/indices/
+    scales/bias), then ``layout.merge_shards`` — one gather that is both
+    the cross-shard concat and the column un-reorder.  ``x`` is closed
+    over (replicated to every shard).  When the leaves carry a
+    ``NamedSharding`` over the mesh "model" axis, GSPMD partitions the
+    vmapped launches into per-device kernels and turns the merge into the
+    all-gather epilogue; on one device it is a plain batched launch —
+    numerics are identical either way (per-column accumulation order is
+    untouched, so sharded results are bit-identical to unsharded)."""
+    operands = {"values": layout.values, "idx": layout.shard_index_leaves()}
+    if layout.scales is not None:
+        operands["scales"] = layout.scales
+    if bias is not None:
+        operands["bias"] = layout.bin_bias(bias)
+    n_bins = layout.n_bins
+
+    def shard_fn(op):
+        outs = []
+        for b in range(n_bins):
+            outs.append(launch(
+                x, op["values"][b], op["idx"][b],
+                op["bias"][b] if "bias" in op else None,
+                op["scales"][b] if "scales" in op else None))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+    return layout.merge_shards(jax.vmap(shard_fn)(operands))
+
+
+def bsr_matmul_sharded(x, layout, bias=None, *, bm=128, act="none",
+                       interpret=None, out_dtype=None):
+    """x (M, K) @ tensor-parallel PackedLayout (K, N) -> (M, N).
+
+    Each shard runs the same per-bin ``bsr_matmul`` launches as
+    ``bsr_matmul_packed`` over its own degree-balanced column slice
+    (weights column-split, x replicated); outputs merge through the flat
+    ``inv_perm`` gather.  See ``_sharded_launch`` for the vmap/GSPMD
+    mechanics."""
+    def launch(xx, vals, kidx, bias_b, sc_b):
+        return bsr_matmul(xx, vals, kidx, bias=bias_b, scales=sc_b, bm=bm,
+                          act=act, interpret=interpret, out_dtype=out_dtype)
+    return _sharded_launch(x, layout, bias, launch)
 
 
 # ---------------------------------------------------------------------------
@@ -339,7 +390,13 @@ def tap_gather_conv_packed(x, layout, bias=None, *, bm=128, act="none",
     One ``tap_gather_conv`` launch per degree bin (each bin padded only to
     its own max tap degree), outputs concatenated over bins and gathered
     back through ``inv_perm`` — the TapLayout mirror of
-    ``bsr_matmul_packed``, including the quantized-scales plumbing."""
+    ``bsr_matmul_packed``, including the quantized-scales plumbing and the
+    tensor-parallel dispatch (``layout.n_shards > 0`` routes to
+    ``tap_gather_conv_sharded``)."""
+    if layout.n_shards:
+        return tap_gather_conv_sharded(x, layout, bias=bias, bm=bm, act=act,
+                                       interpret=interpret,
+                                       out_dtype=out_dtype)
     outs = []
     for vals_b, tidx_b, sc_b, bias_b in zip(layout.values, layout.t_idx,
                                             layout.bin_scales(),
@@ -350,6 +407,21 @@ def tap_gather_conv_packed(x, layout, bias=None, *, bm=128, act="none",
                                     out_dtype=out_dtype))
     y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
     return layout.unpermute_cols(y)
+
+
+def tap_gather_conv_sharded(x, layout, bias=None, *, bm=128, act="none",
+                            interpret=None, out_dtype=None):
+    """x (M, R) alive band @ tensor-parallel TapLayout -> (M, P).
+
+    The tap mirror of ``bsr_matmul_sharded``: the alive band is GLOBAL
+    (``layout.alive`` is replicated — every shard gathers from the same
+    rows), each shard contracts its own degree-balanced filter groups, and
+    ``merge_shards`` restores original filter order."""
+    def launch(xx, vals, tidx, bias_b, sc_b):
+        return tap_gather_conv(xx, vals, tidx, bias=bias_b, scales=sc_b,
+                               bm=bm, act=act, interpret=interpret,
+                               out_dtype=out_dtype)
+    return _sharded_launch(x, layout, bias, launch)
 
 
 # ---------------------------------------------------------------------------

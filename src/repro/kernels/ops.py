@@ -149,10 +149,10 @@ def _evict_to_bounds():
 
 
 def _digest(w: np.ndarray, mask: np.ndarray, block, reorder, n_bins,
-            kind="bcs", conv=None, quant=None) -> str:
+            kind="bcs", conv=None, quant=None, n_shards=0) -> str:
     h = hashlib.blake2b(digest_size=16)
     h.update(str((kind, w.shape, str(w.dtype), block, bool(reorder),
-                  int(n_bins), conv, quant)).encode())
+                  int(n_bins), conv, quant, int(n_shards))).encode())
     h.update(np.ascontiguousarray(w).tobytes())
     h.update(np.ascontiguousarray(mask).tobytes())
     return h.hexdigest()
@@ -177,7 +177,7 @@ def _quant_spec(value_dtype, scale_granularity):
 
 def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
          value_dtype=None, scale_granularity="block",
-         use_cache=True) -> PackedLayout:
+         n_shards=0, use_cache=True) -> PackedLayout:
     """Host-side packing of a pruned weight into the kernel layout.
 
     Returns a ``PackedLayout``.  With ``reorder`` the block columns are
@@ -192,12 +192,16 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
     the packed values symmetrically (``core.quant``) at
     ``scale_granularity`` ("block" or "out"), attaching the fp32 scale
     leaves — the float pack is produced (and cached) first, then quantized.
+    ``n_shards > 0`` emits the tensor-parallel layout (degree-balanced
+    column shards, see ``core.bcs.shard_columns``); sharding implies the
+    degree-sorted producer regardless of ``reorder``, and the shard count
+    is part of the cache digest.
     """
     w = np.asarray(w)
     mask = np.asarray(mask)
     qspec = _quant_spec(value_dtype, scale_granularity)
     key = (_digest(w, mask, tuple(block), reorder, n_bins, conv=conv,
-                   quant=qspec)
+                   quant=qspec, n_shards=n_shards)
            if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
@@ -205,9 +209,12 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
         return _PACK_CACHE[key]
     if value_dtype is not None:
         base = pack(w, mask, block, reorder=reorder, n_bins=n_bins,
-                    conv=conv, use_cache=use_cache)
+                    conv=conv, n_shards=n_shards, use_cache=use_cache)
         out = QUANT.quantize_layout(base, value_dtype=value_dtype,
                                     scale_granularity=scale_granularity)
+    elif n_shards:
+        out = BCS.pack_csc_reordered(w, mask, block, n_bins=n_bins,
+                                     n_shards=n_shards)
     elif reorder:
         out = BCS.pack_csc_reordered(w, mask, block, n_bins=n_bins)
     else:
@@ -225,7 +232,7 @@ def pack(w, mask, block=(128, 128), *, reorder=False, n_bins=4, conv=None,
 
 def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
               value_dtype=None, scale_granularity="block",
-              use_cache=True):
+              n_shards=0, use_cache=True):
     """Host-side packing of a pattern/connectivity-pruned conv weight into
     the tap-gather layout.
 
@@ -240,12 +247,14 @@ def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
     the digest, so a TapLayout and a PackedLayout of the same weights
     never collide).  ``value_dtype="int8"`` quantizes the tap values
     (``core.quant``); prefer ``scale_granularity="out"`` for group=1
-    layouts, where a per-slot scale would cost 4 bytes per stored value."""
+    layouts, where a per-slot scale would cost 4 bytes per stored value.
+    ``n_shards > 0`` emits the tensor-parallel TapLayout (degree-balanced
+    filter-group shards; implies ``reorder``)."""
     w = np.asarray(w)
     mask = np.asarray(mask)
     qspec = _quant_spec(value_dtype, scale_granularity)
     key = (_digest(w, mask, (1, int(group)), reorder, n_bins, kind="taps",
-                   quant=qspec)
+                   quant=qspec, n_shards=n_shards)
            if use_cache else None)
     if key is not None and key in _PACK_CACHE:
         _PACK_CACHE.move_to_end(key)
@@ -253,12 +262,14 @@ def pack_taps(w, mask, *, group=1, reorder=True, n_bins=8,
         return _PACK_CACHE[key]
     if value_dtype is not None:
         base = pack_taps(w, mask, group=group, reorder=reorder,
-                         n_bins=n_bins, use_cache=use_cache)
+                         n_bins=n_bins, n_shards=n_shards,
+                         use_cache=use_cache)
         out = QUANT.quantize_layout(base, value_dtype=value_dtype,
                                     scale_granularity=scale_granularity)
     else:
         out = BCS.pattern_lower(w, mask, group=group, n_bins=n_bins,
-                                reorder=reorder)
+                                reorder=reorder or bool(n_shards),
+                                n_shards=n_shards)
     if key is not None:
         _cache_put(key, out)
     return out
@@ -365,6 +376,12 @@ def sparse_conv2d(x, packed: PackedLayout, *, kh, kw, stride=1,
     B, H, W, C = x.shape
     assert packed.shape[0] == kh * kw * C, (
         f"layout K={packed.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    if packed.n_shards:
+        # the implicit kernels are single-device (their epilogue gathers
+        # per-launch); sharded conv layouts run the materialized GEMM,
+        # whose bsr_matmul_packed dispatch handles the shard merge
+        assert not implicit, "implicit conv does not support sharded layouts"
+        implicit = False
     if _pick_implicit(implicit, x, kh, kw, stride, padding,
                       bk=packed.block[0]):
         return bsr_conv2d_implicit(x, packed, kh=kh, kw=kw, stride=stride,
@@ -397,6 +414,10 @@ def sparse_conv2d_pattern(x, tap, *, kh, kw, stride=1, padding="SAME",
     B, H, W, C = x.shape
     assert tap.shape[0] == kh * kw * C, (
         f"layout K={tap.shape[0]} != kh*kw*Cin={kh * kw * C}")
+    if tap.n_shards:
+        # sharded tap layouts run materialized (see sparse_conv2d)
+        assert not implicit, "implicit conv does not support sharded layouts"
+        implicit = False
     if _pick_implicit(implicit, x, kh, kw, stride, padding):
         return tap_gather_conv_implicit(x, tap, kh=kh, kw=kw, stride=stride,
                                         padding=padding, bias=bias, bm=bm,
@@ -421,7 +442,16 @@ def sparse_expert_linear(x, packed: PackedLayout, bias=None, act="none",
     (E, nb_b, L_b, bk, bn), perm (E, Nb), ...) — exactly what
     ``serve.compile._pack_stacked`` emits for MoE expert weights.  The
     packed kernel is ``jax.vmap``-ed over that axis, so all experts run as
-    one batched launch per bin instead of E Python-level calls."""
+    one batched launch per bin instead of E Python-level calls.
+
+    Expert layouts are never column-sharded: under tensor parallelism the
+    EXPERT axis is the shard axis (``distributed.sharding`` attaches the
+    mesh "model" ``NamedSharding`` to the leading leaf dim for free), so
+    a column-sharded expert layout here is a compile bug."""
+    assert packed.n_shards == 0, (
+        "MoE expert layouts shard along the expert axis, not block "
+        "columns; serve.compile must exempt moe/ paths from CompileSpec.tp")
+
     def _fn(xe, le, be=None):
         return bsr_matmul_packed(xe, le, bias=be, bm=bm, act=act,
                                  interpret=interpret)

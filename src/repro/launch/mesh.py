@@ -16,7 +16,16 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
-def make_local_mesh():
-    """1-device mesh with the production axis names — lets smoke tests run
-    the exact sharded code path on CPU."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_local_mesh(tp: int = 1):
+    """Local mesh with the production axis names — lets smoke tests run
+    the exact sharded code path on CPU.  ``tp`` > 1 puts that many local
+    devices on the "model" axis (pair with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fake them);
+    the default stays the historical 1-device (1, 1) mesh."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp > jax.device_count():
+        raise ValueError(
+            f"tp={tp} needs more devices than the {jax.device_count()} "
+            "available (set --xla_force_host_platform_device_count)")
+    return jax.make_mesh((1, tp), ("data", "model"))

@@ -202,9 +202,11 @@ def _layout_spec(layout):
                 "block": list(layout.block), "shape": list(layout.shape),
                 "conv_taps": ([list(t) for t in layout.conv_taps]
                               if layout.conv_taps is not None else None),
+                "n_shards": layout.n_shards,
                 "leaves": leaves}
     return {"layout": "tap", "n_bins": layout.n_bins,
             "group": layout.group, "shape": list(layout.shape),
+            "n_shards": layout.n_shards,
             "leaves": leaves}
 
 
@@ -250,7 +252,8 @@ def _layout_from_spec(lpath, spec, data):
             block=tuple(spec["block"]), shape=tuple(spec["shape"]),
             conv_taps=(tuple(tuple(t) for t in spec["conv_taps"])
                        if spec.get("conv_taps") is not None else None),
-            scales=scales)
+            scales=scales,
+            n_shards=int(spec.get("n_shards", 0)))
     if spec["layout"] == "tap":
         has_kfull = "k_full.0" in leaves
         return TapLayout(
@@ -262,7 +265,8 @@ def _layout_from_spec(lpath, spec, data):
             perm=_get("perm", required=False),
             inv_perm=_get("inv_perm", required=False),
             group=int(spec["group"]), shape=tuple(spec["shape"]),
-            scales=scales)
+            scales=scales,
+            n_shards=int(spec.get("n_shards", 0)))
     raise ArtifactCorrupt(
         f"layer {lpath!r}: unknown layout kind {spec['layout']!r}")
 

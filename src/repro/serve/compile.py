@@ -107,6 +107,14 @@ class CompileSpec:
         slots hold single values, so a per-slot scale would cost 4 bytes
         per stored value.
     exclude : path substrings never packed (router/embeddings per §5.2.4).
+    tp : tensor-parallel degree over the mesh "model" axis.  tp > 1
+        column-shards every packed layout (degree-balanced LPT assignment,
+        ``core.bcs.shard_columns``) so the shard-parallel kernel drivers
+        split block columns across devices.  MoE expert layers under a
+        ``moe/`` path are exempt — their expert stack axis already shards
+        along "model" for free (``sparse_expert_linear`` asserts it).
+        A layer whose column-block count tp does not divide falls back to
+        the unsharded layout (reported per layer via ``shards``).
 
     ``digest_fields()`` is the spec's contribution to the pack-cache key
     and the artifact ``model_digest``: exactly the fields that change the
@@ -123,6 +131,7 @@ class CompileSpec:
     value_dtype: str | None = None
     scale_granularity: str = "block"
     exclude: tuple = ("router", "embed", "head")
+    tp: int = 1
 
     def __post_init__(self):
         """Validate + normalize (tuples for hashability, checked enums)."""
@@ -142,13 +151,17 @@ class CompileSpec:
         object.__setattr__(self, "exclude", tuple(self.exclude))
         if self.n_bins is not None:
             object.__setattr__(self, "n_bins", int(self.n_bins))
+        if int(self.tp) < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        object.__setattr__(self, "tp", int(self.tp))
 
     def digest_fields(self) -> tuple:
         """The layout-determining fields, in a stable order — what the
         artifact ``model_digest`` hashes for the compile-knob part."""
         return (self.block_override, float(self.min_saving),
                 bool(self.reorder), self.n_bins, tuple(self.exclude),
-                self.value_dtype, str(self.scale_granularity))
+                self.value_dtype, str(self.scale_granularity),
+                int(self.tp))
 
     def to_json(self) -> dict:
         """Plain-JSON form (manifest serialization)."""
@@ -197,6 +210,7 @@ class LayerReport:
     layers: int | None = None
     value_dtype: str | None = None
     patch_b_per_pos: int | None = None
+    shards: int | None = None
 
     @property
     def executed_frac(self) -> float | None:
@@ -313,28 +327,33 @@ def _layer_kind(w, scheme: str) -> str:
     return "linear"
 
 
-def _stack_pad_L(arrays, Lb):
-    """Stack per-slice bin arrays after zero-padding axis 1 (the column
-    degree) to ``Lb`` — padding slots keep k_idx 0 / zero values."""
+def _stack_pad_L(arrays, Lb, axis=1):
+    """Stack per-slice bin arrays after zero-padding ``axis`` (the column
+    degree — 1 unsharded, 2 behind the shard axis) to ``Lb`` — padding
+    slots keep k_idx 0 / zero values."""
     out = []
     for a in arrays:
         a = np.asarray(a)
-        pad = Lb - a.shape[1]
+        pad = Lb - a.shape[axis]
         if pad:
-            a = np.concatenate(
-                [a, np.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)], 1)
+            shp = list(a.shape)
+            shp[axis] = pad
+            a = np.concatenate([a, np.zeros(shp, a.dtype)], axis)
         out.append(a)
     return np.stack(out)
 
 
 def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4,
-                  value_dtype=None, scale_granularity="block"):
+                  value_dtype=None, scale_granularity="block", n_shards=0):
     """Pack (..., K, N) weights slice-by-slice, pad every slice's per-bin
     column degree to the stack max, and restack -> a scan/vmap-compatible
     ``PackedLayout`` whose leaves carry the leading stack dims (layers,
     experts, or both).  ``value_dtype="int8"`` quantizes the STACKED
     layout (one ``core.quant`` pass over the restacked leaves — the
-    per-slice float packs stay cached as-is).
+    per-slice float packs stay cached as-is).  ``n_shards`` > 0 shards
+    every slice's block columns tensor-parallel (degree-balanced LPT,
+    ``core.bcs.shard_columns``); the shard axis stays the innermost stack
+    dim on every per-bin leaf.
 
     Returns (PackedLayout, stats)."""
     w = np.asarray(w)
@@ -343,30 +362,36 @@ def _pack_stacked(w, mask, block, *, reorder=True, n_bins=4,
     K, N = w.shape[-2:]
     bk, bn = block
     Kb = K // bk
+    S = int(n_shards)
     wf = w.reshape((-1, K, N))
     mf = mask.reshape((-1, K, N))
-    layouts = [ops.pack(wf[i], mf[i], block, reorder=reorder, n_bins=n_bins)
+    layouts = [ops.pack(wf[i], mf[i], block, reorder=reorder, n_bins=n_bins,
+                        n_shards=S)
                for i in range(wf.shape[0])]
     nb = layouts[0].n_bins                    # identical across slices
+    shard = (S,) if S else ()
+    deg_axis = 2 if S else 1                  # degree sits behind the shard
     values, k_idx = [], []
     for b in range(nb):
         Lb = max(l.bin_degrees[b] for l in layouts)
         values.append(jnp.asarray(_stack_pad_L(
-            [l.values[b] for l in layouts], Lb).reshape(
-                lead + (-1, Lb, bk, bn))))
+            [l.values[b] for l in layouts], Lb, deg_axis).reshape(
+                lead + shard + (-1, Lb, bk, bn))))
         k_idx.append(jnp.asarray(_stack_pad_L(
-            [l.k_idx[b] for l in layouts], Lb).reshape(lead + (-1, Lb))))
+            [l.k_idx[b] for l in layouts], Lb, deg_axis).reshape(
+                lead + shard + (-1, Lb))))
 
     def restack(get):
         a = np.stack([np.asarray(get(l)) for l in layouts])
         return jnp.asarray(a.reshape(lead + a.shape[1:]))
 
     nnz = restack(lambda l: l.nnz)
-    perm = restack(lambda l: l.perm) if reorder else None
-    inv_perm = restack(lambda l: l.inv_perm) if reorder else None
+    has_perm = reorder or S
+    perm = restack(lambda l: l.perm) if has_perm else None
+    inv_perm = restack(lambda l: l.inv_perm) if has_perm else None
     stacked = PackedLayout(values=tuple(values), k_idx=tuple(k_idx),
                            nnz=nnz, perm=perm, inv_perm=inv_perm,
-                           block=tuple(block), shape=(K, N))
+                           block=tuple(block), shape=(K, N), n_shards=S)
     if value_dtype is not None:
         stacked = QUANT.quantize_layout(
             stacked, value_dtype=value_dtype,
@@ -512,6 +537,13 @@ def compile_model(params, masks=None, mapping=(), spec=None, *,
         vdt = getattr(choice, "value_dtype", None) or spec.value_dtype
         if vdt not in VALUE_DTYPES:
             return skip(f"unsupported value_dtype {vdt!r}")
+        # tensor-parallel column sharding: MoE expert stacks are exempt
+        # (their leading expert axis shards along "model" for free —
+        # sparse_expert_linear asserts column sharding never reaches it);
+        # a layer whose column count tp does not divide falls back to the
+        # unsharded layout, recorded via the report's ``shards`` field.
+        shards = 0 if "moe" in wpath.split("/") else (
+            spec.tp if spec.tp > 1 else 0)
         if kind == "pattern_conv":
             # tap producer: pattern/connectivity masks carry no block
             # structure (every kernel keeps its own tap set), so the layer
@@ -521,8 +553,11 @@ def compile_model(params, masks=None, mapping=(), spec=None, *,
             # silently falling back to masked-dense.  Quantized taps always
             # use per-filter ("out") scales — group=1 slots hold single
             # values, so per-slot scales would cost 4 bytes per value.
+            if shards and w.shape[0] % shards:
+                shards = 0                      # tp does not divide filters
             tap = ops.pack_taps(w, mask, reorder=reorder, n_bins=tap_bins,
-                                value_dtype=vdt, scale_granularity="out")
+                                value_dtype=vdt, scale_granularity="out",
+                                n_shards=shards)
             P, Q, Kh, Kw = w.shape
             stats = {
                 "block": (1, tap.group), "shape": tap.shape,
@@ -550,9 +585,12 @@ def compile_model(params, masks=None, mapping=(), spec=None, *,
             P, Q, Kh, Kw = w.shape
             wl = BCS.conv_lower(w)
             ml = BCS.conv_lower(np.broadcast_to(np.asarray(mask), w.shape))
+            if shards and (wl.shape[-1] // gemm_block[1]) % shards:
+                shards = 0                  # tp does not divide Nb
             packed, stats = _pack_stacked(
                 wl, ml, gemm_block, reorder=reorder, n_bins=gemm_bins,
-                value_dtype=vdt, scale_granularity=spec.scale_granularity)
+                value_dtype=vdt, scale_granularity=spec.scale_granularity,
+                n_shards=shards)
             # attach the static tap-offset table so the implicit-GEMM
             # kernel can gather from the feature map without a patch tensor
             packed = dataclasses.replace(
@@ -563,9 +601,12 @@ def compile_model(params, masks=None, mapping=(), spec=None, *,
             K, N = w.shape[-2:]
             if K % block[0] or N % block[1]:
                 return skip(f"block {block} does not divide ({K}, {N})")
+            if shards and (N // block[1]) % shards:
+                shards = 0                  # tp does not divide Nb
             packed, stats = _pack_stacked(
                 w, mask, block, reorder=reorder, n_bins=gemm_bins,
-                value_dtype=vdt, scale_granularity=spec.scale_granularity)
+                value_dtype=vdt, scale_granularity=spec.scale_granularity,
+                n_shards=shards)
         if stats["flops_saved"] <= spec.min_saving:
             return skip(f"no effective saving (L={stats['L']} of "
                         f"Kb={stats['Kb']} column blocks survive)")
@@ -574,7 +615,7 @@ def compile_model(params, masks=None, mapping=(), spec=None, *,
             del out["w"]
         rows.append(LayerReport(path=wpath, packed=True, kind=kind,
                                 scheme=choice.scheme, value_dtype=vdt,
-                                **stats))
+                                shards=shards or None, **stats))
         return out
 
     exec_params = walk(params, masks, "")
@@ -611,6 +652,8 @@ def compiled_summary(report) -> str:
                 f"flops_saved={r['flops_saved']:.2f}")
             if r.get("value_dtype"):
                 line += f" values={r['value_dtype']}"
+            if r.get("shards"):
+                line += f" tp={r['shards']}"
             if "patch_b_per_pos" in r:
                 line += f" implicit_avoids={r['patch_b_per_pos']}B/pos"
             lines.append(line)

@@ -169,3 +169,29 @@ def test_memory_metric_gates_lower_is_better(gate, capsys):
     assert "grew" in capsys.readouterr().err
     write(fresh / "BENCH_x.json", payload([("row_a", "peak_mb=8.00")]))
     assert run() == 0                       # shrinking is never a failure
+
+
+def test_shard_balance_gates_lower_is_better_strictly(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json",
+          payload([("shard,tp=4", "shard_balance=1.05")]))
+    # deterministic layout accounting: a 15% growth fails at the strict 10%
+    write(fresh / "BENCH_x.json",
+          payload([("shard,tp=4", "shard_balance=1.21")]))
+    assert run() == 1
+    assert "lower-is-better" in capsys.readouterr().err
+    write(fresh / "BENCH_x.json",
+          payload([("shard,tp=4", "shard_balance=1.00")]))
+    assert run() == 0                       # perfect balance never fails
+
+
+def test_tp_speedup_is_a_wall_metric(gate):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json",
+          payload([("tp_model,fc", "tp_speedup=4.00x")]))
+    write(fresh / "BENCH_x.json",
+          payload([("tp_model,fc", "tp_speedup=3.00x")]))
+    assert run() == 0          # 25% padding swing tolerated
+    write(fresh / "BENCH_x.json",
+          payload([("tp_model,fc", "tp_speedup=1.50x")]))
+    assert run() == 1          # scaling collapse still trips the gate

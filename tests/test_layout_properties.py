@@ -1,0 +1,206 @@
+"""Property tests over the layout producers (hypothesis, or the
+deterministic example-sweep fallback on a clean container).
+
+For randomized (shape, block, density, n_bins, reorder, value_dtype,
+n_shards) draws:
+
+  * ``pack_csc``/``pack_csc_reordered``/``pattern_lower`` round-trip
+    through ``to_dense`` BIT-exactly (float layouts; quantized layouts
+    keep the exact mask support), and every fresh layout passes
+    ``core.validate`` — whatever the knobs.
+  * any single mutated leaf fails validation with the MATCHING
+    ``LayoutError`` subclass — the taxonomy the artifact loader keys its
+    refusal messages on.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean container: deterministic example sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import bcs as BCS
+from repro.core import regularity as R
+from repro.core import validate as V
+from repro.kernels import ops
+
+
+def _block_layout(kn, block, density, n_bins, reorder, value_dtype,
+                  n_shards, seed):
+    K, N = kn
+    bk, bn = block
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((K, N)).astype(np.float32)
+    mask = np.kron(rng.random((K // bk, N // bn)) < density,
+                   np.ones((bk, bn), bool))
+    Nb = N // bn
+    if n_shards and Nb % n_shards:
+        n_shards = 2 if Nb % 2 == 0 else 0
+    pk = ops.pack(w, mask, block, reorder=reorder, n_bins=n_bins,
+                  value_dtype=value_dtype, n_shards=n_shards,
+                  use_cache=False)
+    return pk, w * mask
+
+
+def _tap_layout(density, n_bins, n_shards, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((16, 8, 3, 3)).astype(np.float32)
+    mask = np.asarray(R.pattern_mask(w, connectivity_rate=density))
+    tap = ops.pack_taps(w * mask, mask, n_bins=n_bins, n_shards=n_shards,
+                        use_cache=False)
+    return tap, BCS.conv_lower(w * mask) * BCS.conv_lower(mask)
+
+
+@settings(max_examples=24, deadline=None)
+@given(
+    kn=st.sampled_from([(32, 64), (64, 64), (48, 96), (64, 128)]),
+    block=st.sampled_from([(8, 8), (16, 16), (8, 16)]),
+    density=st.floats(0.1, 0.9),
+    n_bins=st.integers(1, 6),
+    reorder=st.booleans(),
+    value_dtype=st.sampled_from([None, "int8"]),
+    n_shards=st.sampled_from([0, 2, 4]),
+)
+def test_pack_roundtrip_and_validate(kn, block, density, n_bins, reorder,
+                                     value_dtype, n_shards):
+    """Whatever the knobs, the packed layout validates clean and
+    ``to_dense`` reproduces the masked dense weight — bit-exactly for
+    float values; quantized layouts keep the exact mask support (zero
+    off-mask, nonzero wherever quantization kept a representable value).
+    """
+    seed = (kn[0] * 31 + kn[1] + block[0] * 7 + block[1]
+            + int(density * 1000) + n_bins * 13 + reorder * 17
+            + (value_dtype is not None) * 19 + n_shards * 23) % (2 ** 31)
+    pk, dense = _block_layout(kn, block, density, n_bins, reorder,
+                              value_dtype, n_shards, seed)
+    V.validate_layout(pk, path="prop")
+    got = np.asarray(pk.to_dense())
+    if value_dtype is None:
+        np.testing.assert_array_equal(got, dense)
+    else:
+        assert got.shape == dense.shape
+        np.testing.assert_array_equal(got[dense == 0], 0.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    density=st.floats(0.1, 0.8),
+    n_bins=st.integers(1, 8),
+    n_shards=st.sampled_from([0, 2, 4]),
+)
+def test_pattern_lower_roundtrip_and_validate(density, n_bins, n_shards):
+    """pattern_lower round-trips bit-exactly through the tap layout and
+    validates, sharded or not."""
+    seed = (int(density * 1000) + n_bins * 13 + n_shards * 23) % (2 ** 31)
+    tap, dense = _tap_layout(density, n_bins, n_shards, seed)
+    V.validate_layout(tap, path="prop")
+    np.testing.assert_array_equal(np.asarray(tap.to_dense()), dense)
+
+
+# -- single-leaf mutations fail with the matching subclass -------------------
+
+def _replace_bin(layout, field, b, new):
+    old = getattr(layout, field)
+    return dataclasses.replace(
+        layout, **{field: old[:b] + (new,) + old[b + 1:]})
+
+
+# (name, mutator, expected LayoutError subclass) for PackedLayout
+PACKED_MUTATIONS = [
+    ("k_idx_out_of_range",
+     lambda l: _replace_bin(l, "k_idx", 0,
+                            jnp.full_like(l.k_idx[0], l.Kb)),
+     V.LayoutIndexError),
+    ("k_idx_float_dtype",
+     lambda l: _replace_bin(l, "k_idx", 0,
+                            l.k_idx[0].astype(jnp.float32)),
+     V.LayoutStructureError),
+    ("values_wrong_block",
+     lambda l: _replace_bin(l, "values", 0, l.values[0][..., :-1]),
+     V.LayoutStructureError),
+    ("values_dropped_column",
+     lambda l: _replace_bin(l, "values", 0,
+                            l.values[0][..., 1:, :, :, :]
+                            if l.n_shards else l.values[0][1:]),
+     V.LayoutStructureError),
+    ("nnz_wrong_length",
+     lambda l: dataclasses.replace(
+         l, nnz=jnp.concatenate([l.nnz, l.nnz], axis=-1)),
+     V.LayoutStructureError),
+    ("nnz_over_degree",
+     lambda l: dataclasses.replace(l, nnz=l.nnz + l.Kb),
+     V.LayoutCountError),
+    ("perm_duplicate",
+     lambda l: dataclasses.replace(
+         l, perm=jnp.asarray(np.where(
+             np.arange(l.perm.size).reshape(l.perm.shape) == 0,
+             np.asarray(l.perm).reshape(-1)[-1],
+             np.asarray(l.perm)))),
+     V.LayoutPermutationError),
+    ("inv_perm_mismatch",
+     lambda l: dataclasses.replace(
+         l, inv_perm=jnp.roll(l.inv_perm, 1, axis=-1)),
+     V.LayoutPermutationError),
+    ("shape_not_divisible",
+     lambda l: dataclasses.replace(l, shape=(l.shape[0] - 1, l.shape[1])),
+     V.LayoutGeometryError),
+]
+
+TAP_MUTATIONS = [
+    ("t_idx_out_of_range",
+     lambda l: _replace_bin(l, "t_idx", 0,
+                            jnp.full_like(l.t_idx[0], l.n_alive)),
+     V.LayoutIndexError),
+    ("alive_not_increasing",
+     lambda l: dataclasses.replace(l, alive=l.alive[::-1]),
+     V.LayoutIndexError),
+    ("k_full_disagrees",
+     lambda l: _replace_bin(l, "k_full", 0, l.k_full[0] * 0),
+     V.LayoutAuxError),
+    ("values_wrong_group",
+     lambda l: _replace_bin(
+         l, "values", 0,
+         jnp.concatenate([l.values[0], l.values[0]], axis=-1)),
+     V.LayoutStructureError),
+    ("nnz_over_band",
+     lambda l: dataclasses.replace(l, nnz=l.nnz + l.n_alive),
+     V.LayoutCountError),
+]
+
+
+@pytest.mark.parametrize("sharded", [False, True],
+                         ids=["unsharded", "sharded"])
+@pytest.mark.parametrize("name,mutate,err",
+                         PACKED_MUTATIONS,
+                         ids=[m[0] for m in PACKED_MUTATIONS])
+def test_packed_mutation_rejected(name, mutate, err, sharded):
+    pk, _ = _block_layout((64, 128), (8, 8), 0.5, 3, True, None,
+                          2 if sharded else 0, seed=21)
+    V.validate_layout(pk)                     # clean before mutation
+    with pytest.raises(err):
+        V.validate_layout(mutate(pk), path="mut")
+
+
+@pytest.mark.parametrize("sharded", [False, True],
+                         ids=["unsharded", "sharded"])
+@pytest.mark.parametrize("name,mutate,err",
+                         TAP_MUTATIONS,
+                         ids=[m[0] for m in TAP_MUTATIONS])
+def test_tap_mutation_rejected(name, mutate, err, sharded):
+    tap, _ = _tap_layout(0.5, 3, 2 if sharded else 0, seed=22)
+    V.validate_layout(tap)
+    with pytest.raises(err):
+        V.validate_layout(mutate(tap), path="mut")
+
+
+def test_quant_scale_mutation_rejected():
+    pk, _ = _block_layout((64, 128), (8, 8), 0.5, 3, True, "int8", 0,
+                          seed=23)
+    V.validate_layout(pk)
+    bad = _replace_bin(pk, "scales", 0, pk.scales[0][..., :1, :])
+    with pytest.raises(V.LayoutQuantError):
+        V.validate_layout(bad, path="mut")
