@@ -35,6 +35,12 @@ Gated metrics (parsed from each row's ``derived`` string):
     equalizing per-device work.  (``tp_speedup``, the modeled parallel
     scaling, gates at the loose wall threshold — cross-shard padding
     shifts it with the degree draw.)
+  * chaos-harness metrics (``bench_faults``):
+    ``degraded_throughput_ratio`` (degraded tok/s over healthy tok/s — a
+    wall-clock ratio, gated at ``--wall-threshold``; the bench itself
+    additionally enforces the hard 0.8x acceptance floor) and
+    ``recovery_steps`` (quarantine eviction to slot re-admission — a
+    deterministic scheduler replay, gated LOWER-is-better strict).
 
 A higher-better metric regresses when ``fresh < baseline * (1 -
 threshold)`` (default threshold 10%, wall metrics 50%); a lower-is-better
@@ -77,13 +83,16 @@ WALL_KEYS = (
     "artifact_warm_speedup",
     "batch_speedup",
     "tp_speedup",
+    "degraded_throughput_ratio",
 )
 WALL_ROW_PREFIXES = ("pack_vectorized", "coldstart")
 # lower-is-better byte metrics (deterministic accounting, no wall noise)
 MEMORY_SUFFIX = "_mb"
-# lower-is-better ratios (deterministic layout accounting): the sharded
-# straggler factor max/mean executed blocks per shard
-LOWER_BETTER_KEYS = ("shard_balance",)
+# lower-is-better metrics gated strict: the sharded straggler factor
+# max/mean executed blocks per shard (deterministic layout accounting)
+# and the chaos harness's quarantine-to-readmission step count
+# (deterministic scheduler replay)
+LOWER_BETTER_KEYS = ("shard_balance", "recovery_steps")
 # higher-is-better wall-clock throughput (serving engine tokens/s)
 THROUGHPUT_SUFFIX = "tok_per_s"
 
@@ -111,6 +120,7 @@ def metrics_from(payload):
             elif (
                 key in FRACTION_KEYS
                 or key in LOWER_BETTER_KEYS
+                or key in WALL_KEYS
                 or key.endswith(MEMORY_SUFFIX)
                 or key.endswith(THROUGHPUT_SUFFIX)
             ):

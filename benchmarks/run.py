@@ -14,6 +14,7 @@ BENCHES = [
     "bench_kernel",           # §4.3 BCS kernel skipping + packing speed
     "bench_e2e_sparse",       # whole-model prefill+decode via compile_model
     "bench_serving",          # continuous-batching engine: tok/s + occupancy
+    "bench_faults",           # chaos harness: degraded tok/s + recovery bound
     "bench_coldstart",        # AOT artifact store: cold pack vs warm load
     "bench_moe_sparse",       # batched sparse MoE expert GEMMs vs dense
     "bench_conv_sparse",      # conv via im2col PackedLayout (Fig 5 sweep)

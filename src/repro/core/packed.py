@@ -620,3 +620,37 @@ class TapLayout:
                         dense[alive[int(tidx[g, l])], sl] += vals[g, l]
                 col += vals.shape[0]
         return dense
+
+
+# Degraded-mode sentinel: installed in place of a layout that failed
+# ``core.validate`` so the model dispatch provably CANNOT launch a sparse
+# kernel on it (an accidental ``packed is not None`` consumer would crash
+# on the missing leaves, not mis-execute).  No array leaves — the whole
+# record is static aux, so it hashes into the jit cache key and a
+# degrade/un-degrade flip retraces instead of reusing a stale executable.
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DegradedLayer:
+    """Marker left behind by ``serve.compile.degrade_invalid_layers`` where
+    a packed layout failed validation: the layer executes masked-dense
+    (the zeros are baked into its retained dense ``w``) instead of the
+    sparse kernel — a slower but never-wrong fallback.
+
+    ``path`` is the layer that degraded, ``code`` the ``LayoutError``
+    failure class, ``detail`` the human-readable reason (all strings, all
+    static).
+    """
+
+    path: str
+    code: str
+    detail: str
+
+    def tree_flatten(self):
+        """No array children — the marker is pure static aux (jax protocol)."""
+        return (), (self.path, self.code, self.detail)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Rebuild the marker from ``tree_flatten`` output (jax protocol)."""
+        del children
+        return cls(*aux)

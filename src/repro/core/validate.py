@@ -29,15 +29,20 @@ Taxonomy (one subclass per failure class, ``code`` is the stable tag):
                               values without ``scales`` (or scales on
                               float values), bin-count/shape/dtype
                               mismatches, negative or non-finite scales
+  ``LayoutNumericsError``     NaN/Inf in a float ``values`` bin — bit rot
+                              in the packed weights themselves, which
+                              every structural check above would pass
 
 ``validate_layout`` checks one layout; ``validate_tree`` walks an
-exec-param tree and checks every ``"packed"`` entry.
+exec-param tree and checks every ``"packed"`` entry
+(``core.packed.DegradedLayer`` sentinels are skipped: they carry no
+leaves and already record WHY their layout was retired).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.packed import PackedLayout, TapLayout
+from repro.core.packed import DegradedLayer, PackedLayout, TapLayout
 
 
 class LayoutError(ValueError):
@@ -105,6 +110,15 @@ class LayoutQuantError(LayoutError):
     dtype, or negative / non-finite scale entries."""
 
     code = "quant"
+
+
+class LayoutNumericsError(LayoutError):
+    """A float ``values`` bin carries NaN/Inf entries: structurally the
+    layout is fine, but one decode step through it poisons every output
+    column it touches — exactly the corruption the serving engine's
+    quarantine would otherwise only catch AFTER garbage logits."""
+
+    code = "non_finite"
 
 
 def _as_host(x):
@@ -228,6 +242,25 @@ def _check_scales(layout, allowed_shapes, path):
                 path=path)
 
 
+def _check_values_finite(layout, path):
+    """Every FLOAT ``values`` bin must be fully finite: padding slots are
+    zeros, live blocks are real weights, and neither has any business
+    holding NaN/Inf (integer bins are covered by the scale checks — int8
+    cannot encode a non-finite).  The one corruption class the structural
+    checks cannot see."""
+    for b, v in enumerate(layout.values):
+        va = _as_host(v)
+        if np.issubdtype(va.dtype, np.integer):
+            continue
+        if not np.issubdtype(va.dtype, np.floating):
+            va = va.astype(np.float32)   # bfloat16 etc: widen losslessly
+        if va.size and not np.all(np.isfinite(va)):
+            bad = int(np.size(va) - np.count_nonzero(np.isfinite(va)))
+            raise LayoutNumericsError(
+                f"{bad} non-finite value entr{'y' if bad == 1 else 'ies'}",
+                field="values", bin=b, path=path)
+
+
 def _check_sharded(layout, n_cols, n_cols_name, path):
     """Cross-shard invariants shared by both layouts when
     ``layout.n_shards`` = S > 0: S must tile the column axis; ``nnz`` must
@@ -331,6 +364,7 @@ def _validate_packed(layout: PackedLayout, path):
         lambda b: (np.shape(layout.values[b])[:-2],
                    np.shape(layout.values[b])[:-3]),
         path)
+    _check_values_finite(layout, path)
 
 
 def _check_conv_taps(conv_taps, Kb, bk, path):
@@ -461,6 +495,7 @@ def _validate_tap(layout: TapLayout, path):
         lambda b: (np.shape(layout.values[b])[:-1],
                    (np.shape(layout.values[b])[0], 1, group)),
         path)
+    _check_values_finite(layout, path)
 
 
 def validate_layout(layout, *, path=None):
@@ -485,7 +520,9 @@ def validate_tree(exec_params) -> int:
     """Validate every ``"packed"`` entry of an exec-param tree.
 
     Returns the number of layouts checked; raises the first violation's
-    ``LayoutError`` (tagged with the layer path).
+    ``LayoutError`` (tagged with the layer path).  ``DegradedLayer``
+    sentinels are skipped: their layout was already validated, failed,
+    and was retired to the masked-dense path.
     """
     count = 0
 
@@ -494,7 +531,8 @@ def validate_tree(exec_params) -> int:
         if not isinstance(node, dict):
             return
         packed = node.get("packed")
-        if packed is not None and not isinstance(packed, dict):
+        if packed is not None and not isinstance(packed,
+                                                 (dict, DegradedLayer)):
             validate_layout(packed, path=f"{path}/packed" if path
                             else "packed")
             count += 1

@@ -90,15 +90,24 @@ def save(ckpt_dir, step: int, tree, host_id: int = 0, n_hosts: int = 1,
     return tmp
 
 
-def latest_step(ckpt_dir) -> int | None:
+def available_steps(ckpt_dir) -> list:
+    """All COMPLETE checkpoint steps (manifest published), newest first —
+    the fallback order ``distributed.elastic.replica_restore`` walks when
+    the newest step fails its integrity checks (a corrupt shard must cost
+    a logged fallback to an older step, not a dead replica).  Torn steps
+    (no manifest) are invisible here, exactly as for ``latest_step``."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     if not ckpt_dir.exists():
-        return None
-    steps = []
-    for d in ckpt_dir.iterdir():
-        if d.name.startswith("step_") and (d / "MANIFEST.json").exists():
-            steps.append(int(d.name.split("_")[1]))
-    return max(steps) if steps else None
+        return []
+    steps = [int(d.name.split("_")[1]) for d in ckpt_dir.iterdir()
+             if d.name.startswith("step_")
+             and (d / "MANIFEST.json").exists()]
+    return sorted(steps, reverse=True)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    steps = available_steps(ckpt_dir)
+    return steps[0] if steps else None
 
 
 def _verify_shard(d, shard_name):

@@ -54,18 +54,44 @@ def replica_restore(ckpt_dir, tree_like, *, mapping=(), masks=None,
     Returns ``(exec_params, report, step)`` — ``(None, None, None)`` when
     no checkpoint exists yet.  A missing/stale/corrupt artifact costs a
     repack (logged, structured reason); it can never mis-execute.
-    """
-    from repro.distributed import checkpoint as CKPT
-    from repro.serve.compile import compile_model
 
-    params, step = CKPT.restore(ckpt_dir, tree_like, step=step,
-                                shardings=shardings)
+    Double-fault tolerance: with ``step=None`` a checkpoint step that
+    fails its integrity checks (``CheckpointError``: bad checksum,
+    truncated shard, missing file) logs the structured reason and falls
+    back to the NEXT older complete step — combined with the artifact
+    fallback above, a replica survives a corrupt newest checkpoint AND a
+    corrupt artifact in the same start (locked by a double-fault test).
+    An explicitly pinned ``step`` never substitutes: its failure raises.
+    The grafted/compiled tree additionally passes through
+    ``serve.compile.degrade_invalid_layers`` so a layout corrupted after
+    the store's own checks serves masked-dense instead of wrong.
+    """
+    import logging
+
+    from repro.distributed import checkpoint as CKPT
+    from repro.serve.compile import compile_model, degrade_invalid_layers
+
+    log = logging.getLogger("repro.distributed.elastic")
+    steps = [step] if step is not None else CKPT.available_steps(ckpt_dir)
+    params = restored = None
+    for s in steps:
+        try:
+            params, restored = CKPT.restore(ckpt_dir, tree_like, step=s,
+                                            shardings=shardings)
+            break
+        except CKPT.CheckpointError as e:
+            if step is not None:
+                raise   # caller pinned this step: no silent substitution
+            log.warning("checkpoint step %d failed integrity [%s] — "
+                        "falling back to the next older step: %s",
+                        s, e.code, e)
     if params is None:
         return None, None, None
     exec_params, report = compile_model(params, masks, mapping, spec=spec,
                                         artifact_dir=artifact_dir,
                                         **compile_kw)
-    return exec_params, report, step
+    exec_params, report, _ = degrade_invalid_layers(exec_params, report)
+    return exec_params, report, restored
 
 
 def rebuild_mesh(model_parallel=16, want_pods=1):

@@ -67,9 +67,12 @@ def convnet_apply(params, x, arch=VGG_TINY, masks=None, implicit=None):
     ``implicit`` routes packed conv layers through the implicit-GEMM
     kernels (None = per-layer auto-selection by patch-tensor size, True /
     False force one mode — see ``kernels.ops.sparse_conv2d``)."""
+    from repro.core.packed import DegradedLayer
     m = masks or {}
     for (name, out, kh, kw, stride, dw) in arch:
         packed = params[name].get("packed")
+        if isinstance(packed, DegradedLayer):
+            packed = None                # validated-corrupt: masked-dense
         if packed is not None and not dw:
             from repro.kernels import ops  # late import: kernels -> core only
             from repro.core.packed import TapLayout

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.packed import DegradedLayer
 from repro.models import module as M
 
 
@@ -72,8 +73,15 @@ def linear(params, x, mask=None, act="none"):
     in at pack time).  Otherwise a dense einsum runs, with an optional
     pruning ``mask`` broadcastable to w (XLA fuses the multiply into the
     matmul operand).
+
+    A ``core.packed.DegradedLayer`` sentinel (left by
+    ``serve.compile.degrade_invalid_layers`` where a layout failed
+    validation) routes to the dense einsum: the retained ``w`` carries the
+    pruning zeros, so the fallback is masked-dense — slower, never wrong.
     """
     packed = params.get("packed")
+    if isinstance(packed, DegradedLayer):
+        packed = None                    # validated-corrupt: masked-dense
     if packed is not None:
         from repro.kernels import ops  # late import: kernels -> core only
         return ops.sparse_linear(x, packed=packed, bias=params.get("b"),

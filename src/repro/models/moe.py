@@ -74,8 +74,13 @@ def _expert_linear(p, x, mask=None, act="none"):
     otherwise the dense masked einsum.  ``act`` fuses into the packed
     kernel's epilogue; on the dense path it applies after the einsum —
     same math (under bf16 the fused path rounds once instead of twice,
-    ~1 ulp, exactly as documented for ``layers.ffn``)."""
+    ~1 ulp, exactly as documented for ``layers.ffn``).  A
+    ``core.packed.DegradedLayer`` sentinel (layout failed validation)
+    routes to the dense masked einsum — see ``layers.linear``."""
+    from repro.core.packed import DegradedLayer
     packed = p.get("packed")
+    if isinstance(packed, DegradedLayer):
+        packed = None                    # validated-corrupt: masked-dense
     if packed is not None:
         from repro.kernels import ops  # late import: kernels -> core only
         G, E, C, din = x.shape

@@ -190,7 +190,9 @@ class LayerReport:
     (pre-reorder padded degree ``L`` -> post-reorder ``L_reordered`` of
     ``Kb`` column blocks), the executed fraction (``1 - flops_saved``),
     the mapped ``scheme`` and the served ``value_dtype`` (None = float).
-    Skipped rows carry the ``reason``.  A dict-style item protocol
+    Skipped rows carry the ``reason``; rows whose layout later failed
+    validation and was retired by ``degrade_invalid_layers`` carry
+    ``degraded=True`` plus the failure reason.  A dict-style item protocol
     (``row["path"]``, ``row.get(...)``, ``"kind" in row`` — None fields
     read as absent) keeps the historical dict-row consumers working.
     """
@@ -211,6 +213,7 @@ class LayerReport:
     value_dtype: str | None = None
     patch_b_per_pos: int | None = None
     shards: int | None = None
+    degraded: bool | None = None
 
     @property
     def executed_frac(self) -> float | None:
@@ -656,7 +659,82 @@ def compiled_summary(report) -> str:
                 line += f" tp={r['shards']}"
             if "patch_b_per_pos" in r:
                 line += f" implicit_avoids={r['patch_b_per_pos']}B/pos"
+            if r.get("degraded"):
+                line += " [DEGRADED -> masked-dense]"
             lines.append(line)
         else:
             lines.append(f"  skip {r['path']:<28s} ({r['reason']})")
     return "\n".join(lines)
+
+
+def degrade_invalid_layers(exec_params, report=None):
+    """Runtime/graft guard: validate every packed layout of an exec-param
+    tree and retire any failure to the masked-dense ``DegradedLayer``
+    path — that layer alone executes as a dense einsum over its retained
+    ``w`` (pruning zeros baked in), every other layer keeps its sparse
+    kernel.  Never silent: each degradation logs a structured warning
+    and, when a ``CompileReport`` is passed, its matching row is
+    re-emitted with ``degraded=True`` and the failure reason.
+
+    Layouts are valid by construction out of ``compile_model`` and fully
+    re-validated on artifact graft, so this guard exists for corruption
+    that happens AFTER those checks: bit rot in process memory, a buggy
+    external layout producer, a chaos-harness injection
+    (``repro.testing.faults``).  ``serve.engine.ServingEngine`` runs it at
+    construction and counts the result in ``stats["degraded_layers"]``.
+
+    A corrupt layout whose node lost its dense ``w`` (packed with
+    ``keep_dense=False``) CANNOT be degraded — the original
+    ``LayoutError`` is re-raised, because a repack is the only safe
+    answer and a silent wrong result never is.
+
+    Returns ``(exec_params, report, degraded)``: the (skeleton-copied,
+    leaf-shared) tree, the updated report (``None``/unknown types pass
+    through unchanged), and ``degraded`` as ``[(layer_path,
+    LayoutError), ...]``.
+    """
+    import logging
+
+    from repro.core import validate as V
+    from repro.core.packed import DegradedLayer
+
+    log = logging.getLogger("repro.serve.compile")
+    degraded = []
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            sub = f"{path}/{k}" if path else k
+            if k != "packed":
+                out[k] = walk(v, sub)
+                continue
+            if v is None or isinstance(v, (dict, DegradedLayer)):
+                out[k] = v
+                continue
+            try:
+                out[k] = V.validate_layout(v, path=sub)
+            except V.LayoutError as e:
+                if "w" not in node:
+                    raise     # no dense fallback weight: repack or die
+                out[k] = DegradedLayer(path=path or "packed", code=e.code,
+                                       detail=e.detail)
+                degraded.append((path, e))
+                log.warning(
+                    "layer %s: packed layout failed validation — "
+                    "degrading to masked-dense execution: %s", path, e)
+        return out
+
+    tree = walk(exec_params, "")
+    if isinstance(report, CompileReport) and degraded:
+        bad = {(f"{p}/w" if p else "w"): e for p, e in degraded}
+        rows = tuple(
+            dataclasses.replace(
+                r, degraded=True,
+                reason=f"[{bad[r.path].code}] degraded to masked-dense: "
+                       f"{bad[r.path].detail}")
+            if r.path in bad else r
+            for r in report)
+        report = dataclasses.replace(report, rows=rows)
+    return tree, report, degraded

@@ -19,7 +19,8 @@ from repro.models import attention as A
 from repro.models import ssm as S
 from repro.models import transformer as T
 from repro.serve import kvcache as KV
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import (REASON_DEADLINE_EXPIRED, REASON_OVER_BUDGET,
+                                   REASON_QUARANTINED, Request, Scheduler)
 
 tmap = jax.tree_util.tree_map
 
@@ -192,15 +193,23 @@ def generate(params, cfg: ArchConfig, tokens, n_new, frontend=None,
 
 def _jit_serving_step(cfg, dist):
     """The engine's batched decode executable: ragged decode step + greedy
-    argmax fused into one program.  Cached per (cfg, dist); the slot-array
-    shapes are fixed for an engine's lifetime, so admission/eviction never
-    retraces (locked by a trace-count regression test)."""
+    argmax + per-slot finite check fused into one program.  Cached per
+    (cfg, dist); the slot-array shapes are fixed for an engine's lifetime,
+    so admission/eviction never retraces (locked by a trace-count
+    regression test).
+
+    The finite flag (``ok``, one bool per slot) is the numerical
+    quarantine probe: it reduces THIS slot's logits only, inside the same
+    launch — no extra dispatch, no retrace — so the harvest loop can evict
+    a poisoned slot before its garbage argmax ever becomes a token."""
     def make():
         def step(p, tok, cache, pos, cap):
             logits, cache = T.decode_step_ragged(p, cfg, tok, cache, pos,
                                                  cap, dist=dist)
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            return nxt, cache
+            ok = jnp.all(jnp.isfinite(logits[:, -1, :].astype(jnp.float32)),
+                         axis=-1)
+            return nxt, ok, cache
         return step
     return _cached_jit(("serving_step", cfg, id(dist)), make)
 
@@ -219,15 +228,28 @@ class ServingEngine:
     token-for-token identical to N independent ``generate`` calls (the
     oracle test in tests/test_serving.py).
 
+    Fault tolerance: ``validate=True`` (default) runs
+    ``serve.compile.degrade_invalid_layers`` over the exec params at
+    construction — any packed layout failing ``core.validate`` is retired
+    to the masked-dense ``DegradedLayer`` path (slower, never wrong) and
+    counted in ``stats["degraded_layers"]``.  Every step, queue TTLs and
+    running deadlines are swept BEFORE admission, and the batched decode's
+    fused per-slot finite probe quarantines any slot whose logits went
+    non-finite — the slot is evicted (status ``"quarantined"``) without
+    emitting the garbage token, and the surviving slots' tokens are
+    bit-identical to a run where the poisoned request was never admitted
+    (slots share weights, never activations — locked by the chaos suite).
+
     Counters in ``stats``: engine steps, admitted/finished/evicted/
-    rejected requests, emitted tokens, and the running occupancy sum
+    rejected requests, quarantined slots, expired deadlines, degraded
+    layers, emitted tokens, and the running occupancy sum
     (``mean_occupancy()`` = mean fraction of busy slots per step).
     """
 
     FAMILIES = ("dense", "moe", "ssm", "hybrid")
 
     def __init__(self, params, cfg: ArchConfig, *, n_slots=8, seq_cap=256,
-                 dist=None):
+                 dist=None, max_queue=None, validate=True, report=None):
         if cfg.family not in self.FAMILIES:
             raise NotImplementedError(
                 f"family {cfg.family!r} is not served (supported: "
@@ -235,12 +257,18 @@ class ServingEngine:
         if cfg.sliding_window:
             # a slot never needs more ring than the attention window
             seq_cap = min(seq_cap, cfg.sliding_window)
+        self.report = report
+        degraded = []
+        if validate:
+            from repro.serve import compile as SC  # late: compile is heavy
+            params, self.report, degraded = SC.degrade_invalid_layers(
+                params, report=report)
         self.params, self.cfg, self.dist = params, cfg, dist
         self.n_slots, self.seq_cap = n_slots, seq_cap
         dtype = params["embed"]["table"].dtype
         self.cache = KV.init_slots(params, cfg, n_slots, seq_cap,
                                    dtype=dtype)
-        self.sched = Scheduler(n_slots)
+        self.sched = Scheduler(n_slots, max_queue=max_queue)
         # per-slot decode operands; free slots idle as pos=0/cap=1 padding
         self.tok = np.zeros((n_slots, 1), np.int32)
         self.pos = np.zeros((n_slots, 1), np.int32)
@@ -250,28 +278,38 @@ class ServingEngine:
         self.requests: dict = {}
         self.stats = {"steps": 0, "occupancy_sum": 0.0, "tokens": 0,
                       "admitted": 0, "finished": 0, "evicted": 0,
-                      "rejected": 0}
+                      "rejected": 0, "quarantined": 0, "expired": 0,
+                      "degraded_layers": len(degraded)}
 
     # -- request intake -----------------------------------------------------
 
     def submit(self, prompt, max_new_tokens, *, arrival=0,
-               stop_token=None) -> int:
+               stop_token=None, deadline_steps=None, queue_ttl=None,
+               retries=0, backoff=1) -> int:
         """Queue one request; returns its id (``requests[rid].tokens`` holds
         the output).  Prompts whose effective (window-clipped) length
         exceeds the slot capacity are rejected up front — the one budget a
-        slot cannot ring-buffer away."""
+        slot cannot ring-buffer away.
+
+        ``deadline_steps`` / ``queue_ttl`` bound slot occupancy and queue
+        wait (see ``serve.scheduler.Request``); ``retries`` / ``backoff``
+        bound the resubmission policy when the scheduler's ``max_queue``
+        is full.
+        """
         req = Request(self._rid, tuple(int(t) for t in prompt),
                       int(max_new_tokens), arrival=arrival,
-                      stop_token=stop_token)
+                      stop_token=stop_token, deadline_steps=deadline_steps,
+                      queue_ttl=queue_ttl, retries=retries, backoff=backoff)
         self._rid += 1
         self.requests[req.rid] = req
         if (not req.prompt or req.max_new_tokens < 1
                 or KV.slot_capacity(self.cfg, len(req.prompt))
                 > self.seq_cap):
-            self.sched.reject(req, "over_budget")
+            self.sched.reject(req, REASON_OVER_BUDGET)
             self.stats["rejected"] += 1
         else:
-            self.sched.submit(req)
+            if self.sched.submit(req, self.stats["steps"]) == "rejected":
+                self.stats["rejected"] += 1
         return req.rid
 
     # -- engine loop --------------------------------------------------------
@@ -294,31 +332,57 @@ class ServingEngine:
             self.pos[slot] = len(req.prompt)
             self.tok[slot] = t0
 
-    def _release(self, slot, req, status):
-        self.sched.release(req, status)
+    def _release(self, slot, req, status, reason=None):
+        self.sched.release(req, status, reason)
         self.cache = KV.clear_slot(self.cache, slot)
         self.tok[slot], self.pos[slot], self.cap[slot] = 0, 0, 1
         if status == "finished":
             self.stats["finished"] += 1
+        elif status == "quarantined":
+            self.stats["quarantined"] += 1
         else:
             self.stats["evicted"] += 1
 
+    def _sweep_faults(self):
+        """Top-of-step fault pass, all BEFORE admission so freed slots
+        refill the same step (bounded recovery): expire overdue queue
+        TTLs, re-submit due retry backoffs, evict running requests past
+        their ``deadline_steps`` budget."""
+        now = self.stats["steps"]
+        self.stats["expired"] += len(self.sched.expire(now))
+        self.stats["rejected"] += len(self.sched.poll_retries(now))
+        for slot, req in self.sched.active():
+            if (req.deadline_steps is not None
+                    and req.admitted_at is not None
+                    and now - req.admitted_at >= req.deadline_steps):
+                self._release(slot, req, "evicted",
+                              reason=REASON_DEADLINE_EXPIRED)
+                self.stats["expired"] += 1
+
     def step(self) -> int:
-        """One engine step: admit from the queue into free slots, decode
-        every active slot in one batched launch, harvest tokens, evict
-        finished requests.  Returns the number of active slots stepped
-        (0 = an idle tick while the open-loop queue waits to arrive)."""
+        """One engine step: sweep deadlines/TTLs/retries, admit from the
+        queue into free slots, decode every active slot in one batched
+        launch, harvest tokens, evict finished requests, and quarantine
+        any slot whose logits came back non-finite (its garbage argmax is
+        never appended; neighbors are untouched).  Returns the number of
+        active slots stepped (0 = an idle tick while the open-loop queue
+        waits to arrive)."""
+        self._sweep_faults()
         self._admit()
         active = self.sched.active()
         self.stats["steps"] += 1
         self.stats["occupancy_sum"] += len(active) / self.n_slots
         if not active:
             return 0
-        nxt, self.cache = self._step_fn(
+        nxt, ok, self.cache = self._step_fn(
             self.params, jnp.asarray(self.tok), self.cache,
             jnp.asarray(self.pos), jnp.asarray(self.cap))
-        nxt = np.asarray(nxt)
+        nxt, ok = np.asarray(nxt), np.asarray(ok)
         for slot, req in active:
+            if not bool(ok[slot]):
+                self._release(slot, req, "quarantined",
+                              reason=REASON_QUARANTINED)
+                continue
             t = int(nxt[slot])
             req.tokens.append(t)
             self.stats["tokens"] += 1

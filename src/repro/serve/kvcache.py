@@ -145,3 +145,21 @@ def clear_slot(cache, slot: int):
     if "kv" in cache:
         out["kv"] = _invalidate_kv(cache["kv"], slot)
     return out
+
+
+def poison_slot(cache, slot: int, value=float("nan")):
+    """Chaos-harness injector (``repro.testing.faults.nan_slot``): overwrite
+    every FLOAT leaf of slot ``slot``'s cache row with ``value`` so the
+    next batched decode produces non-finite logits for THAT slot only.
+
+    Slots share weights, never activations — attention reads each slot's
+    own KV row, SSM state is a per-slot row, and every row-wise op keeps
+    batch rows independent — so the poison cannot leak into neighbors:
+    the quarantine bit-identity test relies on exactly this.  Integer
+    leaves (the validity positions) are left alone; both are restored by
+    the full row overwrite at the slot's next admission."""
+    def bad(a):
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            return a
+        return a.at[:, slot].set(value)
+    return tmap(bad, cache)

@@ -1,0 +1,3 @@
+"""Deterministic test infrastructure: the seeded chaos harness
+(``repro.testing.faults``) that drives the fault-matrix suite and
+``benchmarks.bench_faults``."""

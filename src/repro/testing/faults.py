@@ -1,0 +1,199 @@
+"""Deterministic chaos harness: seeded fault injectors for the serving
+stack.
+
+Every injector is a pure function of its arguments plus an explicit
+integer ``seed`` (``numpy.random.RandomState`` — never wall clock, never
+global RNG state), so a fault scenario REPLAYS exactly: the fault-matrix
+suite (tests/test_faults.py) and the gated ``benchmarks/bench_faults.py``
+run the same injections and must see the same recoveries, token streams,
+and audit events every time.
+
+The four injectors cover the fault taxonomy of docs/architecture.md
+("Fault tolerance"):
+
+  ``bitflip_packed_leaf``  corrupt a packed layout in process memory
+                           (saturate a float value's exponent bits to
+                           non-finite, or knock an index leaf out of
+                           range) -> caught by ``core.validate``, layer
+                           degrades to masked-dense
+  ``nan_slot``             poison one engine slot's cache row with NaN ->
+                           caught by the fused finite probe, slot
+                           quarantined, neighbors bit-identical
+  ``expire_deadline``      zero a request's deadline/TTL budget -> evicted
+                           by the scheduler sweep with a typed event
+  ``crash_publish``        simulate an artifact writer dying mid-publish
+                           (stale staging husk, or a torn final dir with
+                           no manifest) -> store ignores/falls back to a
+                           fresh pack
+
+Each returns a ``FaultRecord`` describing exactly what was injected, so
+assertions can name the fault they recovered from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+
+import numpy as np
+
+from repro.core.packed import PackedLayout, TapLayout
+from repro.serve import kvcache as KV
+
+# the fault-matrix axis: one name per injector, shared by the suite and
+# the chaos bench so "matrix green" means the same thing in both
+FAULT_KINDS = ("corrupt_leaf", "nan_slot", "expired_deadline",
+               "crashed_publish")
+
+# exponent-saturation masks per float itemsize: OR-ing one in turns any
+# float into Inf/NaN — a genuine bit-level corruption that the finite
+# checks are guaranteed to see (a mid-mantissa flip could stay finite and
+# no validator can know the value is wrong)
+_EXP_MASK = {8: (np.uint64, np.uint64(0x7FF0000000000000)),
+             4: (np.uint32, np.uint32(0x7F800000)),
+             2: (np.uint16, np.uint16(0x7F80))}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRecord:
+    """What a chaos injector actually did: the fault ``kind`` (one of
+    ``FAULT_KINDS``), the ``target`` it hit (layer path, slot, request id,
+    or artifact key), and a human-readable ``detail``."""
+
+    kind: str
+    target: str
+    detail: str
+
+
+def _packed_layers(tree):
+    """Walk an exec-param tree and list ``(path, node)`` for every node
+    carrying a real packed layout, in deterministic traversal order."""
+    found = []
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return
+        packed = node.get("packed")
+        if isinstance(packed, (PackedLayout, TapLayout)):
+            found.append((path, node))
+        for k, v in node.items():
+            if k != "packed":
+                walk(v, f"{path}/{k}" if path else k)
+
+    walk(tree, "")
+    return found
+
+
+def _skeleton_swap(tree, target_node, new_node):
+    """Copy the dict skeleton of ``tree`` (array leaves shared) with ONE
+    node object replaced — the injected tree never aliases the input's
+    dicts, so the healthy tree stays healthy for oracle runs."""
+    def walk(node):
+        if node is target_node:
+            return new_node
+        if not isinstance(node, dict):
+            return node
+        return {k: walk(v) for k, v in node.items()}
+
+    return walk(tree)
+
+
+def bitflip_packed_leaf(exec_params, *, seed=0):
+    """Corrupt one packed layout of ``exec_params`` in memory, seeded.
+
+    Float ``values``: saturate the exponent bits of one (seeded) element
+    to non-finite — detected by ``core.validate``'s ``non_finite`` check.
+    Quantized (int) ``values``: knock one index-leaf entry out of range
+    instead — detected by the ``index_range`` check.  Either way the
+    corrupt layout CANNOT reach a kernel: ``degrade_invalid_layers``
+    retires it to masked-dense.
+
+    Returns ``(injected_tree, FaultRecord)``; the input tree is untouched
+    (skeleton-copied) so it remains the healthy oracle.
+    """
+    layers = _packed_layers(exec_params)
+    if not layers:
+        raise ValueError("no packed layouts to corrupt")
+    rng = np.random.RandomState(seed)
+    path, node = layers[int(rng.randint(len(layers)))]
+    layout = node["packed"]
+    bins = [b for b, v in enumerate(layout.values) if np.asarray(v).size]
+    b = bins[int(rng.randint(len(bins)))]
+    v = np.asarray(layout.values[b])
+    if np.issubdtype(v.dtype, np.integer):
+        # int8 values: corrupt the index leaf instead (index_range)
+        idx_name = "k_idx" if isinstance(layout, PackedLayout) else "t_idx"
+        idx = np.array(getattr(layout, idx_name)[b])
+        i = int(rng.randint(idx.size))
+        idx.reshape(-1)[i] = np.iinfo(np.int32).max // 2
+        leaves = list(getattr(layout, idx_name))
+        leaves[b] = idx
+        new_layout = dataclasses.replace(layout, **{idx_name: tuple(leaves)})
+        detail = f"{idx_name}[bin {b}] flat[{i}] -> out of range"
+    else:
+        v = v.copy()
+        flat = v.reshape(-1)
+        i = int(rng.randint(flat.size))
+        utype, mask = _EXP_MASK[v.dtype.itemsize]
+        view = flat.view(utype)
+        view[i] |= mask
+        leaves = list(layout.values)
+        leaves[b] = v
+        new_layout = dataclasses.replace(layout, values=tuple(leaves))
+        detail = f"values[bin {b}] flat[{i}] -> exponent saturated"
+    new_node = dict(node, packed=new_layout)
+    return (_skeleton_swap(exec_params, node, new_node),
+            FaultRecord("corrupt_leaf", path, detail))
+
+
+def nan_slot(engine, slot, *, value=float("nan")):
+    """Poison slot ``slot`` of a running ``ServingEngine``'s cache with
+    ``value`` (NaN) — the next batched decode yields non-finite logits for
+    that slot only, the fused finite probe quarantines it, and every other
+    slot's tokens stay bit-identical (slots share weights, never
+    activations).  Returns a ``FaultRecord``."""
+    engine.cache = KV.poison_slot(engine.cache, slot, value=value)
+    return FaultRecord("nan_slot", f"slot {slot}",
+                       f"cache row overwritten with {value}")
+
+
+def expire_deadline(engine, rid):
+    """Zero request ``rid``'s deadline budgets: a running request is
+    evicted (reason ``deadline_expired``) at the next sweep, a queued one
+    expires from the queue — either way with a typed audit event, never a
+    hang.  Returns a ``FaultRecord``."""
+    req = engine.requests[rid]
+    req.deadline_steps = 0
+    req.queue_ttl = -1
+    return FaultRecord("expired_deadline", f"rid {rid}",
+                       f"deadline budgets zeroed while {req.status}")
+
+
+def crash_publish(artifact_dir, key, *, stage="staging", seed=0):
+    """Simulate an artifact writer crashing mid-publish under ``key``.
+
+    ``stage="staging"``: leave a stale ``.tmp_*`` staging husk with a
+    half-written array file — exactly what a killed writer leaves behind;
+    the store must ignore it (publishes are tmp + atomic rename).
+    ``stage="torn"``: a final directory WITHOUT its manifest (external
+    corruption after publish) — ``load_grafted`` must return ``None`` so
+    the caller repacks.  Seeded garbage bytes; returns a ``FaultRecord``.
+    """
+    d = pathlib.Path(artifact_dir)
+    rng = np.random.RandomState(seed)
+    junk = rng.bytes(64)
+    if stage == "staging":
+        husk = d / f".tmp_{key}_31337"
+        husk.mkdir(parents=True, exist_ok=True)
+        (husk / "arrays.npz").write_bytes(junk)
+        detail = f"stale staging husk {husk.name}"
+    elif stage == "torn":
+        torn = d / key
+        torn.mkdir(parents=True, exist_ok=True)
+        (torn / "arrays.npz").write_bytes(junk)
+        manifest = torn / "MANIFEST.json"
+        if manifest.exists():
+            manifest.unlink()
+        detail = "final dir without MANIFEST.json"
+    else:
+        raise ValueError(f"unknown stage {stage!r}")
+    return FaultRecord("crashed_publish", str(key), detail)

@@ -195,3 +195,30 @@ def test_tp_speedup_is_a_wall_metric(gate):
     write(fresh / "BENCH_x.json",
           payload([("tp_model,fc", "tp_speedup=1.50x")]))
     assert run() == 1          # scaling collapse still trips the gate
+
+
+def test_degraded_throughput_ratio_is_a_wall_metric(gate):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json",
+          payload([("faults,degraded", "degraded_throughput_ratio=1.10")]))
+    # plain-float ratio (no 'x' suffix) still parses and gates
+    write(fresh / "BENCH_x.json",
+          payload([("faults,degraded", "degraded_throughput_ratio=0.90")]))
+    assert run() == 0          # 18% wall swing tolerated at 50%
+    write(fresh / "BENCH_x.json",
+          payload([("faults,degraded", "degraded_throughput_ratio=0.40")]))
+    assert run() == 1          # degraded mode collapsing trips the gate
+
+
+def test_recovery_steps_gates_lower_is_better_strictly(gate, capsys):
+    base, fresh, run = gate
+    write(base / "BENCH_x.json",
+          payload([("faults,recovery", "recovery_steps=1")]))
+    # deterministic scheduler replay: ANY growth beyond 10% fails
+    write(fresh / "BENCH_x.json",
+          payload([("faults,recovery", "recovery_steps=2")]))
+    assert run() == 1
+    assert "lower-is-better" in capsys.readouterr().err
+    write(fresh / "BENCH_x.json",
+          payload([("faults,recovery", "recovery_steps=1")]))
+    assert run() == 0

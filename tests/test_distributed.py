@@ -185,6 +185,62 @@ class TestElastic:
         assert replica_restore(tmp_path / "none", {"a": jnp.zeros(1)}) == \
             (None, None, None)
 
+    def test_replica_restore_survives_double_fault(self, tmp_path):
+        """Corrupt NEWEST checkpoint AND corrupt artifact in the same
+        start: the replica falls back to the next older complete step,
+        repacks fresh, and serves a tree bit-identical to a cold compile
+        of the surviving step.  A pinned corrupt step still raises."""
+        from repro.core import reweighted as RW
+        from repro.kernels import ops
+        from repro.serve.compile import compile_model
+        from repro.testing import faults as F
+        from repro.train.trainer import apply_masks
+
+        spec = [(r"ffn/(gate|up)/w", RW.SchemeChoice("block", (16, 16)))]
+        params = {"blk": {"ffn": {
+            "gate": {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                            (64, 96), jnp.float32)},
+            "up": {"w": jax.random.normal(jax.random.PRNGKey(1),
+                                          (64, 96), jnp.float32)}}}}
+        masks = RW.random_block_masks(params, spec, (16, 16),
+                                      keep_prob=0.4)
+        pm = apply_masks(params, masks)
+        ckpt, store = tmp_path / "ckpt", tmp_path / "art"
+        CKPT.save(ckpt, 10, pm)
+        CKPT.save(ckpt, 12, pm)
+        # healthy start publishes the artifact
+        _, _, step0 = replica_restore(ckpt, pm, mapping=spec,
+                                      artifact_dir=store)
+        assert step0 == 12
+        # fault 1: bit-flip the newest checkpoint's shard (checksum fail)
+        shard = ckpt / "step_00000012" / "shard_0.npz"
+        raw = bytearray(shard.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        shard.write_bytes(bytes(raw))
+        # fault 2: tear the published artifact (writer crash, no manifest)
+        keys = [d.name for d in store.iterdir()
+                if not d.name.startswith(".")]
+        assert len(keys) == 1
+        F.crash_publish(store, keys[0], stage="torn")
+
+        ops.clear_pack_cache()
+        misses = ops.pack_cache_stats()["misses"]
+        exec2, rep2, step2 = replica_restore(ckpt, pm, mapping=spec,
+                                             artifact_dir=store)
+        assert step2 == 10                      # older step substituted
+        assert ops.pack_cache_stats()["misses"] > misses  # fresh repack
+        assert any(r["packed"] for r in rep2)
+        restored, _ = CKPT.restore(ckpt, pm, step=10)
+        cold, _ = compile_model(restored, None, spec)
+        l2, lc = (jax.tree_util.tree_leaves(t) for t in (exec2, cold))
+        assert len(l2) == len(lc)
+        for x, y in zip(l2, lc):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        # an explicitly pinned corrupt step raises — never substitutes
+        with pytest.raises(CKPT.CheckpointError):
+            replica_restore(ckpt, pm, mapping=spec, step=12,
+                            artifact_dir=store)
+
 
 class TestGradCompression:
     def test_quantize_roundtrip_error(self):
